@@ -1,0 +1,39 @@
+"""Paper Figs. 7-8: TPC-C throughput scaling with node count, at 20% and 50%
+distributed transactions, for all six schedulers."""
+import numpy as np
+
+from repro.core.workloads import tpcc_waves
+
+from .simcost import DEFAULT_WAVES, KEYS_PER_NODE, print_table, simulate, wave_size
+
+SCHEDS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
+
+
+def run(fast: bool = True, dist_frac: float = 0.2):
+    nodes = (4, 8, 16, 29) if fast else (2, 4, 8, 16, 24, 29)
+    rows = []
+    for n in nodes:
+        rng = np.random.RandomState(42)
+        waves = tpcc_waves(rng, DEFAULT_WAVES, wave_size(n), n, KEYS_PER_NODE,
+                           dist_frac=dist_frac)
+        for sched in SCHEDS:
+            hs = None
+            if sched == "clocksi":
+                hs = np.round(np.linspace(0, 2, n)).astype(np.int32)  # Clock20
+            r = simulate(waves, sched, n, host_skew=hs)
+            r["dist_pct"] = int(dist_frac * 100)
+            rows.append(r)
+    return rows
+
+
+def main():
+    for dist in (0.2, 0.5):
+        rows = run(dist_frac=dist)
+        print_table(rows, ["sched", "n_nodes", "throughput_tps", "abort_pct",
+                           "msgs_per_txn"],
+                    f"Fig {'7' if dist == 0.2 else '8'}: TPC-C scaling "
+                    f"({int(dist*100)}% distributed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 11: communication cost (messages/txn, split cross vs
+coordinator) and abort rate (TPC-C, 8 nodes, 20% distributed)."""
+import numpy as np
+
+from repro.core.workloads import tpcc_waves
+
+from .simcost import DEFAULT_WAVES, KEYS_PER_NODE, print_table, simulate, wave_size
+
+SCHEDS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
+
+
+def run(fast: bool = True):
+    n = 8
+    rng = np.random.RandomState(3)
+    waves = tpcc_waves(rng, DEFAULT_WAVES, wave_size(n), n, KEYS_PER_NODE,
+                       dist_frac=0.2)
+    rows = []
+    for sched in SCHEDS:
+        hs = np.round(np.linspace(0, 2, n)).astype(np.int32) \
+            if sched == "clocksi" else None
+        r = simulate(waves, sched, n, host_skew=hs)
+        n_txn = wave_size(n) * DEFAULT_WAVES
+        r["cross_per_txn"] = r["msgs_cross"] / n_txn
+        r["coord_per_txn"] = r["msgs_coord"] / n_txn
+        rows.append(r)
+    return rows
+
+
+def main():
+    rows = run()
+    print_table(rows, ["sched", "cross_per_txn", "coord_per_txn", "abort_pct"],
+                "Fig 11: communication cost + abort rate "
+                "(TPC-C, 8 nodes, 20% dist)")
+
+
+if __name__ == "__main__":
+    main()

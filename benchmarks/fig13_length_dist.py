@@ -1,0 +1,52 @@
+"""Paper Fig. 13: (a) throughput vs transaction length (extra read ops);
+(b) throughput vs fraction of distributed transactions.  20 nodes."""
+import numpy as np
+
+from repro.core.workloads import micro_waves
+
+from .simcost import DEFAULT_WAVES, KEYS_PER_NODE, print_table, simulate, wave_size
+
+SCHEDS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
+
+
+def run_length(fast: bool = True):
+    n = 20
+    rows = []
+    for n_ops in (2, 4, 8, 16):
+        rng = np.random.RandomState(5)
+        waves = micro_waves(rng, DEFAULT_WAVES, wave_size(n), n, KEYS_PER_NODE,
+                            n_ops=n_ops, read_ratio=0.8, dist_frac=0.3)
+        for sched in SCHEDS:
+            hs = np.round(np.linspace(0, 2, n)).astype(np.int32) \
+                if sched == "clocksi" else None
+            r = simulate(waves, sched, n, host_skew=hs)
+            r["n_ops"] = n_ops
+            rows.append(r)
+    return rows
+
+
+def run_dist(fast: bool = True):
+    n = 20
+    rows = []
+    for dist in (0.05, 0.2, 0.4, 0.6, 0.8):
+        rng = np.random.RandomState(6)
+        waves = micro_waves(rng, DEFAULT_WAVES, wave_size(n), n, KEYS_PER_NODE,
+                            n_ops=4, read_ratio=0.8, dist_frac=dist)
+        for sched in SCHEDS:
+            hs = np.round(np.linspace(0, 2, n)).astype(np.int32) \
+                if sched == "clocksi" else None
+            r = simulate(waves, sched, n, host_skew=hs)
+            r["dist_pct"] = int(dist * 100)
+            rows.append(r)
+    return rows
+
+
+def main():
+    print_table(run_length(), ["sched", "n_ops", "throughput_tps", "abort_pct"],
+                "Fig 13a: varying transaction length (20 nodes, 30% dist)")
+    print_table(run_dist(), ["sched", "dist_pct", "throughput_tps", "abort_pct"],
+                "Fig 13b: varying distributed fraction (20 nodes)")
+
+
+if __name__ == "__main__":
+    main()

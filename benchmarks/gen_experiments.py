@@ -1,0 +1,120 @@
+"""Regenerate the data tables of EXPERIMENTS.md from the dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.gen_experiments \
+          [--baseline experiments/dryrun] [--final experiments/dryrun_final]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_dir(d):
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def fmt_row(r):
+    if "skipped" in r:
+        return None
+    if "error" in r:
+        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | |"
+    rl = r["roofline"]
+    uf = rl["useful_flops_frac"]
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['compute_s']:.4f} "
+            f"| {rl['memory_s']:.4f} | {rl['collective_s']:.4f} | {rl['dominant']} "
+            f"| {uf:.2f} |" if uf is not None else "")
+
+
+def roofline_table(rows, mesh):
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | MODEL/HLO flops |",
+           "|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if "skipped" in r:
+            skips.append((a, s))
+            continue
+        line = fmt_row(r)
+        if line:
+            out.append(line)
+    if skips:
+        out.append("")
+        out.append(f"Skipped (long_500k, full-attention archs per assignment): "
+                   + ", ".join(a for a, _ in skips))
+    return "\n".join(out)
+
+
+def dryrun_summary(rows):
+    live = [r for r in rows.values() if "roofline" in r]
+    err = [r for r in rows.values() if "error" in r]
+    skip = [r for r in rows.values() if "skipped" in r]
+    mem = [r for r in live if "memory" in r and r["memory"].get("temp_size_in_bytes")]
+    out = [f"- cells compiled OK: **{len(live)}** (errors: {len(err)}, "
+           f"assignment skips: {len(skip)})"]
+    doms = {}
+    for r in live:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    out.append(f"- dominant-term distribution: {doms}")
+    if mem:
+        worst = max(mem, key=lambda r: r["memory"]["temp_size_in_bytes"])
+        out.append(f"- largest temp footprint: {worst['arch']}/{worst['shape']}"
+                   f"/{worst['mesh']}: "
+                   f"{worst['memory']['temp_size_in_bytes']/2**30:.1f} GiB/device")
+    return "\n".join(out)
+
+
+def compare_table(base, final, cells):
+    out = ["| cell | term | paper-faithful baseline | optimized | gain |",
+           "|---|---|---|---|---|"]
+    for (a, s, m) in cells:
+        b = base.get((a, s, m))
+        f = final.get((a, s, m))
+        if not b or not f or "roofline" not in b or "roofline" not in f:
+            continue
+        for t in ("compute_s", "memory_s", "collective_s"):
+            bv, fv = b["roofline"][t], f["roofline"][t]
+            gain = bv / fv if fv else float("inf")
+            out.append(f"| {a}/{s} | {t[:-2]} | {bv:.4f}s | {fv:.4f}s | {gain:.2f}x |")
+        bb = max(b["roofline"][t] for t in ("compute_s", "memory_s", "collective_s"))
+        fb = max(f["roofline"][t] for t in ("compute_s", "memory_s", "collective_s"))
+        out.append(f"| {a}/{s} | **bound** | **{bb:.4f}s** | **{fb:.4f}s** | "
+                   f"**{bb/fb:.2f}x** |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    ap.add_argument("--final", default="experiments/dryrun_final")
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    base = load_dir(args.baseline)
+    final = load_dir(args.final) if os.path.isdir(args.final) else {}
+
+    print("### Dry-run summary (paper-faithful baseline)\n")
+    print(dryrun_summary(base))
+    if final:
+        print("\n### Dry-run summary (optimized)\n")
+        print(dryrun_summary(final))
+    print("\n### Roofline — baseline, single-pod 16x16 (256 chips)\n")
+    print(roofline_table(base, "16x16"))
+    print("\n### Roofline — baseline, multi-pod 2x16x16 (512 chips)\n")
+    print(roofline_table(base, "2x16x16"))
+    if final:
+        print("\n### Roofline — optimized, single-pod 16x16\n")
+        print(roofline_table(final, "16x16"))
+        print("\n### Baseline vs optimized — full-sweep deltas (16x16)\n")
+        cells = [(a, s, "16x16") for (a, s, m) in final if m == "16x16"]
+        print(compare_table(base, final, sorted(set(cells))))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run JSON records (deliverable g).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and prints
+the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck and the MODEL_FLOPS/HLO_FLOPS usefulness ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load(mesh: str | None = None) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful_flops | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - |"
+                       f" - | - | - | SKIP: {r['skipped'][:40]} |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - |"
+                       f" - | - | - | ERROR |")
+            continue
+        rl = r["roofline"]
+        uf = rl["useful_flops_frac"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {rl['compute_s']:.4f} | {rl['memory_s']:.4f} |"
+            f" {rl['collective_s']:.4f} | {rl['dominant']} |"
+            f" {uf:.2f} |  |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - | - |  |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> List[Dict]:
+    """Headline numbers for run.py CSV."""
+    live = [r for r in rows if "roofline" in r]
+    out = []
+    for r in live:
+        rl = r["roofline"]
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "dominant": rl["dominant"],
+            "bound_s": max(rl["compute_s"], rl["memory_s"], rl["collective_s"]),
+            "compute_s": rl["compute_s"],
+            "useful": rl["useful_flops_frac"],
+        })
+    return out
+
+
+def main():
+    rows = load()
+    print(table(rows))
+    live = [r for r in rows if "roofline" in r]
+    dom = {}
+    for r in live:
+        dom[r["roofline"]["dominant"]] = dom.get(r["roofline"]["dominant"], 0) + 1
+    print(f"\ncells: {len(live)} live, "
+          f"{sum(1 for r in rows if 'skipped' in r)} skipped; dominant terms: {dom}")
+
+
+if __name__ == "__main__":
+    main()

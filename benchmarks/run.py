@@ -1,0 +1,128 @@
+"""Benchmark aggregator: one block per paper table/figure + roofline + kernel
+micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV (per assignment).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def _engine_figures() -> None:
+    from . import (fig06_clock_skew, fig07_08_tpcc, fig09_10_smallbank,
+                   fig11_comm_abort, fig12_contention, fig13_length_dist)
+    from .simcost import DEFAULT_WAVES
+
+    def n_txn_of(r):
+        return DEFAULT_WAVES * (r["committed"] + r["aborted"])
+
+    for r in fig06_clock_skew.run():
+        _csv(f"fig06/clocksi/skew{r['skew_ms']}ms",
+             r["engine_wall_s"] * 1e6 / n_txn_of(r),
+             f"tput={r['throughput_tps']:.0f}tps abort={r['abort_pct']:.1f}%")
+
+    for dist, tag in ((0.2, "fig07"), (0.5, "fig08")):
+        for r in fig07_08_tpcc.run(dist_frac=dist):
+            _csv(f"{tag}/tpcc/{r['sched']}/n{r['n_nodes']}",
+                 r["engine_wall_s"] * 1e6 / n_txn_of(r),
+                 f"tput={r['throughput_tps']:.0f}tps abort={r['abort_pct']:.1f}%")
+
+    for dist, tag in ((0.2, "fig09"), (0.5, "fig10")):
+        for r in fig09_10_smallbank.run(dist_frac=dist):
+            _csv(f"{tag}/smallbank/{r['sched']}/n{r['n_nodes']}",
+                 r["engine_wall_s"] * 1e6 / n_txn_of(r),
+                 f"tput={r['throughput_tps']:.0f}tps abort={r['abort_pct']:.1f}%")
+
+    for r in fig11_comm_abort.run():
+        _csv(f"fig11/{r['sched']}", r["engine_wall_s"] * 1e6 / n_txn_of(r),
+             f"cross/txn={r['cross_per_txn']:.2f} coord/txn="
+             f"{r['coord_per_txn']:.2f} abort={r['abort_pct']:.1f}%")
+
+    for r in fig12_contention.run():
+        _csv(f"fig12/{r['sched']}/hot{r['hot_pct']}",
+             r["engine_wall_s"] * 1e6 / n_txn_of(r),
+             f"tput={r['throughput_tps']:.0f}tps abort={r['abort_pct']:.1f}%")
+
+    for r in fig13_length_dist.run_length():
+        _csv(f"fig13a/{r['sched']}/ops{r['n_ops']}",
+             r["engine_wall_s"] * 1e6 / n_txn_of(r),
+             f"tput={r['throughput_tps']:.0f}tps")
+    for r in fig13_length_dist.run_dist():
+        _csv(f"fig13b/{r['sched']}/dist{r['dist_pct']}",
+             r["engine_wall_s"] * 1e6 / n_txn_of(r),
+             f"tput={r['throughput_tps']:.0f}tps")
+
+
+def _kernel_micro() -> None:
+    """XLA-path kernel micro-benchmarks (CPU wall time; derived = ideal
+    throughput class).  The Pallas path is validated in tests."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.RandomState(0)
+
+    def bench(fn, *args, reps=5):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+            (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    B, S, H, KH, D = 1, 1024, 8, 4, 128
+    q = jnp.asarray(rng.randn(B, S, H, D) * 0.3, jnp.bfloat16)
+    k = jnp.asarray(rng.randn(B, S, KH, D) * 0.3, jnp.bfloat16)
+    v = jnp.asarray(rng.randn(B, S, KH, D) * 0.3, jnp.bfloat16)
+    us = bench(lambda a, b, c: ops.flash_attention(a, b, c, causal=True), q, k, v)
+    fl = 4 * B * H * S * S * D / 2
+    _csv("kernel/flash_attention/xla_ref/1k", us, f"{fl/us/1e3:.1f}GFLOPs")
+
+    BH, Sx, P, N = 8, 2048, 64, 128
+    x = jnp.asarray(rng.randn(BH, Sx, P) * 0.3, jnp.float32)
+    dA = -jnp.asarray(np.abs(rng.rand(BH, Sx)) * 0.3, jnp.float32)
+    Bm = jnp.asarray(rng.randn(2, Sx, N) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.randn(2, Sx, N) * 0.3, jnp.float32)
+    us = bench(lambda *a: ops.ssd(*a, n_heads_per_group=4), x, dA, Bm, Cm)
+    _csv("kernel/ssd_scan/xla_ref/2k", us,
+         f"{BH*Sx*P*N*4/us/1e3:.1f}GFLOPs-class")
+
+    M, V = 65536, 8
+    cids = jnp.asarray(np.sort(rng.randint(0, 1 << 20, (M, V)), 1), jnp.int32)
+    tids = jnp.asarray(rng.randint(-1, 1000, (M, V)), jnp.int32)
+    mc = jnp.asarray(rng.randint(0, 1 << 20, (M,)), jnp.int32)
+    us = bench(lambda *a: ops.version_scan(*a), cids, tids, mc)
+    _csv("kernel/version_scan/xla_ref/64k", us, f"{M*V*8/us/1e3:.2f}GB/s-scan")
+
+    T, O = 256, 8
+    rk = jnp.asarray(rng.randint(-1, 4000, (T, O)), jnp.int32)
+    wk = jnp.asarray(rng.randint(-1, 4000, (T, O)), jnp.int32)
+    us = bench(lambda *a: ops.potential_matrix(*a), rk, wk)
+    _csv("kernel/potential_matrix/xla_ref/256", us, f"{T*T*O*O/us/1e3:.1f}Gcmp/s")
+
+
+def _roofline_headlines() -> None:
+    from . import roofline
+    try:
+        rows = roofline.load()
+    except Exception:
+        return
+    for s in roofline.summary(rows):
+        u = s["useful"]
+        _csv(s["name"], s["bound_s"] * 1e6,
+             f"dominant={s['dominant']} useful={u if u is None else round(u, 2)}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    _engine_figures()
+    _kernel_micro()
+    _roofline_headlines()
+
+
+if __name__ == "__main__":
+    main()

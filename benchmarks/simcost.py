@@ -1,0 +1,77 @@
+"""Shared cost model + sweep driver for the paper-figure benchmarks.
+
+The wave engine (repro.core) executes transactions and counts the paper's
+cost drivers: cross-node messages, coordinator messages, clock-skew waits,
+commits/aborts.  This module turns counts into a simulated MPP wall-time via
+an explicit cost model (constants below — an InfiniBand-class cluster like
+the paper's §V-A testbed):
+
+  t_op     per-op execution on a worker           (parallel across nodes)
+  t_msg    per cross-node message                 (parallel across nodes)
+  t_coord  per coordinator message                (SERIALIZED at the master —
+           this is the bottleneck the paper eliminates)
+  t_wait   per Clock-SI skew wait unit (1 unit ~ 10 ms of skew)
+
+wave_time = max(exec + cross + waits, coord_serial);   tput = commits / time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import make_store, run_workload
+
+T_OP = 20.0          # us
+T_MSG = 100.0        # us
+T_COORD = 25.0       # us (master service time per message)
+T_WAIT = 1_000.0     # us per skew unit
+
+WORKERS_PER_NODE = 8  # paper §V-A: 8 worker threads per slave
+DEFAULT_WAVES = 3
+KEYS_PER_NODE = 400
+
+
+def wave_size(n_nodes: int) -> int:
+    """Offered load scales with the cluster (8 workers/node, as in the
+    paper's testbed) so per-node contention stays constant."""
+    return WORKERS_PER_NODE * n_nodes
+
+
+def simulate(waves, sched: str, n_nodes: int, host_skew=None,
+             n_versions: int = 8) -> Dict:
+    n_keys = n_nodes * KEYS_PER_NODE
+    t0 = time.perf_counter()
+    _, hist, stats = run_workload(make_store(n_keys, n_versions), waves,
+                                  sched=sched, n_nodes=n_nodes,
+                                  host_skew=host_skew)
+    wall = time.perf_counter() - t0
+    n_txn = sum(len(t) for t, _ in hist)
+    n_ops = sum(int((o.read_key >= 0).sum() + (o.write_key >= 0).sum())
+                for _, o in hist)
+    exec_us = n_txn * waves[0].op_kind.shape[1] * T_OP / n_nodes
+    cross_us = stats.msgs_cross * T_MSG / n_nodes
+    coord_us = stats.msgs_coord * T_COORD
+    wait_us = stats.waits * T_WAIT / n_nodes
+    total_us = max(exec_us + cross_us + wait_us, coord_us)
+    tput = stats.committed / (total_us / 1e6) if total_us else 0.0
+    return {
+        "sched": sched, "n_nodes": n_nodes,
+        "committed": stats.committed, "aborted": stats.aborted,
+        "abort_pct": 100.0 * stats.aborted / max(stats.committed + stats.aborted, 1),
+        "msgs_cross": stats.msgs_cross, "msgs_coord": stats.msgs_coord,
+        "waits": stats.waits,
+        "sim_time_us": total_us, "throughput_tps": tput,
+        "engine_wall_s": wall,
+        "msgs_per_txn": (stats.msgs_cross + stats.msgs_coord) / max(n_txn, 1),
+    }
+
+
+def print_table(rows: List[Dict], cols: List[str], title: str) -> None:
+    print(f"\n== {title} ==")
+    print(" | ".join(f"{c:>14s}" for c in cols))
+    for r in rows:
+        print(" | ".join(
+            f"{r[c]:>14.1f}" if isinstance(r[c], float) else f"{str(r[c]):>14s}"
+            for c in cols))

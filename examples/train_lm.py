@@ -1,0 +1,67 @@
+"""End-to-end training driver: a small LM on the synthetic token language,
+with PostSI-committed checkpoints, an injected node failure mid-run, and
+automatic restore/resume.
+
+The exact same step/runner/checkpointer code drives the full-size configs on
+a real pod (see repro/launch/dryrun.py for the 512-chip lowering of the same
+train_step).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch qwen2-0.5b]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+
+from repro.checkpoint import PostSICheckpointer
+from repro.configs import get_reduced
+from repro.data import TokenStream
+from repro.launch.train import make_train_step
+from repro.optim import adamw_init
+from repro.runtime import FailureInjector, TrainRunner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--fail-at", type=int, default=77,
+                    help="inject a node failure at this step (-1: off)")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch).replace(vocab_size=2048)
+    model, step_fn = make_train_step(cfg, lr=args.lr)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"batch={args.batch}x{args.seq}")
+
+    stream = TokenStream(cfg, args.batch, args.seq, seed=0)
+    ckdir = tempfile.mkdtemp(prefix="postsi_ckpt_")
+    tree_ex = {"params": params, "opt": opt,
+               "data": {"step": jax.numpy.asarray(0)}}
+    ck = PostSICheckpointer(ckdir, tree_ex)
+
+    runner = TrainRunner(jax.jit(step_fn, donate_argnums=(0, 1)), stream, ck,
+                         ckpt_every=25)
+    injector = FailureInjector(fail_at=() if args.fail_at < 0 else (args.fail_at,))
+
+    out = runner.run(params, opt, args.steps, injector=injector)
+    ls = out["losses"]
+    print(f"\nsteps={out['final_step']} restarts={out['restarts']} "
+          f"(injected failure {'fired' if out['restarts'] else 'off'})")
+    for i in range(0, len(ls), max(len(ls) // 10, 1)):
+        print(f"  step {i:4d}  loss {ls[i]:.4f}")
+    print(f"  final loss {ls[-1]:.4f}  (start {ls[0]:.4f})")
+    assert ls[-1] < ls[0], "loss should decrease"
+    shutil.rmtree(ckdir, ignore_errors=True)
+    print("OK: trained through an injected failure with PostSI checkpoints.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .postsi_store import PostSICheckpointer, reshard_tree

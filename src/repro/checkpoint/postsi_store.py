@@ -1,0 +1,139 @@
+"""PostSI-committed distributed checkpoints (the paper as a framework
+feature — DESIGN.md §3.1).
+
+Every checkpoint *save* is a PostSI writer transaction over a versioned
+object store: one logical key per parameter leaf, the value being a content
+file handle.  Every *restore* is a read-only transaction: CID-based
+visibility (paper §IV-B) guarantees it observes an **atomic snapshot** —
+never a torn mix of two checkpoints — without any central "latest-step"
+counter or manifest lock.  Concurrent save/restore interleavings are safe by
+the paper's Theorem 1; tests/test_checkpoint.py exercises exactly the torn
+read scenario.
+
+Elastic restore: leaves are stored by logical tree path, so loading onto a
+*different* mesh re-shards via ``jax.device_put`` with the new sharding
+(``reshard_tree``) — the basis for elastic scaling and shrink/grow restarts.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.seq import SeqScheduler
+
+
+def _leaf_paths(tree) -> List[str]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in leaves]
+
+
+class PostSICheckpointer:
+    """Directory layout: <dir>/<key_id>_<file_id>.npy + postsi_meta.pkl.
+
+    The scheduler state (version chains of file handles) *is* the metadata;
+    there is no manifest file naming "the" checkpoint — the latest consistent
+    snapshot is induced from visibility, per the paper.
+    """
+
+    META = "postsi_meta.pkl"
+
+    def __init__(self, directory: str, tree_example):
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self.paths = _leaf_paths(tree_example)
+        self.key_of = {p: i for i, p in enumerate(self.paths)}
+        # +1 key: the step counter rides the same transaction
+        meta = os.path.join(directory, self.META)
+        if os.path.exists(meta):
+            with open(meta, "rb") as f:
+                saved = pickle.load(f)
+            self.sched: SeqScheduler = saved["sched"]
+            self._next_file = saved["next_file"]
+            assert saved["paths"] == self.paths, "tree structure changed"
+        else:
+            self.sched = SeqScheduler(len(self.paths) + 1, mode="postsi")
+            self._next_file = 1
+
+    def _persist_meta(self) -> None:
+        with open(os.path.join(self.dir, self.META), "wb") as f:
+            pickle.dump({"sched": self.sched, "next_file": self._next_file,
+                         "paths": self.paths}, f)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> bool:
+        """One writer transaction: write every leaf + the step key, commit."""
+        leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        tid = self.sched.begin()
+        for pth, leaf in leaves:
+            key = self.key_of[jax.tree_util.keystr(pth)]
+            fid = self._next_file
+            self._next_file += 1
+            np.save(os.path.join(self.dir, f"{key}_{fid}.npy"),
+                    np.asarray(leaf))
+            self.sched.write(tid, key, fid)
+        self.sched.write(tid, len(self.paths), step)
+        ok = self.sched.commit(tid)
+        if ok:
+            self._persist_meta()
+        return ok
+
+    # --------------------------------------------------------------- restore
+    def restore(self, tree_example, shardings=None) -> Tuple[Optional[int], Any]:
+        """One reader transaction over all leaves: PostSI guarantees the file
+        handles form one atomic checkpoint. Returns (step, tree) or (None,
+        None) when no committed checkpoint exists."""
+        tid = self.sched.begin()
+        step = self.sched.read(tid, len(self.paths))
+        if step is None or step == 0:
+            self.sched.abort(tid)
+            return None, None
+        handles = {}
+        for p in self.paths:
+            key = self.key_of[p]
+            fid = self.sched.read(tid, key)
+            if fid is None or fid == 0:
+                self.sched.abort(tid)
+                return None, None
+            handles[key] = fid
+        assert self.sched.commit(tid)
+
+        leaves_ex = jax.tree_util.tree_flatten_with_path(tree_example)
+        flat, treedef = leaves_ex
+        out = []
+        shard_flat = (jax.tree_util.tree_leaves(shardings)
+                      if shardings is not None else [None] * len(flat))
+        for (pth, ex), sh in zip(flat, shard_flat):
+            key = self.key_of[jax.tree_util.keystr(pth)]
+            arr = np.load(os.path.join(self.dir, f"{key}_{handles[key]}.npy"))
+            arr = arr.astype(ex.dtype) if hasattr(ex, "dtype") else arr
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.numpy.asarray(arr))
+        return int(step), jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------- gc
+    def gc(self, keep_latest: int = 2) -> int:
+        """Drop files not reachable from the last ``keep_latest`` versions."""
+        live = set()
+        for key in range(len(self.paths)):
+            chain = self.sched.versions[key]
+            for v in chain[-keep_latest:]:
+                live.add((key, v.value))
+        removed = 0
+        for fn in os.listdir(self.dir):
+            if not fn.endswith(".npy"):
+                continue
+            key, fid = (int(x) for x in fn[:-4].split("_"))
+            if (key, fid) not in live:
+                os.remove(os.path.join(self.dir, fn))
+                removed += 1
+        return removed
+
+
+def reshard_tree(tree, shardings):
+    """Elastic reshard: place every leaf per the (new-mesh) sharding tree."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -1,0 +1,46 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+10 assigned architectures + the paper's own transaction-engine config
+(``postsi-db``, see repro/core).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+from .shapes import SHAPES, ShapeCell, applicable  # re-export
+
+_MODULES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen3-14b": "qwen3_14b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "yi-9b": "yi_9b",
+    "mamba2-130m": "mamba2_130m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).FULL
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _mod(arch).reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,35 @@
+"""Assigned input-shape cells for the LM-family architectures.
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache / recurrent state of ``seq_len``); ``train_4k`` lowers ``train_step``;
+``prefill_32k`` lowers ``prefill_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic sequence handling: run for SSM/hybrid only
+# (per assignment); pure full-attention archs skip it (see DESIGN.md §5).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(family: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return family in LONG_OK_FAMILIES
+    return True

@@ -1,0 +1,18 @@
+"""PostSI / Consistent Visibility — the paper's contribution, in JAX.
+
+Decentralized MVCC: transactions negotiate logical time intervals from
+visibility relationships; no central clock exists anywhere in this package.
+"""
+from .engine import (NOP, READ, RMW, WRITE, RUNNING, COMMITTED, ABORTED,
+                     SCHEDULERS, Wave, WaveOut, RunStats, run_wave,
+                     run_workload, set_n_nodes)
+from .store import MVStore, make_store, read_newest, read_visible, node_of_key
+from .verify import verify_cv, verify_si
+from . import workloads
+
+__all__ = [
+    "NOP", "READ", "RMW", "WRITE", "RUNNING", "COMMITTED", "ABORTED",
+    "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_wave", "run_workload",
+    "set_n_nodes", "MVStore", "make_store", "read_newest", "read_visible",
+    "node_of_key", "verify_cv", "verify_si", "workloads",
+]

@@ -1,0 +1,194 @@
+"""Shard_map PostSI engine: the paper's shared-nothing cluster as a JAX mesh.
+
+The version store is block-partitioned over a 1-D ``("node",)`` mesh axis
+(node = key // keys_per_node); transaction state (interval bounds, status)
+is *replicated* and updated by identical deterministic computation on every
+node, while all data accesses are peer collectives:
+
+  read phase     all_gather the wave's key requests; each node answers for
+                 its block (others masked); psum merges the responses —
+                 the lockstep equivalent of the paper's work delegation.
+  commit phase   per-commit re-validation reads use the same gather+psum;
+                 version installs and SID bumps apply only on the owning
+                 node (masked local scatter); PostSI rule 4(b) bound pushes
+                 are replicated arithmetic — **zero coordinator anywhere**.
+
+Semantics are bit-identical to the single-device engine (same commit order,
+same rules) — tests/test_distribution.py checks the differential.
+Currently implements the paper's scheduler (postsi) only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .engine import COMMITTED, NOP, READ, RMW, RUNNING, ABORTED, WRITE, Wave
+from .store import INF, MVStore, NO_TID, make_store
+
+
+def make_node_mesh(n_nodes: int) -> Mesh:
+    devs = jax.devices()[:n_nodes]
+    return Mesh(np.array(devs), ("node",))
+
+
+def shard_store(store: MVStore, mesh: Mesh) -> MVStore:
+    sh = NamedSharding(mesh, P("node"))
+    return MVStore(*(jax.device_put(a, sh) for a in store))
+
+
+def _local_lookup(st_local: MVStore, keys: jax.Array, base: jax.Array,
+                  n_local: int):
+    """Gathered newest-version lookup answered from the local block.
+
+    keys: [...] GLOBAL key ids; returns fields with zeros for keys owned by
+    other nodes (psum merges)."""
+    lk = keys - base
+    mine = (lk >= 0) & (lk < n_local)
+    lk = jnp.clip(lk, 0, n_local - 1)
+    cids = st_local.cid[lk]
+    tids = st_local.tid[lk]
+    ok = tids != NO_TID
+    masked = jnp.where(ok, cids, -1)
+    slot = jnp.argmax(masked, axis=-1)
+    take = lambda a: jnp.take_along_axis(a[lk], slot[..., None], -1)[..., 0]
+    zero = lambda x: jnp.where(mine, x, 0)
+    return (zero(take(st_local.val)), zero(take(st_local.tid)),
+            zero(take(st_local.cid)), zero(take(st_local.sid)),
+            zero(slot), mine)
+
+
+def run_wave_postsi_dist(store: MVStore, wave: Wave, wave_idx, mesh: Mesh,
+                         keys_per_node: int):
+    """One PostSI wave on the node mesh. Returns (store', status, s, c)."""
+    n_nodes = mesh.devices.size
+    T, O = wave.op_kind.shape
+
+    def node_fn(val, tid, cid, sid, head, wv, op_kind, op_key, op_val, tids_g):
+        st = MVStore(val, tid, cid, sid, head, wv)
+        n_local = val.shape[0]
+        base = lax.axis_index("node") * n_local
+
+        is_read = (op_kind == READ) | (op_kind == RMW)
+        is_write = (op_kind == WRITE) | (op_kind == RMW)
+
+        def read_all(st_l, keys):
+            parts = _local_lookup(st_l, keys, base, n_local)
+            merged = [lax.psum(p, "node") for p in parts[:5]]
+            return merged  # val, tid, cid, sid, slot
+
+        r_val, r_tid, r_cid, r_sid, r_slot = read_all(st, op_key)
+
+        s_lo0 = jnp.where(is_read, r_cid, 0).max(axis=1)
+        c_lo0 = s_lo0
+        s_hi0 = jnp.full((T,), INF, jnp.int32)
+
+        rk = jnp.where(is_read, op_key, -1)
+        wk = jnp.where(is_write, op_key, -2)
+        potential = (rk[:, None, :, None] == wk[None, :, None, :]).any((2, 3))
+        potential = potential & ~jnp.eye(T, dtype=bool)
+
+        def commit_one(i, carry):
+            st_l, s_lo, s_hi, c_lo, status, s_arr, c_arr = carry
+            k_i = op_key[i]
+            w_i = is_write[i]
+            r_i = is_read[i]
+            nv_val, nv_tid, nv_cid, nv_sid, nv_slot = read_all(st_l, k_i)
+
+            local = nv_tid - tids_g[0]
+            local = jnp.where((local >= 0) & (local < T), local, -1)
+            creator_committed = jnp.where(
+                local >= 0, status[jnp.maximum(local, 0)] == COMMITTED, False)
+            lost = (r_i & w_i & (nv_cid != r_cid[i])).any()
+            rw_to_creator = jnp.where(
+                w_i & (local >= 0) & creator_committed,
+                potential[i, jnp.maximum(local, 0)], False).any()
+            abort = lost | rw_to_creator
+
+            s_lo_i = jnp.maximum(s_lo[i], jnp.where(w_i, nv_cid, 0).max())
+            c_lo_i = jnp.maximum(c_lo[i], jnp.where(w_i, nv_cid, 0).max())
+            c_lo_i = jnp.maximum(c_lo_i, jnp.where(r_i, nv_sid * 0 +
+                                                   read_sid(st_l, k_i, r_slot[i]), 0).max())
+            c_lo_i = jnp.maximum(c_lo_i, jnp.where(w_i, nv_sid, 0).max())
+            ongoing_reader = potential[:, i] & (status == RUNNING)
+            ongoing_reader = ongoing_reader.at[i].set(False)
+            c_lo_i = jnp.maximum(c_lo_i, jnp.where(ongoing_reader, s_lo, 0).max())
+            abort = abort | (s_lo_i > s_hi[i])
+            s_i = s_lo_i
+            c_i = jnp.maximum(c_lo_i, s_i) + 1
+
+            active = status[i] == RUNNING
+            commit = active & ~abort
+            new_status = jnp.where(active, jnp.where(abort, ABORTED, COMMITTED),
+                                   status[i])
+
+            # install writes on the owning node only
+            lk = k_i - base
+            mine = (lk >= 0) & (lk < n_local)
+            wmask = w_i & commit & mine
+            lk_safe = jnp.where(wmask, jnp.clip(lk, 0, n_local - 1), n_local)
+            h_new = (st_l.head[jnp.clip(lk, 0, n_local - 1)] + 1) % st_l.n_versions
+            val_new = jnp.where(op_kind[i] == RMW, r_val[i] + op_val[i],
+                                op_val[i])
+            st_l = st_l._replace(
+                val=st_l.val.at[lk_safe, h_new].set(val_new, mode="drop"),
+                tid=st_l.tid.at[lk_safe, h_new].set(tids_g[i], mode="drop"),
+                cid=st_l.cid.at[lk_safe, h_new].set(c_i, mode="drop"),
+                sid=st_l.sid.at[lk_safe, h_new].set(0, mode="drop"),
+                head=st_l.head.at[lk_safe].set(h_new, mode="drop"),
+                wave=st_l.wave.at[lk_safe].set(wave_idx, mode="drop"),
+            )
+            # SID bump on owning node (guarded against recycled slots)
+            rmask = r_i & commit & mine & (
+                st_l.tid[jnp.clip(lk, 0, n_local - 1), r_slot[i]] == r_tid[i])
+            lk_sid = jnp.where(rmask, jnp.clip(lk, 0, n_local - 1), n_local)
+            st_l = st_l._replace(
+                sid=st_l.sid.at[lk_sid, r_slot[i]].max(s_i, mode="drop"))
+
+            # rule 4(b): replicated bound pushes
+            running = status == RUNNING
+            i_reads_them = potential[i, :] & running
+            c_lo = jnp.where(commit & i_reads_them,
+                             jnp.maximum(c_lo, s_i + 1), c_lo)
+            they_read_mine = potential[:, i] & running
+            s_hi = jnp.where(commit & they_read_mine,
+                             jnp.minimum(s_hi, c_i - 1), s_hi)
+            s_lo = s_lo.at[i].set(jnp.where(commit, s_i, s_lo[i]))
+
+            status = status.at[i].set(new_status)
+            s_arr = s_arr.at[i].set(jnp.where(commit, s_i, -1))
+            c_arr = c_arr.at[i].set(jnp.where(commit, c_i, -1))
+            return (st_l, s_lo, s_hi, c_lo, status, s_arr, c_arr)
+
+        def read_sid(st_l, keys, slots):
+            lk = keys - base
+            mine = (lk >= 0) & (lk < n_local)
+            lk = jnp.clip(lk, 0, n_local - 1)
+            v = jnp.where(mine, st_l.sid[lk, slots], 0)
+            return lax.psum(v, "node")
+
+        status0 = jnp.full((T,), RUNNING, jnp.int32)
+        init = (st, s_lo0, s_hi0, c_lo0, status0,
+                jnp.full((T,), -1, jnp.int32), jnp.full((T,), -1, jnp.int32))
+        st, s_lo, s_hi, c_lo, status, s_arr, c_arr = lax.fori_loop(
+            0, T, commit_one, init)
+        return (st.val, st.tid, st.cid, st.sid, st.head, st.wave,
+                status, s_arr, c_arr)
+
+    spec_store = P("node")
+    spec_rep = P()
+    out = shard_map(
+        node_fn, mesh=mesh,
+        in_specs=(spec_store,) * 6 + (spec_rep,) * 4,
+        out_specs=(spec_store,) * 6 + (spec_rep,) * 3,
+        check_rep=False,
+    )(store.val, store.tid, store.cid, store.sid, store.head, store.wave,
+      wave.op_kind, wave.op_key, wave.op_val, wave.tid)
+    new_store = MVStore(*out[:6])
+    return new_store, out[6], out[7], out[8]

@@ -1,0 +1,337 @@
+"""Vectorized wave-execution engine for all six schedulers.
+
+The paper's asynchronous shared-nothing execution is mapped onto *waves*
+(DESIGN.md §2): a wave is a batch of transactions whose lifespans all overlap
+— they read the wave-start snapshot in parallel, keep write sets private
+(paper §IV-C) and then commit one-by-one in a deterministic order, which is
+where the paper's rules fire:
+
+  read phase   — CV rule 4 / PostSI §IV-B CID visibility + PostSI rule 3
+                 (raise s_lo/c_lo to the CID of every version read),
+  commit phase — CV rules 5-6 (write validation, anti-dependency capture) and
+                 PostSI rule 4 (a: pick own interval from SIDs + ongoing
+                 readers' s_lo; b: push bounds of conflicting ongoing txns;
+                 c: stamp CIDs, bump SIDs) and rule 5 (abort on s_lo > s_hi).
+
+The anti-dependency table is the dense boolean matrix ``potential[i, j]`` =
+"txn i read a key that txn j writes"; an edge *exists* (paper's table entry)
+once j commits, and is consulted only while i/j are ongoing — committed
+readers hand over via SIDs exactly as in the paper.
+
+Schedulers:
+  postsi   — the paper's contribution (decentralized, negotiated intervals)
+  cv       — Consistent Visibility only (no interval induction)
+  si       — conventional SI: central coordinator allocates snapshots
+             (2 coordinator round-trips per txn, counted)
+  optimal  — conventional procedure minus all coordination (upper bound;
+             not guaranteed correct, per the paper)
+  dsi      — incremental-snapshot DSI: coordinator involved for distributed
+             txns; remote-read snapshot mismatch aborts
+  clocksi  — loosely synchronized per-node clocks with ``skew`` (in waves);
+             behind-host txns read stale snapshots, ahead-remote reads wait
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .store import (INF, MVStore, NO_TID, bump_sid, install_version,
+                    make_store, node_of_key, read_newest, read_visible)
+
+# op kinds
+NOP, READ, WRITE, RMW = 0, 1, 2, 3
+# txn status
+RUNNING, COMMITTED, ABORTED = 0, 1, 2
+
+SCHEDULERS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
+WAVE_STRIDE = 1 << 16      # logical clock stride per wave for clocked baselines
+
+
+class Wave(NamedTuple):
+    op_kind: jax.Array    # [T, O] int32
+    op_key: jax.Array     # [T, O] int32
+    op_val: jax.Array     # [T, O] int32
+    host: jax.Array       # [T] int32 host node per txn
+    tid: jax.Array        # [T] int32 global tids (unique, > 0)
+
+
+class WaveOut(NamedTuple):
+    status: jax.Array     # [T] RUNNING/COMMITTED/ABORTED
+    s: jax.Array          # [T] final start time
+    c: jax.Array          # [T] final commit time
+    read_key: jax.Array   # [T, O] (-1 where not a read)
+    read_cid: jax.Array   # [T, O]
+    write_key: jax.Array  # [T, O] (-1 where not a write)
+    write_cid: jax.Array  # [T, O] cid stamped on installed versions
+    # stats
+    msgs_cross: jax.Array  # scalar: cross-node data/negotiation messages
+    msgs_coord: jax.Array  # scalar: messages through the central coordinator
+    waits: jax.Array       # scalar: clock-si skew waits
+
+
+def _potential_antidep(read_key, write_key, read_mask, write_mask):
+    """potential[i, j] = txn i read a key txn j writes (i != j)."""
+    rk = jnp.where(read_mask, read_key, -1)
+    wk = jnp.where(write_mask, write_key, -2)
+    eq = rk[:, None, :, None] == wk[None, :, None, :]     # [T,T,O,O]
+    pot = eq.any(axis=(2, 3))
+    T = read_key.shape[0]
+    return pot & ~jnp.eye(T, dtype=bool)
+
+
+@functools.partial(jax.jit, static_argnames=("sched", "skew"))
+def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
+             n_nodes: jax.Array = 8, sched: str = "postsi", skew: int = 0,
+             host_skew: jax.Array | None = None) -> Tuple[MVStore, WaveOut, jax.Array]:
+    """Execute one wave. Returns (store', out, clock').
+    ``n_nodes`` is traced, so scaling sweeps don't recompile."""
+    assert sched in SCHEDULERS, sched
+    T, O = wave.op_kind.shape
+    clock0 = clock          # wave-entry clock = snapshot time for clocked scheds
+    is_read = (wave.op_kind == READ) | (wave.op_kind == RMW)
+    is_write = (wave.op_kind == WRITE) | (wave.op_kind == RMW)
+    keys = wave.op_key
+
+    # ------------------------------------------------------------------ reads
+    if sched == "clocksi":
+        hs = host_skew if host_skew is not None else jnp.zeros((1,), jnp.int32)
+        my_skew = hs[wave.host]                                   # [T]
+        cutoff_wave = wave_idx - my_skew                          # snapshot wave
+        # visible: newest version whose wave tag < cutoff (stale snapshot)
+        key_wave = store.wave[keys]                               # [T,O]
+        head_cid = jnp.take_along_axis(store.cid[keys], store.head[keys][..., None],
+                                       axis=-1)[..., 0]
+        stale = key_wave >= cutoff_wave[:, None]
+        max_cid = jnp.where(stale, head_cid - 1, INF)
+        r_val, r_tid, r_cid, r_sid, r_slot = read_visible(store, keys, max_cid)
+    else:
+        r_val, r_tid, r_cid, r_sid, r_slot = read_newest(store, keys)
+
+    read_key = jnp.where(is_read, keys, -1)
+    read_cid = jnp.where(is_read, r_cid, -1)
+
+    # PostSI rule 3 at read time: creator of every read version must be
+    # visible -> raise s_lo and c_lo to its CID.
+    s_lo0 = jnp.where(is_read, r_cid, 0).max(axis=1)              # [T]
+    c_lo0 = s_lo0
+    s_hi0 = jnp.full((T,), INF, jnp.int32)
+
+    potential = _potential_antidep(keys, keys, is_read, is_write)  # [T,T]
+
+    # --------------------------------------------------------------- commits
+    # deterministic commit order = wave-local index (tids ascend within wave)
+    def commit_one(i, carry):
+        (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk) = carry
+        active = status[i] == RUNNING
+
+        k_i = keys[i]                                             # [O]
+        w_i = is_write[i]
+        r_i = is_read[i]
+        nv_val, nv_tid, nv_cid, nv_sid, nv_slot = read_newest(st, k_i)
+
+        # map newest creators to wave-local ids (or -1 if older wave)
+        local = nv_tid - wave.tid[0]
+        local = jnp.where((local >= 0) & (local < T), local, -1)
+        creator_committed = jnp.where(local >= 0, status[jnp.maximum(local, 0)] == COMMITTED, False)
+
+        # lost update: an RMW whose read version is no longer newest
+        lost = (r_i & w_i & (nv_cid != r_cid[i])).any()
+        # CV rule 5(ii): newest creator has an rw edge from me (I read data it
+        # overwrote) -> it is invisible to me -> cannot overwrite its version
+        if sched in ("postsi", "cv"):
+            rw_to_creator = jnp.where(
+                w_i & (local >= 0) & creator_committed,
+                potential[i, jnp.maximum(local, 0)], False).any()
+        else:
+            rw_to_creator = jnp.array(False)
+
+        if sched in ("si", "dsi", "clocksi", "optimal"):
+            # first-committer-wins: any write over a same-wave commit aborts
+            ww_conc = (w_i & (local >= 0) & creator_committed).any()
+        else:  # postsi / cv allow overwriting a committed peer (Fig.1 t2/t3)
+            ww_conc = jnp.array(False)
+
+        abort = lost | rw_to_creator | ww_conc
+
+        if sched == "dsi":
+            # incremental snapshot: a *remote* read whose key was meanwhile
+            # overwritten implies a local/global timestamp mismatch -> abort
+            remote = node_of_key(k_i, n_nodes) != wave.host[i]
+            stale_remote = (r_i & remote & (nv_cid != r_cid[i])).any()
+            abort = abort | stale_remote
+
+        if sched == "postsi":
+            # rule 3 for overwrites: creators of overwritten versions must be
+            # visible
+            s_lo_i = jnp.maximum(s_lo[i], jnp.where(w_i, nv_cid, 0).max())
+            c_lo_i = jnp.maximum(c_lo[i], jnp.where(w_i, nv_cid, 0).max())
+            # rule 4(a): commit time above SIDs of read versions (re-gathered:
+            # peers may have bumped them while we ran)
+            cur_sid = st.sid[k_i, r_slot[i]]
+            c_lo_i = jnp.maximum(c_lo_i, jnp.where(r_i, cur_sid, 0).max())
+            # ... and above SIDs of versions we *overwrite* (blind writes):
+            # SID passes committed readers' start times to later writers
+            c_lo_i = jnp.maximum(c_lo_i, jnp.where(w_i, nv_sid, 0).max())
+            # ... and above s_lo of every ongoing reader of my write set
+            ongoing_reader = potential[:, i] & (status == RUNNING)
+            ongoing_reader = ongoing_reader.at[i].set(False)
+            c_lo_i = jnp.maximum(c_lo_i, jnp.where(ongoing_reader, s_lo, 0).max())
+            # rule 5: no valid start time left
+            abort = abort | (s_lo_i > s_hi[i])
+            s_i = s_lo_i
+            c_i = jnp.maximum(c_lo_i, s_i) + 1
+        else:
+            # clocked baselines: snapshot = wave-entry clock; commit = clock++
+            s_i = clock0
+            c_i = clk + 1
+
+        commit = active & ~abort
+        new_status = jnp.where(active, jnp.where(abort, ABORTED, COMMITTED), status[i])
+
+        # ---- install writes (masked scatter; OOB key drops inactive ops) ----
+        wmask = w_i & commit
+        k_install = jnp.where(wmask, k_i, st.n_keys)              # OOB -> drop
+        h_new = (st.head[jnp.minimum(k_i, st.n_keys - 1)] + 1) % st.n_versions
+        val_new = jnp.where(wave.op_kind[i] == RMW, r_val[i] + wave.op_val[i],
+                            wave.op_val[i])
+        st = st._replace(
+            val=st.val.at[k_install, h_new].set(val_new, mode="drop"),
+            tid=st.tid.at[k_install, h_new].set(wave.tid[i], mode="drop"),
+            cid=st.cid.at[k_install, h_new].set(c_i, mode="drop"),
+            sid=st.sid.at[k_install, h_new].set(0, mode="drop"),
+            head=st.head.at[k_install].set(h_new, mode="drop"),
+            wave=st.wave.at[k_install].set(wave_idx, mode="drop"),
+        )
+        wcid = wcid.at[i].set(jnp.where(wmask, c_i, -1))
+
+        # ---- rule 4(c): bump SIDs of read versions to my start time --------
+        # guarded: skip if the ring slot was recycled since our wave-start read
+        rmask = r_i & commit & (st.tid[k_i, r_slot[i]] == r_tid[i])
+        k_sid = jnp.where(rmask, k_i, st.n_keys)
+        st = st._replace(sid=st.sid.at[k_sid, r_slot[i]].max(s_i, mode="drop"))
+
+        # ---- rule 4(b): push bounds of conflicting *ongoing* transactions --
+        if sched == "postsi":
+            running = status == RUNNING
+            i_reads_them = potential[i, :] & running              # j -rw-> k := me -> them
+            c_lo = jnp.where(commit & i_reads_them, jnp.maximum(c_lo, s_i + 1), c_lo)
+            they_read_mine = potential[:, i] & running
+            s_hi = jnp.where(commit & they_read_mine, jnp.minimum(s_hi, c_i - 1), s_hi)
+            s_lo = s_lo.at[i].set(jnp.where(commit, s_i, s_lo[i]))
+
+        status = status.at[i].set(new_status)
+        s_arr = s_arr.at[i].set(jnp.where(commit, s_i, -1))
+        c_arr = c_arr.at[i].set(jnp.where(commit, c_i, -1))
+        clk = jnp.where(commit, jnp.maximum(clk, c_i), clk)
+        return (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk)
+
+    status0 = jnp.full((T,), RUNNING, jnp.int32)
+    s0 = jnp.full((T,), -1, jnp.int32)
+    c0 = jnp.full((T,), -1, jnp.int32)
+    wcid0 = jnp.full((T, O), -1, jnp.int32)
+
+    (store, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clock) = lax.fori_loop(
+        0, T, commit_one,
+        (store, s_lo0, s_hi0, c_lo0, status0, s0, c0, wcid0, clock))
+
+    write_key = jnp.where(is_write & (status[:, None] == COMMITTED), keys, -1)
+
+    # ------------------------------------------------------------------ stats
+    # work delegation batches per (txn, remote node) pair (paper §IV-A), so
+    # cross-node messages count DISTINCT remote nodes touched, not raw ops
+    MAX_NODES = 32
+    op_node = node_of_key(keys, n_nodes)                               # [T,O]
+    active_op = wave.op_kind != NOP
+    node_ids = jnp.arange(MAX_NODES)[None, None, :]
+    touch = (op_node[..., None] == node_ids) & active_op[..., None]    # [T,O,MN]
+    node_touched = touch.any(axis=1)                                   # [T,MN]
+    remote_mask = jnp.arange(MAX_NODES)[None, :] != wave.host[:, None]
+    remote_nodes = (node_touched & remote_mask)
+    msgs_cross = remote_nodes.sum()
+    remote_op = (op_node != wave.host[:, None]) & active_op
+    committed = status == COMMITTED
+    if sched == "postsi":
+        # negotiation: one message per DISTINCT peer host per committer
+        edge = potential & committed[None, :]
+        peer_host_hot = (wave.host[None, :, None] == node_ids) & edge[:, :, None]
+        peer_hosts = peer_host_hot.any(axis=1)                         # [T,MN]
+        cross_peer = peer_hosts & (jnp.arange(MAX_NODES)[None, :] != wave.host[:, None])
+        msgs_cross = msgs_cross + cross_peer.sum()
+        msgs_coord = jnp.int32(0)
+    elif sched == "cv":
+        # anti-dependency entries stored on both endpoint hosts (§IV-A):
+        # insertion crosses hosts like PostSI negotiation ...
+        edge = potential & committed[None, :]
+        peer_host_hot = (wave.host[None, :, None] == node_ids) & edge[:, :, None]
+        peer_hosts = peer_host_hot.any(axis=1)
+        cross_peer = peer_hosts & (jnp.arange(MAX_NODES)[None, :] != wave.host[:, None])
+        msgs_cross = msgs_cross + cross_peer.sum()
+        # ... and reads consult the table on remote hosts (paper §V-D):
+        # batched per (txn, remote node) visited for reading
+        read_touch = (op_node[..., None] == node_ids) & (is_read & active_op)[..., None]
+        read_nodes = (read_touch.any(axis=1) & remote_mask)
+        msgs_cross = msgs_cross + read_nodes.sum()
+        msgs_coord = jnp.int32(0)
+    elif sched == "si":
+        msgs_coord = jnp.int32(2 * T)                  # begin + end, per txn
+    elif sched == "dsi":
+        distributed = remote_op.any(axis=1)
+        msgs_coord = 2 * distributed.sum()             # global txns pay globally
+    elif sched == "clocksi":
+        msgs_coord = jnp.int32(0)
+    else:  # optimal
+        msgs_coord = jnp.int32(0)
+
+    waits = jnp.int32(0)
+    if sched == "clocksi" and host_skew is not None:
+        # ahead-snapshot reads on behind remote nodes must wait (paper §II)
+        node_skew = host_skew[node_of_key(keys, n_nodes)]
+        my_skew = host_skew[wave.host][:, None]
+        waits = jnp.maximum(node_skew - my_skew, 0).sum(where=remote_op & is_read)
+
+    out = WaveOut(status, s_arr, c_arr, read_key, read_cid, write_key, wcid,
+                  msgs_cross, msgs_coord, waits)
+    return store, out, clock
+
+
+def set_n_nodes(n: int) -> None:   # kept for API compat; n_nodes is traced now
+    pass
+
+
+class RunStats(NamedTuple):
+    committed: int
+    aborted: int
+    msgs_cross: int
+    msgs_coord: int
+    waits: int
+    waves: int
+
+
+def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
+                 host_skew: np.ndarray | None = None, n_nodes: int = 8):
+    """Python driver: execute a list of Waves; returns (store, history, stats).
+
+    history is a list of numpy-ified WaveOut for the verifier.
+    """
+    clock = jnp.int32(1)
+    hs = None if host_skew is None else jnp.asarray(host_skew, jnp.int32)
+    history = []
+    tot = dict(committed=0, aborted=0, msgs_cross=0, msgs_coord=0, waits=0)
+    for w_idx, wave in enumerate(waves):
+        store, out, clock = run_wave(store, wave, jnp.int32(w_idx + 1), clock,
+                                     jnp.int32(n_nodes), sched=sched,
+                                     skew=skew, host_skew=hs)
+        o = jax.tree_util.tree_map(np.asarray, out)
+        history.append((np.asarray(wave.tid), o))
+        tot["committed"] += int((o.status == COMMITTED).sum())
+        tot["aborted"] += int((o.status == ABORTED).sum())
+        tot["msgs_cross"] += int(o.msgs_cross)
+        tot["msgs_coord"] += int(o.msgs_coord)
+        tot["waits"] += int(o.waits)
+    stats = RunStats(waves=len(waves), **tot)
+    return store, history, stats

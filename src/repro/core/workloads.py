@@ -1,0 +1,190 @@
+"""Workload generators: SmallBank and TPC-C-lite (the paper's §V benchmarks)
+plus a parametric microbenchmark for the §V-D characteristic studies.
+
+Keys are interleaved across nodes (``node = key % n_nodes``, matching
+``store.node_of_key``): local key ``i`` of node ``h`` is ``i * n_nodes + h``.
+Transactions are generated in waves; each txn runs on a host node, local
+txns touch only host-partition keys, distributed txns touch 2-3 nodes
+(paper §V-A).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import NOP, READ, RMW, WRITE, Wave
+
+
+def _key(local_idx, node, n_nodes):
+    return local_idx * n_nodes + node
+
+
+def _mk_wave(op_kind, op_key, op_val, host, tid0):
+    T = op_kind.shape[0]
+    return Wave(
+        op_kind=jnp.asarray(op_kind, jnp.int32),
+        op_key=jnp.asarray(op_key, jnp.int32),
+        op_val=jnp.asarray(op_val, jnp.int32),
+        host=jnp.asarray(host, jnp.int32),
+        tid=jnp.asarray(tid0 + np.arange(T), jnp.int32),
+    )
+
+
+def _pick_nodes(rng, host, n_nodes, distributed):
+    """Host plus 1-2 extra nodes for distributed txns."""
+    if not distributed or n_nodes == 1:
+        return [host]
+    extra = rng.choice([n for n in range(n_nodes) if n != host],
+                       size=min(rng.randint(1, 3), n_nodes - 1), replace=False)
+    return [host] + list(extra)
+
+
+def smallbank_waves(rng: np.random.RandomState, n_waves: int, T: int,
+                    n_nodes: int, keys_per_node: int, dist_frac: float = 0.2,
+                    hot_frac: float = 0.0, hot_per_node: int = 20,
+                    tid0: int = 1) -> List[Wave]:
+    """SmallBank: balance (2 reads), deposit (1 rmw), transfer (2 rmw),
+    write-check (1 read + 1 rmw).  ``hot_frac`` of txns draw keys from the
+    per-node hotspot (paper §V-D contention study)."""
+    O = 4
+    waves = []
+    for w in range(n_waves):
+        op_kind = np.zeros((T, O), np.int32)
+        op_key = np.zeros((T, O), np.int32)
+        op_val = np.zeros((T, O), np.int32)
+        host = rng.randint(0, n_nodes, T)
+        for t in range(T):
+            nodes = _pick_nodes(rng, host[t], n_nodes, rng.rand() < dist_frac)
+            hot = rng.rand() < hot_frac
+
+            def draw(node):
+                pool = hot_per_node if hot else keys_per_node
+                return _key(rng.randint(0, pool), node, n_nodes)
+
+            kind = rng.randint(0, 4)
+            if kind == 0:      # balance: read two accounts
+                op_kind[t, :2] = READ
+                op_key[t, 0] = draw(nodes[0])
+                op_key[t, 1] = draw(nodes[-1])
+            elif kind == 1:    # deposit
+                op_kind[t, 0] = RMW
+                op_key[t, 0] = draw(nodes[0])
+                op_val[t, 0] = rng.randint(1, 100)
+            elif kind == 2:    # transfer: two rmws (possibly cross-node)
+                op_kind[t, :2] = RMW
+                op_key[t, 0] = draw(nodes[0])
+                op_key[t, 1] = draw(nodes[-1])
+                amt = rng.randint(1, 100)
+                op_val[t, 0] = -amt
+                op_val[t, 1] = amt
+            else:              # write-check: read one, rmw another
+                op_kind[t, 0] = READ
+                op_kind[t, 1] = RMW
+                op_key[t, 0] = draw(nodes[0])
+                op_key[t, 1] = draw(nodes[-1])
+                op_val[t, 1] = -rng.randint(1, 50)
+            # de-dup keys inside a txn (engine assumes distinct write keys)
+            seen = {}
+            for o in range(O):
+                if op_kind[t, o] != NOP:
+                    k = op_key[t, o]
+                    if k in seen:
+                        op_kind[t, o] = NOP
+                    seen[k] = True
+        waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
+    return waves
+
+
+def tpcc_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
+               keys_per_node: int, dist_frac: float = 0.2,
+               districts_per_node: int = 50, tid0: int = 1) -> List[Wave]:
+    """TPC-C-lite: new-order (1 district rmw + 5 stock rmws + 3 item reads)
+    and payment (1 warehouse rmw + 1 customer rmw).  Districts/warehouse rows
+    live in the low key range -> natural contention."""
+    O = 12
+    waves = []
+    for w in range(n_waves):
+        op_kind = np.zeros((T, O), np.int32)
+        op_key = np.zeros((T, O), np.int32)
+        op_val = np.zeros((T, O), np.int32)
+        host = rng.randint(0, n_nodes, T)
+        for t in range(T):
+            nodes = _pick_nodes(rng, host[t], n_nodes, rng.rand() < dist_frac)
+            if rng.rand() < 0.6:   # new-order
+                op_kind[t, 0] = RMW      # district next-o-id
+                op_key[t, 0] = _key(rng.randint(0, districts_per_node), host[t], n_nodes)
+                op_val[t, 0] = 1
+                for j in range(5):       # stock updates, maybe remote
+                    node = nodes[rng.randint(0, len(nodes))]
+                    op_kind[t, 1 + j] = RMW
+                    op_key[t, 1 + j] = _key(
+                        districts_per_node + rng.randint(0, keys_per_node - districts_per_node),
+                        node, n_nodes)
+                    op_val[t, 1 + j] = -rng.randint(1, 10)
+                for j in range(3):       # item reads
+                    node = nodes[rng.randint(0, len(nodes))]
+                    op_kind[t, 6 + j] = READ
+                    op_key[t, 6 + j] = _key(
+                        districts_per_node + rng.randint(0, keys_per_node - districts_per_node),
+                        node, n_nodes)
+            else:                  # payment
+                op_kind[t, 0] = RMW      # warehouse ytd (hot)
+                op_key[t, 0] = _key(rng.randint(0, 10), host[t], n_nodes)
+                op_val[t, 0] = rng.randint(1, 100)
+                node = nodes[-1]
+                op_kind[t, 1] = RMW      # customer balance
+                op_key[t, 1] = _key(
+                    districts_per_node + rng.randint(0, keys_per_node - districts_per_node),
+                    node, n_nodes)
+                op_val[t, 1] = -rng.randint(1, 100)
+            seen = {}
+            for o in range(O):
+                if op_kind[t, o] != NOP:
+                    k = op_key[t, o]
+                    if k in seen:
+                        op_kind[t, o] = NOP
+                    seen[k] = True
+        waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
+    return waves
+
+
+def micro_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
+                keys_per_node: int, n_ops: int = 4, read_ratio: float = 0.8,
+                dist_frac: float = 0.3, hot_frac: float = 0.0,
+                hot_per_node: int = 20, blind_frac: float = 0.0,
+                tid0: int = 1) -> List[Wave]:
+    """Parametric microbenchmark for §V-D: vary txn length (n_ops), read mix,
+    distribution fraction and contention.  ``blind_frac`` of non-read ops are
+    blind WRITEs — the paper's Figure-1 case where PostSI commits and
+    first-committer-wins SI aborts."""
+    O = n_ops
+    waves = []
+    for w in range(n_waves):
+        op_kind = np.zeros((T, O), np.int32)
+        op_key = np.zeros((T, O), np.int32)
+        op_val = np.zeros((T, O), np.int32)
+        host = rng.randint(0, n_nodes, T)
+        for t in range(T):
+            nodes = _pick_nodes(rng, host[t], n_nodes, rng.rand() < dist_frac)
+            hot = rng.rand() < hot_frac
+            pool = hot_per_node if hot else keys_per_node
+            ks = set()
+            for o in range(O):
+                node = nodes[rng.randint(0, len(nodes))]
+                k = _key(rng.randint(0, pool), node, n_nodes)
+                if k in ks:
+                    continue
+                ks.add(k)
+                if rng.rand() < read_ratio:
+                    op_kind[t, o] = READ
+                elif rng.rand() < blind_frac:
+                    op_kind[t, o] = WRITE
+                    op_val[t, o] = rng.randint(1, 10)
+                else:
+                    op_kind[t, o] = RMW
+                    op_val[t, o] = rng.randint(1, 10)
+                op_key[t, o] = k
+        waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
+    return waves

@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention (causal, online softmax, block-skipping).
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks) — the kv axis is innermost
+and sequential, so the running (m, l, acc) statistics live in VMEM scratch
+across kv iterations.  Causal block skipping: kv blocks strictly above the
+diagonal are predicated off with ``pl.when`` — this is the ~2x FLOP saving
+over the masked full-grid XLA fallback (models/layers._chunked_attention).
+
+Layout per block:
+  q tile  [BQ, D]   VMEM
+  k tile  [BK, D]   VMEM
+  v tile  [BK, D]   VMEM
+  scratch acc [BQ, D] f32, m/l [BQ, 128] f32 (lane-padded)
+
+TPU alignment: BQ/BK multiples of 128 (MXU), D a multiple of 128 (lanes) —
+``ops.flash_attention`` pads when needed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, scale: float, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip kv blocks entirely above the diagonal
+    run = True if not causal else (ki * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                   # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)                   # [BK, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                               # [BQ]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-37)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False,
+                           sm_scale: float | None = None) -> jax.Array:
+    """q: [BH, Sq, D]; k, v: [BH, Sk, D] (heads folded into leading dim).
+    ``sm_scale`` overrides 1/sqrt(D) when D was lane-padded by the caller."""
+    BH, S, D = q.shape
+    Sk = k.shape[1]
+    assert S % block_q == 0 and Sk % block_k == 0, (S, Sk, block_q, block_k)
+    nq, nk = S // block_q, Sk // block_k
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+
+    kern = functools.partial(_kernel, causal=causal, scale=scale,
+                             block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

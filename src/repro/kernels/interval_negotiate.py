@@ -1,0 +1,57 @@
+"""Pallas TPU kernel for the PostSI negotiation hot spot: the dense
+anti-dependency matrix  potential[i, j] = "txn i read a key that txn j
+writes" (paper CV rule 6 / PostSI rule 4 feed).
+
+This is the O(T^2 O^2) core of the wave commit phase.  Tiling: [BT x BT]
+output tiles over the (reader, writer) transaction grid; the O read keys and
+O write keys per transaction are compared with static O^2 broadcast-compare
+accumulation in VMEM (O is small: 4-12).
+
+The bound updates themselves (rule 4a/4b min/max folds over the matrix) are
+cheap [T,T]x[T] reductions left to XLA — the matrix build is the hot spot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(rk_ref, wk_ref, out_ref, *, block_t: int, n_ops: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rk = rk_ref[...]                                    # [BT, O] (reader keys)
+    wk = wk_ref[...]                                    # [BT, O] (writer keys)
+    acc = jnp.zeros((block_t, block_t), jnp.bool_)
+    for o1 in range(n_ops):
+        r = rk[:, o1]                                   # [BT]
+        for o2 in range(n_ops):
+            w = wk[:, o2]                               # [BT]
+            acc = acc | ((r[:, None] == w[None, :]) & (r[:, None] >= 0))
+    # mask the diagonal (i == j transactions)
+    gi = i * block_t + jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+    gj = j * block_t + jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+    out_ref[...] = (acc & (gi != gj)).astype(jnp.int8)
+
+
+def potential_matrix_pallas(read_key: jax.Array, write_key: jax.Array, *,
+                            block_t: int = 128, interpret: bool = False
+                            ) -> jax.Array:
+    """read_key/write_key: [T, O] int32 with -1 for inactive ops.
+    Returns potential [T, T] int8 (1 = rw edge candidate)."""
+    T, O = read_key.shape
+    assert T % block_t == 0, (T, block_t)
+    kern = functools.partial(_kernel, block_t=block_t, n_ops=O)
+    return pl.pallas_call(
+        kern,
+        grid=(T // block_t, T // block_t),
+        in_specs=[
+            pl.BlockSpec((block_t, O), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, O), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, T), jnp.int8),
+        interpret=interpret,
+    )(read_key, write_key)

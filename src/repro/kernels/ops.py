@@ -1,0 +1,112 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op takes ``use_pallas`` / ``interpret``:
+  use_pallas=False          -> the pure-jnp oracle (ref.py) — what the models
+                               and the CPU dry-run actually lower;
+  use_pallas=True           -> pl.pallas_call, Mosaic on real TPU;
+  use_pallas=True, interpret=True -> kernel body interpreted on CPU
+                               (how the tests validate the kernels here).
+
+Wrappers own all TPU alignment: head folding, GQA KV repetition, lane
+padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .interval_negotiate import potential_matrix_pallas
+from .ssd_scan import ssd_scan_pallas
+from .version_scan import version_scan_pallas
+
+
+def _pad_to(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas",
+                                             "interpret", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, use_pallas=False, interpret=False,
+                    block_q=128, block_k=128):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KH, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    # fold heads; repeat KV across the GQA group (kernel-validation path; the
+    # on-TPU variant maps kv blocks to head groups via the BlockSpec index map)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    if use_pallas:
+        Dp = ((D + 127) // 128) * 128
+        qp = _pad_to(qf, 128, 2)
+        kp = _pad_to(kf, 128, 2)
+        vp = _pad_to(vf, 128, 2)
+        import math
+        o = flash_attention_pallas(qp, kp, vp, causal=causal,
+                                   block_q=min(block_q, Sq),
+                                   block_k=min(block_k, kf.shape[1]),
+                                   sm_scale=1.0 / math.sqrt(D),
+                                   interpret=interpret)[:, :, :D]
+    else:
+        o = ref.attention_ref(qf, kf, vf, causal=causal)
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_heads_per_group", "chunk",
+                                             "use_pallas", "interpret"))
+def ssd(x, dA, Bm, Cm, *, n_heads_per_group, chunk=128, use_pallas=False,
+        interpret=False):
+    """x: [BH, S, P]; dA: [BH, S]; Bm/Cm: [Bg, S, N] ->
+    (y [BH, S, P], final state [BH, N, P])."""
+    if use_pallas:
+        return ssd_scan_pallas(x, dA, Bm, Cm,
+                               n_heads_per_group=n_heads_per_group,
+                               chunk=chunk, interpret=interpret)
+    return ref.ssd_ref(x, dA, Bm, Cm, n_heads_per_group)
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_m"))
+def version_scan(cids, tids, max_cid, *, use_pallas=False, interpret=False,
+                 block_m=256):
+    """cids/tids: [M, V] int32; max_cid: [M] -> (slot [M], cid [M])."""
+    if not use_pallas:
+        return ref.version_scan_ref(cids, tids, max_cid)
+    M = cids.shape[0]
+    bm = min(block_m, M)
+    cp = _pad_to(_pad_to(cids, 128, 1, value=-1), bm, 0, value=-1)
+    tp = _pad_to(_pad_to(tids, 128, 1, value=-1), bm, 0, value=-1)
+    mc = jnp.broadcast_to(max_cid[:, None], (M, 128))
+    mc = _pad_to(mc, bm, 0)
+    slot, best = version_scan_pallas(cp, tp, mc, block_m=bm,
+                                     interpret=interpret)
+    return slot[:M], best[:M]
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_t"))
+def potential_matrix(read_key, write_key, *, use_pallas=False, interpret=False,
+                     block_t=128):
+    """[T, O] read/write key sets -> [T, T] int8 anti-dependency candidates."""
+    if not use_pallas:
+        return ref.potential_matrix_ref(read_key, write_key)
+    T = read_key.shape[0]
+    bt = min(block_t, T)
+    rk = _pad_to(read_key, bt, 0, value=-1)
+    wk = _pad_to(write_key, bt, 0, value=-1)
+    out = potential_matrix_pallas(rk, wk, block_t=bt, interpret=interpret)
+    return out[:T, :T]

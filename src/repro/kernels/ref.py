@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are also the XLA fallback paths the models/engine actually run on CPU
+and in the dry-run (Mosaic kernels cannot lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q, k, v: [BH, S, D] — dense softmax attention."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array,
+            n_heads_per_group: int):
+    """Naive sequential SSD recurrence. x: [BH,S,P]; dA: [BH,S];
+    Bm/Cm: [Bg,S,N].  Returns (y [BH,S,P], h [BH,N,P])."""
+    BH, S, P = x.shape
+    H = n_heads_per_group
+    N = Bm.shape[-1]
+
+    def one(bh):
+        b = bh // H
+
+        def step(h, t):
+            a = jnp.exp(dA[bh, t])
+            h = h * a + jnp.outer(Bm[b, t], x[bh, t])       # [N, P]
+            y = Cm[b, t] @ h                                # [P]
+            return h, y
+
+        h0 = jnp.zeros((N, P), jnp.float32)
+        h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+        return ys, h
+
+    ys, hs = jax.vmap(one)(jnp.arange(BH))
+    return ys.astype(x.dtype), hs
+
+
+def version_scan_ref(cids: jax.Array, tids: jax.Array, max_cid: jax.Array):
+    """cids/tids: [M, V]; max_cid: [M]. Returns (slot [M], cid [M])."""
+    ok = (tids != -1) & (cids <= max_cid[:, None])
+    masked = jnp.where(ok, cids, -1)
+    slot = jnp.argmax(masked, axis=1)
+    best = jnp.take_along_axis(masked, slot[:, None], axis=1)[:, 0]
+    return slot.astype(jnp.int32), best.astype(jnp.int32)
+
+
+def potential_matrix_ref(read_key: jax.Array, write_key: jax.Array) -> jax.Array:
+    """[T,O] x [T,O] -> [T,T] int8 rw-candidate matrix (diagonal zero)."""
+    rk = jnp.where(read_key >= 0, read_key, -1)
+    wk = jnp.where(write_key >= 0, write_key, -2)
+    eq = rk[:, None, :, None] == wk[None, :, None, :]
+    pot = eq.any(axis=(2, 3))
+    T = read_key.shape[0]
+    return (pot & ~jnp.eye(T, dtype=bool)).astype(jnp.int8)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (B*H, num_chunks) — the chunk axis is innermost and sequential; the
+inter-chunk recurrent state h [N, P] lives in VMEM scratch, so the whole
+sequence is processed with a single HBM pass over x/B/C (the XLA fallback
+materializes per-chunk states in HBM).
+
+Per chunk (Q x P tile of x, Q x N tiles of B/C, Q-vector of log-decays dA):
+  cs      = cumsum(dA)
+  L       = tril(exp(cs_i - cs_j))                  intra-chunk decay
+  y_diag  = (C B^T  .* L) x
+  y_off   = exp(cs) * (C h)
+  h'      = exp(cs_Q) h + B^T (exp(cs_Q - cs) .* x)
+
+B/C are shared across the H heads of a group (G=1): the BlockSpec index map
+divides the head-program id by H.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)                    # [Q, P]
+    da = da_ref[0].astype(jnp.float32)                  # [Q]
+    Bm = b_ref[0].astype(jnp.float32)                   # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                   # [Q, N]
+    Q = x.shape[0]
+
+    cs = jnp.cumsum(da)                                 # [Q]
+    seg = cs[:, None] - cs[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(li >= lj, jnp.exp(seg), 0.0)          # [Q, Q]
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    y = jax.lax.dot_general(scores * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q,P]
+
+    h = h_ref[...]                                      # [N, P]
+    y_off = jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0] = (y + y_off).astype(y_ref.dtype)
+
+    decay_in = jnp.exp(cs[Q - 1] - cs)[:, None] * x     # [Q, P]
+    h_new = jnp.exp(cs[Q - 1]) * h + jax.lax.dot_general(
+        Bm, decay_in, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                    *, n_heads_per_group: int, chunk: int = 128,
+                    interpret: bool = False):
+    """x: [BH, S, P]; dA: [BH, S]; Bm, Cm: [Bg, S, N] with Bg = BH // H.
+
+    Returns (y [BH, S, P], final_state [BH, N, P]).
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    H = n_heads_per_group
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kern = functools.partial(_kernel, nc=nc)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b // H, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b // H, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, P), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dA, Bm, Cm)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the PostSI read hot spot: latest-visible-version
+selection over version ring buffers (paper CV rule 4 / §IV-B CID rule).
+
+For a block of read requests, each with a gathered ring of V version slots
+(CIDs + creator TIDs) and a per-request visibility ceiling ``max_cid``,
+select the newest visible slot:
+
+    ok     = (tid != -1) & (cid <= max_cid)
+    best   = argmax(where(ok, cid, -1))
+
+Tiling: requests on the sublane axis (BM per block), the V ring slots padded
+to the 128-lane axis in ops.version_scan.  Outputs are lane-broadcast
+[BM, 128] tiles (slot index and selected cid); the wrapper takes lane 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cid_ref, tid_ref, maxcid_ref, slot_ref, best_ref):
+    cids = cid_ref[...]                                  # [BM, Vp]
+    tids = tid_ref[...]
+    ceil = maxcid_ref[...][:, 0]                         # [BM]
+    ok = (tids != -1) & (cids <= ceil[:, None])
+    masked = jnp.where(ok, cids, -1)
+    best = masked.max(axis=1)                            # [BM]
+    # argmax via equality with the max (first match wins, matching jnp.argmax
+    # tie-break because per-key CIDs are unique)
+    Vp = cids.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, masked.shape, 1)
+    hit = jnp.where(masked == best[:, None], lane, Vp)
+    slot = hit.min(axis=1)
+    slot_ref[...] = jnp.broadcast_to(slot[:, None], slot_ref.shape).astype(jnp.int32)
+    best_ref[...] = jnp.broadcast_to(best[:, None], best_ref.shape).astype(jnp.int32)
+
+
+def version_scan_pallas(cids: jax.Array, tids: jax.Array, max_cid: jax.Array,
+                        *, block_m: int = 256, interpret: bool = False):
+    """cids, tids: [M, Vp] int32 (Vp lane-padded; empty slots tid=-1);
+    max_cid: [M, 128] int32 (lane-broadcast).  Returns (slot [M], cid [M])."""
+    M, Vp = cids.shape
+    assert M % block_m == 0, (M, block_m)
+    slot, best = pl.pallas_call(
+        _kernel,
+        grid=(M // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, Vp), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, Vp), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 128), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 128), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 128), jnp.int32),
+            jax.ShapeDtypeStruct((M, 128), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cids, tids, max_cid)
+    return slot[:, 0], best[:, 0]

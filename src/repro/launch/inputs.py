@@ -1,0 +1,118 @@
+"""Input construction for every (architecture × shape × mode) cell.
+
+``input_specs`` returns ``ShapeDtypeStruct`` stand-ins (weak-type-correct,
+shardable, **no device allocation**) — the dry-run lowers against these.
+``make_batch`` materializes small real batches for smoke tests / examples.
+
+Modality frontends are stubs per the assignment: the VLM cell feeds token ids
+plus precomputed 3D M-RoPE position ids; the audio cell feeds precomputed
+frame embeddings to the encoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import build
+
+CACHE_PAD = 128          # decode cells: room after the prefilled cache
+ENCDEC_DECODE_SRC = 4096  # encoder memory length for enc-dec decode cells
+
+
+def _tok(shape, abstract):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+    return jnp.zeros(shape, jnp.int32)
+
+
+def _f32(shape, abstract, dtype=jnp.float32):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def _train_batch(cfg: ModelConfig, B: int, S: int, abstract: bool) -> Dict[str, Any]:
+    batch = {"tokens": _tok((B, S), abstract), "labels": _tok((B, S), abstract)}
+    if cfg.mrope:
+        batch["positions"] = _tok((B, S, 3), abstract)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = _f32((B, S, cfg.d_model), abstract)
+    return batch
+
+
+def _prefill_batch(cfg: ModelConfig, B: int, S: int, abstract: bool) -> Dict[str, Any]:
+    return _train_batch(cfg, B, S, abstract)
+
+
+def _abstract_cache(cfg: ModelConfig, B: int, S: int):
+    model = build(cfg)
+    if cfg.family == "encdec":
+        fn = lambda: model.init_cache(B, S + CACHE_PAD, min(S, ENCDEC_DECODE_SRC))
+    elif cfg.family == "ssm":
+        fn = lambda: model.init_cache(B)
+    else:
+        fn = lambda: model.init_cache(B, S + CACHE_PAD)
+    cache = jax.eval_shape(fn)
+    # decode starts with a full cache of S tokens
+    cache = dict(cache)
+    cache["len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache
+
+
+def _real_cache(cfg: ModelConfig, B: int, S: int):
+    model = build(cfg)
+    if cfg.family == "encdec":
+        cache = model.init_cache(B, S + CACHE_PAD, min(S, ENCDEC_DECODE_SRC))
+    elif cfg.family == "ssm":
+        cache = model.init_cache(B)
+    else:
+        cache = model.init_cache(B, S + CACHE_PAD)
+    cache["len"] = jnp.int32(S)
+    return cache
+
+
+def _decode_batch(cfg: ModelConfig, B: int, S: int, abstract: bool):
+    batch = {"token": _tok((B, 1), abstract)}
+    cache = _abstract_cache(cfg, B, S) if abstract else _real_cache(cfg, B, S)
+    return batch, cache
+
+
+def input_specs(cfg: ModelConfig, shape, mode: str | None = None):
+    """Abstract inputs for one shape cell. Returns (batch,) or (batch, cache)."""
+    mode = mode or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    if mode == "train":
+        return (_train_batch(cfg, B, S, True),)
+    if mode == "prefill":
+        return (_prefill_batch(cfg, B, S, True),)
+    if mode == "decode":
+        batch, cache = _decode_batch(cfg, B, S, True)
+        return (batch, cache)
+    raise ValueError(mode)
+
+
+def make_batch(cfg: ModelConfig, B: int, S: int, mode: str = "train",
+               rng: np.random.RandomState | None = None):
+    """Small real batches for smoke tests and examples."""
+    rng = rng or np.random.RandomState(0)
+    if mode in ("train", "prefill"):
+        batch = {
+            "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+            "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+        }
+        if cfg.mrope:
+            pos = np.broadcast_to(np.arange(S)[None, :, None], (B, S, 3))
+            batch["positions"] = jnp.asarray(pos, jnp.int32)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.asarray(rng.randn(B, S, cfg.d_model) * 0.05,
+                                              jnp.float32)
+        return batch
+    if mode == "decode":
+        batch = {"token": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, 1)), jnp.int32)}
+        cache = _real_cache(cfg, B, S)
+        return batch, cache
+    raise ValueError(mode)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  Single-pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod" axis crosses the
+DCN boundary and carries only data-parallel gradient reduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — run under dryrun.py which "
+            "sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    try:
+        return jax.make_mesh(shape, axes, devices=devs[:n])
+    except TypeError:  # older signature without devices kwarg
+        arr = np.array(devs[:n]).reshape(shape)
+        return Mesh(arr, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for CI-scale distribution tests (8 host devices)."""
+    n = int(np.prod(shape))
+    devs = jax.devices()[:n]
+    arr = np.array(devs).reshape(shape)
+    return Mesh(arr, axes)

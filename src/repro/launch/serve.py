@@ -1,0 +1,110 @@
+"""Batched serving driver with PostSI-versioned live weight publishing.
+
+A light continuous-batching server: requests are grouped into fixed-size
+batches, prefilled once and decoded step-by-step. Weight versions live in a
+PostSI store (one key per parameter leaf); every batch is a reader
+transaction, every publish a writer transaction — Consistent Visibility
+guarantees a batch never mixes two weight versions (torn weights), with no
+version counter or lock (DESIGN.md §3.2).
+
+This is the single-host driver; on a pod the same step functions are jitted
+with the serve-time shardings (launch/sharding.SERVE_RULES), as exercised by
+the decode/prefill dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.seq import SeqScheduler
+from repro.models.config import ModelConfig
+from repro.models.model import build
+
+from .train import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class ServeStats:
+    batches: int = 0
+    tokens: int = 0
+    publishes: int = 0
+    versions_served: List[int] = dataclasses.field(default_factory=list)
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 cache_margin: int = 128):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.cache_margin = cache_margin
+        self.model, prefill = make_prefill_step(cfg)
+        _, decode = make_decode_step(cfg)
+        self.prefill = jax.jit(prefill)
+        self.decode = jax.jit(decode, donate_argnums=(1,))
+        # versioned weight store: one key per leaf
+        self._versions = [params]
+        n_leaves = len(jax.tree_util.tree_leaves(params))
+        self._sched = SeqScheduler(n_leaves, mode="postsi")
+        self._n_leaves = n_leaves
+        t = self._sched.begin()
+        for k in range(n_leaves):
+            self._sched.write(t, k, 0)
+        assert self._sched.commit(t)
+        self.stats = ServeStats()
+
+    # ------------------------------------------------------------- weights
+    def publish(self, params) -> bool:
+        """Writer transaction: install a new weight version atomically."""
+        self._versions.append(params)
+        vid = len(self._versions) - 1
+        t = self._sched.begin()
+        for k in range(self._n_leaves):
+            self._sched.write(t, k, vid)
+        ok = self._sched.commit(t)
+        if ok:
+            self.stats.publishes += 1
+        return ok
+
+    def _snapshot(self):
+        """Reader transaction: an atomic weight version for one batch."""
+        t = self._sched.begin()
+        vids = {self._sched.read(t, k) for k in range(self._n_leaves)}
+        assert self._sched.commit(t)
+        assert len(vids) == 1, f"torn weight versions: {vids}"
+        vid = vids.pop()
+        return vid, self._versions[vid]
+
+    # ------------------------------------------------------------- serving
+    def serve_batch(self, tokens: np.ndarray, max_new_tokens: int = 8,
+                    enc_embeds: Optional[np.ndarray] = None) -> Dict:
+        """tokens: [B, S] int32 prompt batch -> dict with generated ids."""
+        B, S = tokens.shape
+        assert B == self.batch_size
+        vid, params = self._snapshot()
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if self.cfg.mrope:
+            pos = np.broadcast_to(np.arange(S)[None, :, None], (B, S, 3))
+            batch["positions"] = jnp.asarray(pos.astype(np.int32))
+        if self.cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.asarray(enc_embeds, jnp.float32)
+        logits, cache = self.prefill(params, batch)
+        # room for the new tokens
+        for kk in ("k", "v"):
+            if kk in cache:
+                pad = jnp.zeros(cache[kk].shape[:2] + (self.cache_margin,)
+                                + cache[kk].shape[3:], cache[kk].dtype)
+                cache[kk] = jnp.concatenate([cache[kk], pad], axis=2)
+        tok = jnp.argmax(logits[..., : self.cfg.vocab_size], -1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for _ in range(max_new_tokens - 1):
+            tok, cache = self.decode(params, cache, {"token": tok})
+            out.append(np.asarray(tok))
+        gen = np.concatenate(out, axis=1)
+        self.stats.batches += 1
+        self.stats.tokens += int(gen.size)
+        self.stats.versions_served.append(vid)
+        return {"generated": gen, "weight_version": vid}

@@ -1,0 +1,100 @@
+"""Divisibility-aware sharding rules for inputs, params and caches.
+
+Baseline layout (see DESIGN.md §6):
+  batch dims        -> ("pod", "data")     (pure DP across pods, FSDP inside)
+  weight embed dim  -> "data"              (FSDP; gathered per layer in scan)
+  heads/kv/mlp/vocab/experts/inner -> "model"  (TP / EP)
+  KV-cache kv-head dim -> "model", batch dim -> ("pod","data")
+
+Every assignment is guarded by divisibility: a dim that does not divide the
+mesh axis stays unsharded (GSPMD handles the remainder) — this is what makes
+all 40 (arch x shape) cells compile on the fixed production meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import param_pspecs, param_shardings  # re-export
+
+
+def _size(mesh: Mesh, axes) -> int:
+    d = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= d[a]
+        return n
+    return d[axes]
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """Return axes (possibly shrunk) if dim divides their product, else None."""
+    if axes is None:
+        return None
+    cand = tuple(a for a in (axes if isinstance(axes, tuple) else (axes,))
+                 if a in mesh.axis_names)
+    while cand:
+        if dim % _size(mesh, cand) == 0 and dim > 0:
+            return cand if len(cand) > 1 else cand[0]
+        cand = cand[1:]          # drop the leading ("pod") axis and retry
+    return None
+
+
+DP = ("pod", "data")
+
+# serve-time parameter rules: no FSDP (there are no optimizer states to
+# amortize per-layer gathers against) — weights shard over "model" only and
+# replicate over "data", so decode/prefill steps have zero weight gathers
+SERVE_RULES = {
+    "embed": (),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "inner": ("model",),
+    "state": (), "head_dim": (), "layers": (), "conv": (), "qkv": (),
+}
+
+
+def _leaf_pspec(name: str, shape: Tuple[int, ...], mesh: Mesh,
+                seq_shard_kv: bool = False) -> P:
+    """Input-tree leaf -> PartitionSpec, keyed by the leaf's dict name."""
+    if name in ("tokens", "labels", "token"):
+        return P(_fit(mesh, shape[0], DP), None)
+    if name == "positions":
+        return P(_fit(mesh, shape[0], DP), None, None)
+    if name == "enc_embeds":
+        return P(_fit(mesh, shape[0], DP), None, None)
+    if name in ("k", "v", "ck", "cv"):           # [L, B, S, KH, Dh]
+        head_fit = _fit(mesh, shape[3], "model")
+        if seq_shard_kv or head_fit is None:      # flash-decoding layout:
+            # shard the cache seq dim when kv heads don't divide the TP axis
+            return P(None, _fit(mesh, shape[1], DP), _fit(mesh, shape[2], "model"),
+                     None, None)
+        return P(None, _fit(mesh, shape[1], DP), None, head_fit, None)
+    if name == "ssm":                             # [L, B, H, P, N]
+        return P(None, _fit(mesh, shape[1], DP), _fit(mesh, shape[2], "model"),
+                 None, None)
+    if name == "conv":                            # [L, B, K-1, C]
+        return P(None, _fit(mesh, shape[1], DP), None,
+                 _fit(mesh, shape[3], "model"))
+    if name == "len":
+        return P()
+    # fallback: shard leading dim over DP when divisible
+    return P(_fit(mesh, shape[0], DP), *([None] * (len(shape) - 1)))
+
+
+def input_shardings(tree, mesh: Mesh, seq_shard_kv: bool = False):
+    """Same-structure tree of NamedShardings for a batch/cache dict."""
+    def walk(name, node):
+        if isinstance(node, dict):
+            return {k: walk(k, v) for k, v in node.items()}
+        shape = node.shape
+        return NamedSharding(mesh, _leaf_pspec(name, shape, mesh, seq_shard_kv))
+    return {k: walk(k, v) for k, v in tree.items()}

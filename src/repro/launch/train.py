@@ -1,0 +1,63 @@
+"""Train / prefill / decode step builders.
+
+``make_*_step`` return plain functions over (params, opt_state, batch) pytrees
+— jit/lower/compile is the caller's business (see dryrun.py and
+examples/train_lm.py), so the same step serves the 1-device smoke path and the
+512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import build
+from repro.optim import adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4, weight_decay: float = 0.1):
+    model = build(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params2, opt2, gnorm = adamw_update(params, grads, opt_state, lr,
+                                            weight_decay=weight_decay)
+        out = {"loss": loss, "gnorm": gnorm, **metrics}
+        return params2, opt2, out
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = build(cfg)
+
+    def decode_step(params, cache, batch):
+        logits, cache2 = model.decode(params, cache, batch)
+        # greedy next token (serving harness feeds it back)
+        nxt = jnp.argmax(logits[..., : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return nxt, cache2
+
+    return model, decode_step
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(params, opt_state) as ShapeDtypeStructs — for .lower() without
+    allocating 33B parameters on the host."""
+    model = build(cfg)
+    specs = model.param_specs()
+    from repro.models.module import abstract
+    params = abstract(specs)
+    opt = jax.eval_shape(adamw_init, params)
+    return model, params, opt

@@ -1,0 +1,586 @@
+"""Core NN layers: norms, RoPE / M-RoPE, GQA attention (dense + chunked
+online-softmax), SwiGLU MLP and sort-based top-k MoE.
+
+Layouts: activations ``[B, S, D]``; attention tensors ``[B, S, H, Dh]``.
+All matmuls run in ``compute_dtype`` (bf16 by default); softmax/statistics in
+fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .module import shard_activation, spec
+
+NEG_INF = -1.0e30
+
+
+@jax.custom_vjp
+def cast_grad_bf16(x):
+    """Identity forward; casts the cotangent to bf16 on the way back.
+
+    The CE loss emits f32 dlogits; without this boundary the f32 cotangent
+    flows down the whole residual stream and every backward TP all-reduce
+    moves f32 — 2x the bytes.  Placed at the unembed input."""
+    return x
+
+
+def _cg_fwd(x):
+    return x, None
+
+
+def _cg_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype) if g.dtype == jnp.float32
+            else g,)
+
+
+# real implementation: actually return bf16 cotangent (dtype must match the
+# primal, so we cast through bf16 to drop mantissa bits AND mark the boundary
+# by casting the primal input to bf16 in the caller instead)
+def _cg_bwd2(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+cast_grad_bf16.defvjp(_cg_fwd, _cg_bwd)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(half: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int."""
+    half = x.shape[-1] // 2
+    freqs = _rope_freqs(half, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions3: [B, S, 3] (t, h, w) ids.
+
+    Frequency slots are partitioned into (t, h, w) sections of ``sections``
+    half-dims; each slot uses the position id of its section.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(half, theta)
+    sec_id = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32),
+    ])                                                              # [half]
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (half,)),
+        axis=-1)                                                    # [B,S,half]
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _dense_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                     kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference O(S^2)-memory attention. q: [B,Sq,H,D]; k,v: [B,Sk,KH,D]."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(k.shape[1])[None] < kv_len[:, None]       # [B,Sk]
+        s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, Sq, H, D)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, chunk: int,
+                       seq_shard: bool = False) -> jax.Array:
+    """Online-softmax chunked attention (flash-style in pure XLA).
+
+    Memory is O(chunk^2) per (head, q-chunk); causal masking is applied per
+    block.  Fully-masked blocks are still *computed* (masked) — the Pallas
+    flash kernel (kernels/flash_attention.py) skips them on real TPUs; see
+    EXPERIMENTS.md §Perf for the block-skipping XLA variant.
+    """
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    cq = ck = min(chunk, S)
+    assert S % cq == 0 and S % ck == 0, (S, chunk)
+    nq, nk = S // cq, S // ck
+    scale = 1.0 / math.sqrt(D)
+
+    qc = q.reshape(B, nq, cq, KH, G, D)
+    kc = k.reshape(B, nk, ck, KH, D)
+    vc = v.reshape(B, nk, ck, KH, D)
+    if seq_shard:
+        # context parallelism: intra-chunk q rows over "model"; kv replicated.
+        # Stats are scan carries with a constant layout, which GSPMD
+        # partitions cleanly (unlike indexed updates).
+        qc = shard_activation(qc, (("pod", "data"), None, "model", None, None, None))
+        kc = shard_activation(kc, (("pod", "data"), None, None, None, None))
+        vc = shard_activation(vc, (("pod", "data"), None, None, None, None))
+
+    def q_block(_, qx):
+        qi, qb = qx                                                 # qb [B,cq,KH,G,D]
+        m0 = jnp.full((B, KH, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, cq, D), jnp.float32)
+        if seq_shard:
+            m0 = shard_activation(m0, (("pod", "data"), None, None, "model"))
+            l0 = shard_activation(l0, (("pod", "data"), None, None, "model"))
+            a0 = shard_activation(a0, (("pod", "data"), None, None, "model", None))
+
+        def kv_block(carry, kx):
+            m, l, acc = carry
+            kj, kb, vb = kx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)
+                kpos = kj * ck + jnp.arange(ck)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = lax.scan(kv_block, (m0, l0, a0),
+                                  (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)))
+        o = acc / jnp.maximum(l, 1e-37)[..., None]                  # [B,KH,G,cq,D]
+        return None, o.transpose(0, 3, 1, 2, 4)                     # [B,cq,KH,G,D]
+
+    _, ob = lax.scan(q_block, None, (jnp.arange(nq), qc.swapaxes(0, 1)))
+    o = ob.swapaxes(0, 1).reshape(B, S, KH, G, D)                   # [B,nq*cq,...]
+    o = o.reshape(B, S, H, D).astype(q.dtype)
+    if seq_shard:
+        # stay seq-sharded for the (replicated-weight) output projection
+        o = shard_activation(o, (("pod", "data"), "model", None, None))
+    return o
+
+
+def _tri_chunked_attention(q, k, v, *, chunk: int, seq_shard: bool = False) -> jax.Array:
+    """Causal chunked attention over the LOWER-TRIANGLE block pairs only.
+
+    A flat scan walks the n(n+1)/2 valid (q-chunk, kv-chunk) pairs in
+    (i, j<=i) order, maintaining online-softmax stats per q chunk — exactly
+    half the FLOPs/temporaries of the masked full grid (the XLA analogue of
+    the Pallas kernel's pl.when block skip).
+
+    ``seq_shard``: shard the intra-chunk q dim over "model" — context
+    parallelism for architectures whose head count does not divide the TP
+    axis (scores/temps shard 16x; kv stays replicated).
+    """
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    c = min(chunk, S)
+    assert S % c == 0
+    n = S // c
+    scale = 1.0 / math.sqrt(D)
+
+    qc = q.reshape(B, n, c, KH, G, D)
+    kc = k.reshape(B, n, c, KH, D)
+    vc = v.reshape(B, n, c, KH, D)
+    if seq_shard:
+        qc = shard_activation(qc, (("pod", "data"), None, "model", None, None, None))
+        # every q chunk needs the full kv: gather once before the pair scan
+        kc = shard_activation(kc, (("pod", "data"), None, None, None, None))
+        vc = shard_activation(vc, (("pod", "data"), None, None, None, None))
+
+    pairs_i, pairs_j = [], []
+    for i in range(n):
+        for j in range(i + 1):
+            pairs_i.append(i)
+            pairs_j.append(j)
+    ii = jnp.asarray(pairs_i, jnp.int32)
+    jj = jnp.asarray(pairs_j, jnp.int32)
+
+    m0 = jnp.full((B, n, KH, G, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, n, KH, G, c), jnp.float32)
+    a0 = jnp.zeros((B, n, KH, G, c, D), jnp.float32)
+    if seq_shard:
+        sa5 = (("pod", "data"), None, None, None, "model")
+        m0 = shard_activation(m0, sa5)
+        l0 = shard_activation(l0, sa5)
+        a0 = shard_activation(a0, sa5 + (None,))
+
+    def pair(carry, idx):
+        m, l, acc = carry
+        i, j = idx
+        qb = lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)   # [B,c,KH,G,D]
+        kb = lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vb = lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = i * c + jnp.arange(c)
+        kpos = j * c + jnp.arange(c)
+        s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+
+        mi = lax.dynamic_index_in_dim(m, i, 1, keepdims=False)    # [B,KH,G,c]
+        li = lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        ai = lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        m = lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        acc = lax.dynamic_update_index_in_dim(acc, a_new, i, 1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = lax.scan(pair, (m0, l0, a0), (ii, jj))
+    o = acc / jnp.maximum(l, 1e-37)[..., None]                    # [B,n,KH,G,c,D]
+    o = o.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, KH, G, D)
+    o = o.reshape(B, S, H, D).astype(q.dtype)
+    if seq_shard:
+        # stay seq-sharded for the (replicated-weight) output projection
+        o = shard_activation(o, (("pod", "data"), "model", None, None))
+    return o
+
+
+def attention(q, k, v, *, causal: bool = True, chunk: int = 512,
+              q_offset: int = 0, kv_len: Optional[jax.Array] = None,
+              seq_shard: bool = False, impl: str = "masked") -> jax.Array:
+    """Dispatch: dense for short/decode, chunked online-softmax for long.
+
+    impl="tri" (triangular pair scan) halves causal FLOPs but its indexed
+    carry updates cost more XLA memory traffic than they save (measured:
+    yi-9b prefill m 5.9->11.9 s) — the Pallas flash kernel implements the
+    same skip in VMEM scratch where it is free, so "masked" is the XLA
+    default and "tri" stays opt-in."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq == 1 or Sk <= chunk or Sq != Sk or kv_len is not None:
+        return _dense_attention(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    if seq_shard:
+        return _chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                  seq_shard=True)
+    if causal and impl == "tri":
+        return _tri_chunked_attention(q, k, v, chunk=chunk)
+    return _chunked_attention(q, k, v, causal=causal, chunk=chunk)
+
+
+def decode_attention(q, K, V, k_new, v_new, kv_len,
+                     seq_shard: bool = False) -> jax.Array:
+    """One-token attention against a READ-ONLY cache plus the new token.
+
+    Avoids writing the new KV into the (multi-GB) cache before attending:
+    the scan body never copies the cache (it is consumed as read-only xs);
+    the single new-token slice is written once after the layer scan, which
+    XLA aliases in place under buffer donation.
+
+    q: [B,1,H,D]; K/V: [B,S,KH,D] (entries >= kv_len are stale);
+    k_new/v_new: [B,1,KH,D]; kv_len: [B].
+
+    ``seq_shard``: the cache is seq-sharded over "model" (flash-decoding) —
+    anchor the score partition on the seq dim so GSPMD keeps the cache
+    sharded and replicates the (tiny) q instead of gathering the cache.
+    """
+    B, _, H, D = q.shape
+    KH = K.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, D)
+    if seq_shard:
+        qg = shard_activation(qg, (("pod", "data"), None, None, None))
+    s_old = jnp.einsum("bkgd,bskd->bkgs", qg, K,
+                       preferred_element_type=jnp.float32) * scale    # [B,KH,G,S]
+    if seq_shard:
+        s_old = shard_activation(s_old, (("pod", "data"), None, None, "model"))
+    valid = jnp.arange(K.shape[1])[None] < kv_len[:, None]            # [B,S]
+    s_old = jnp.where(valid[:, None, None], s_old, NEG_INF)
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg, k_new[:, 0],
+                       preferred_element_type=jnp.float32)[..., None] * scale
+    s = jnp.concatenate([s_old, s_new], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p[..., :-1].astype(V.dtype), V)
+    o = o + p[..., -1:].astype(V.dtype) * v_new[:, 0][:, :, None, :]
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + forward)
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, layers: Optional[int] = None):
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.param_dtype
+    L = (layers,) if layers else ()
+    La = ("layers",) if layers else ()
+    # context-parallel archs replicate attention weights over "model" (their
+    # head counts don't divide the TP axis; sharding the flat H*hd dim would
+    # force an all-gather at the [B,S,H,hd] reshape)
+    hx = None if cfg.attn_seq_shard else "heads"
+    kx = None if cfg.attn_seq_shard else "kv_heads"
+    p = {
+        "wq": spec(L + (d, H * hd), La + ("embed", hx), dtype=dt),
+        "wk": spec(L + (d, KH * hd), La + ("embed", kx), dtype=dt),
+        "wv": spec(L + (d, KH * hd), La + ("embed", kx), dtype=dt),
+        "wo": spec(L + (H * hd, d), La + (hx, "embed"), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = spec(L + (H * hd,), La + ("heads",), dtype=dt, init="zeros")
+        p["bk"] = spec(L + (KH * hd,), La + ("kv_heads",), dtype=dt, init="zeros")
+        p["bv"] = spec(L + (KH * hd,), La + ("kv_heads",), dtype=dt, init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = spec(L + (hd,), La + ("head_dim",), dtype=dt, init="ones")
+        p["k_norm"] = spec(L + (hd,), La + ("head_dim",), dtype=dt, init="ones")
+    return p
+
+
+def attn_qkv(p, x, cfg: ModelConfig, positions=None):
+    """Project to (q, k, v) with RoPE / M-RoPE / qk-norm applied.
+
+    attn_seq_shard: the whole attention region (projections included) is
+    context-parallel — input sliced over the seq dim on "model" (free),
+    projections run on replicated weights at 1/TP cost each."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    cd = cfg.compute_dtype
+    if cfg.attn_seq_shard and S > 1:
+        x = shard_activation(x, (("pod", "data"), "model", None))
+    xq = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(cd))
+    xk = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(cd))
+    xv = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        xq = xq + p["bq"].astype(cd)
+        xk = xk + p["bk"].astype(cd)
+        xv = xv + p["bv"].astype(cd)
+    q = xq.reshape(B, S, cfg.n_heads, hd)
+    k = xk.reshape(B, S, cfg.n_kv_heads, hd)
+    v = xv.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    if not cfg.attn_seq_shard:
+        q = shard_activation(q, (("pod", "data"), None, "model", None))
+        k = shard_activation(k, (("pod", "data"), None, "model", None))
+        v = shard_activation(v, (("pod", "data"), None, "model", None))
+    return q, k, v
+
+
+def attn_out(p, o, cfg: ModelConfig):
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d: int, ff: int, layers: Optional[int] = None, dtype=None):
+    import jax.numpy as _jnp
+    dt = dtype if dtype is not None else _jnp.float32
+    L = (layers,) if layers else ()
+    La = ("layers",) if layers else ()
+    return {
+        "w1": spec(L + (d, ff), La + ("embed", "mlp"), dtype=dt),
+        "w3": spec(L + (d, ff), La + ("embed", "mlp"), dtype=dt),
+        "w2": spec(L + (ff, d), La + ("mlp", "embed"), dtype=dt),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    cd = cfg.compute_dtype
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(cd))) \
+        * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(cd))
+    h = shard_activation(h, (("pod", "data"), None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(cd))
+
+
+def moe_specs(cfg: ModelConfig, layers: Optional[int] = None):
+    d, fe, E = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    L = (layers,) if layers else ()
+    La = ("layers",) if layers else ()
+    dt = cfg.param_dtype
+    p = {
+        "router": spec(L + (d, E), La + ("embed", None), dtype=dt,
+                       scale=1.0 / math.sqrt(d)),
+        "we1": spec(L + (E, d, fe), La + ("experts", "embed", "expert_mlp"), dtype=dt),
+        "we3": spec(L + (E, d, fe), La + ("experts", "embed", "expert_mlp"), dtype=dt),
+        "we2": spec(L + (E, fe, d), La + ("experts", "expert_mlp", "embed"), dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_specs(d, cfg.n_shared_experts * fe, layers, dtype=dt)
+    return p
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """Token-choice top-k MoE with *per-batch-row* sort-based dispatch.
+
+    The sort/pack runs independently per batch row (vmap-style batched ops),
+    so the data-parallel sharding of ``B`` is preserved end-to-end and GSPMD
+    never has to sort across shards; the only cross-shard movement is the
+    token buffer crossing from the data axis to the EP ("model") axis, which
+    lowers to an all-to-all.  Capacity overflow drops (static shapes).
+    """
+    B, S, D = x.shape
+    cd = cfg.compute_dtype
+    E, K = cfg.n_experts, cfg.top_k
+    T = S * K                                                        # per row
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(probs, K)                                 # [B,S,K]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style), per row then averaged
+    me = probs.mean(axis=1)                                          # [B,E]
+    hot = jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(axis=(1, 2)) / T
+    aux = (E * (me * hot).sum(axis=-1)).mean()
+
+    C = int(math.ceil(T / E * cfg.capacity_factor))
+    C = max(4, ((C + 3) // 4) * 4)
+
+    dp2 = (("pod", "data"), None)
+    dp3 = (("pod", "data"), None, None)
+    flat_e = topi.reshape(B, T)                                      # [B,T]
+    order = shard_activation(jnp.argsort(flat_e, axis=-1), dp2)
+    sorted_e = shard_activation(jnp.take_along_axis(flat_e, order, axis=-1), dp2)
+    rank = jnp.arange(T)[None, :] - jax.vmap(
+        lambda a: jnp.searchsorted(a, a, side="left"))(sorted_e)
+    rank = shard_activation(rank, dp2)
+    keep = rank < C
+    dest = shard_activation(jnp.where(keep, sorted_e * C + rank, E * C), dp2)
+    src_tok = shard_activation(order // K, dp2)                      # [B,T]
+
+    # vmap'd per-row gather/scatter: index tensors stay [T, 1] per row instead
+    # of the [B, T, D] broadcast take_along_axis would build (which GSPMD
+    # replicates into multi-GB u32 all-gathers)
+    gather_row = jax.vmap(lambda xb, ib: xb[ib])
+    scatter_row = jax.vmap(
+        lambda db, xb: jnp.zeros((E * C, D), cd).at[db].set(xb, mode="drop"))
+    xs = gather_row(x.astype(cd), src_tok)                           # [B,T,D]
+    xs = shard_activation(xs, dp3)
+    bidx = jnp.arange(B)[:, None]
+    buf = scatter_row(dest, xs)
+    buf = shard_activation(buf, dp3)
+    buf = buf.reshape(B, E, C, D)
+    buf = shard_activation(buf, (("pod", "data"), "model", None, None))  # EP
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["we1"].astype(cd))) \
+        * jnp.einsum("becd,edf->becf", buf, p["we3"].astype(cd))
+    y = jnp.einsum("becf,efd->becd", h, p["we2"].astype(cd))
+    y = shard_activation(y, (("pod", "data"), "model", None, None))
+    y = shard_activation(y.reshape(B, E * C, D), dp3)
+
+    safe = jnp.minimum(dest, E * C - 1)
+    contrib = jnp.where(keep[..., None], gather_row(y, safe), 0).astype(jnp.float32)
+    contrib = shard_activation(contrib, dp3)
+    w = jnp.take_along_axis(topv.reshape(B, T), order, axis=-1)
+    scatter_add_row = jax.vmap(
+        lambda ib, cb: jnp.zeros((S, D), jnp.float32).at[ib].add(cb))
+    out = scatter_add_row(src_tok, contrib * w[..., None])
+    out = shard_activation(out, dp3)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg).astype(jnp.float32)
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig):
+    dt = cfg.param_dtype
+    p = {"tok": spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                     dtype=dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                         dtype=dt)
+    return p
+
+
+def _gathered_table(w):
+    """Embedding/head table at use: vocab stays TP-sharded, FSDP dim gathered."""
+    from .module import fsdp_gather, spec as _spec
+    return fsdp_gather(w, _spec(w.shape, ("vocab", "embed")))
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = _gathered_table(p["tok"]).astype(cfg.compute_dtype)[tokens]
+    return shard_activation(x, (("pod", "data"), None, None))
+
+
+def unembed(p, x, cfg: ModelConfig):
+    head = _gathered_table(p.get("head", p["tok"]))
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cfg.compute_dtype),
+                        preferred_element_type=jnp.float32)
+    return shard_activation(logits, (("pod", "data"), None, "model"))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Masked token-mean CE; labels < 0 are ignored. logits fp32 [B,S,V]."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

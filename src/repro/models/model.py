@@ -1,0 +1,727 @@
+"""Composable model assembly for all supported families.
+
+Families:
+  dense / vlm  — decoder-only transformer (GQA, RoPE or M-RoPE, optional
+                 qk-norm / qkv-bias), SwiGLU MLP.
+  moe          — same backbone with token-choice top-k MoE FFN (+ shared experts).
+  ssm          — Mamba2 (SSD) stack, attention-free.
+  hybrid       — Zamba2-style: Mamba2 backbone with a *shared-weight*
+                 attention+MLP block applied every ``attn_every`` layers.
+  encdec       — encoder-decoder (Seamless text path); encoder input is
+                 precomputed frame embeddings (modality frontend stubbed per
+                 the assignment).
+
+Every family exposes:
+  param_specs() / init(rng)          — ParamSpec tree / materialized params
+  loss(params, batch)                — scalar loss + metrics (train_step body)
+  prefill(params, batch)             — full-sequence forward -> (logits_last, cache)
+  decode(params, cache, batch)       — one-token step -> (logits, cache)
+Layers are stacked and scanned (lax.scan) so deep configs compile fast; remat
+policy comes from the config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (attention, attn_out, attn_qkv, attn_specs, cross_entropy,
+                     decode_attention, embed, embed_specs, mlp, mlp_specs,
+                     moe_ffn, moe_specs, rmsnorm, unembed)
+from .module import fsdp_gather, materialize, shard_activation, spec
+from .ssm import (mamba2_decode_step, mamba2_forward, mamba2_specs)
+
+AUX_COEF = 0.01
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def default_positions(B: int, S: int, offset=0) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(S) + offset, (B, S))
+
+
+def _shard_cache(k):
+    return shard_activation(k, (None, ("pod", "data"), None, "model", None))
+
+
+# ===========================================================================
+# decoder-only LM (dense / moe / vlm)
+# ===========================================================================
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- params ----------------------------------------------------------
+    def param_specs(self):
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        blocks = {
+            "ln1": spec((L, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+            "ln2": spec((L, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+            "attn": attn_specs(cfg, layers=L),
+        }
+        if cfg.moe:
+            blocks["moe"] = moe_specs(cfg, layers=L)
+        else:
+            blocks["mlp"] = mlp_specs(d, cfg.d_ff, layers=L, dtype=cfg.param_dtype)
+        return {
+            "embed": embed_specs(cfg),
+            "blocks": blocks,
+            "final_norm": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+        }
+
+    def init(self, rng):
+        return materialize(self.param_specs(), rng)
+
+    def layer_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        ls = {
+            "ln1": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+            "ln2": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+            "attn": attn_specs(cfg),
+        }
+        if cfg.moe:
+            ls["moe"] = moe_specs(cfg)
+        else:
+            ls["mlp"] = mlp_specs(d, cfg.d_ff)
+        return ls
+
+    # ---- forward ----------------------------------------------------------
+    def _positions(self, batch, B, S):
+        if self.cfg.mrope:
+            return batch["positions"]                               # [B,S,3]
+        return batch.get("positions", default_positions(B, S))
+
+    def hidden(self, params, tokens, positions):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        # sequence-parallel residual stream (context-parallel archs): h stays
+        # seq-sharded over "model"; the MLP all-gathers its bf16 input and
+        # reduce-scatters its output (GSPMD folds AR+slice -> RS)
+        sp = cfg.attn_seq_shard and x.shape[1] > 1
+        if sp:
+            x = shard_activation(x, (("pod", "data"), "model", None))
+
+        lspecs = self.layer_specs()
+
+        def body(h, lp):
+            lp = fsdp_gather(lp, lspecs)
+            a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          seq_shard=cfg.attn_seq_shard)
+            h = h + attn_out(lp["attn"], o, cfg)
+            f_in = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.moe:
+                y, aux = moe_ffn(lp["moe"], f_in, cfg)
+                return h + y, aux
+            y = mlp(lp["mlp"], f_in, cfg)
+            if sp:
+                y = shard_activation(y, (("pod", "data"), "model", None))
+            return h + y, jnp.zeros((), jnp.float32)
+
+        h, aux = lax.scan(_remat(body, cfg), x, params["blocks"])
+        return rmsnorm(h, params["final_norm"], cfg.norm_eps), aux.mean()
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        h, aux = self.hidden(params, tokens, self._positions(batch, B, S))
+        logits = unembed(params["embed"], h, cfg)
+        ce = cross_entropy(logits, labels, cfg.padded_vocab)
+        return ce + AUX_COEF * aux, {"ce": ce, "aux": aux}
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = self._positions(batch, B, S)
+        x = embed(params["embed"], tokens, cfg)
+        sp = cfg.attn_seq_shard and S > 1
+        if sp:
+            x = shard_activation(x, (("pod", "data"), "model", None))
+
+        lspecs = self.layer_specs()
+
+        def body(h, lp):
+            lp = fsdp_gather(lp, lspecs)
+            a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          seq_shard=cfg.attn_seq_shard)
+            h = h + attn_out(lp["attn"], o, cfg)
+            f_in = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.moe:
+                y, _ = moe_ffn(lp["moe"], f_in, cfg)
+                h = h + y
+            else:
+                y = mlp(lp["mlp"], f_in, cfg)
+                if sp:
+                    y = shard_activation(y, (("pod", "data"), "model", None))
+                h = h + y
+            return h, (k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype))
+
+        h, (ks, vs) = lax.scan(_remat(body, cfg), x, params["blocks"])
+        h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        cache = {"k": _shard_cache(ks), "v": _shard_cache(vs),
+                 "len": jnp.int32(S)}
+        return logits, cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        token = batch["token"]                                      # [B,1]
+        B = token.shape[0]
+        pos = cache["len"]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(pos, (B, 1, 3)).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        x = embed(params["embed"], token, cfg)
+        kv_len = jnp.broadcast_to(pos, (B,))      # cache entries < pos are live
+
+        lspecs = self.layer_specs()
+
+        def body(h, xs):
+            lp, ck, cv = xs                        # cache consumed READ-ONLY
+            lp = fsdp_gather(lp, lspecs)
+            a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = decode_attention(q, ck, cv, k.astype(ck.dtype),
+                                 v.astype(cv.dtype), kv_len,
+                                 seq_shard=cfg.decode_seq_shard)
+            h = h + attn_out(lp["attn"], o, cfg)
+            f_in = rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.moe:
+                y, _ = moe_ffn(lp["moe"], f_in, cfg)
+                h = h + y
+            else:
+                h = h + mlp(lp["mlp"], f_in, cfg)
+            return h, (k.astype(ck.dtype), v.astype(cv.dtype))
+
+        h, (kn, vn) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        # one tiny in-place write per step (aliases under donation)
+        ks = lax.dynamic_update_slice(cache["k"], kn, (0, 0, pos, 0, 0))
+        vs = lax.dynamic_update_slice(cache["v"], vn, (0, 0, pos, 0, 0))
+        return logits, {"k": ks, "v": vs, "len": pos + 1}
+
+    def init_cache(self, B: int, max_len: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, B, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                "v": jnp.zeros(shape, cfg.compute_dtype),
+                "len": jnp.int32(0)}
+
+
+# ===========================================================================
+# Mamba2 (ssm)
+# ===========================================================================
+
+class SSMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_specs(self):
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        return {
+            "embed": embed_specs(cfg),
+            "blocks": {
+                "ln": spec((L, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "mix": mamba2_specs(cfg, layers=L),
+            },
+            "final_norm": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+        }
+
+    def init(self, rng):
+        return materialize(self.param_specs(), rng)
+
+    def layer_specs(self):
+        cfg = self.cfg
+        return {"ln": spec((cfg.d_model,), ("embed",), init="ones"),
+                "mix": mamba2_specs(cfg)}
+
+    def hidden(self, params, tokens):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        lspecs = self.layer_specs()
+
+        def body(h, lp):
+            lp = fsdp_gather(lp, lspecs)
+            y, _, _ = mamba2_forward(lp["mix"], rmsnorm(h, lp["ln"], cfg.norm_eps), cfg)
+            return h + y, None
+
+        h, _ = lax.scan(_remat(body, cfg), x, params["blocks"])
+        return rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self.hidden(params, batch["tokens"])
+        logits = unembed(params["embed"], h, cfg)
+        ce = cross_entropy(logits, batch["labels"], cfg.padded_vocab)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, cfg)
+
+        lspecs = self.layer_specs()
+
+        def body(h, lp):
+            lp = fsdp_gather(lp, lspecs)
+            y, st, tail = mamba2_forward(lp["mix"], rmsnorm(h, lp["ln"], cfg.norm_eps), cfg)
+            return h + y, (st, tail)
+
+        h, (states, tails) = lax.scan(_remat(body, cfg), x, params["blocks"])
+        h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        B = tokens.shape[0]
+        cache = {"ssm": states.astype(jnp.float32),
+                 "conv": tails,
+                 "len": jnp.int32(tokens.shape[1])}
+        return logits, cache
+
+    def _zero_conv(self, B):
+        cfg = self.cfg
+        convc = cfg.d_inner + 2 * cfg.d_state
+        return jnp.zeros((cfg.n_layers, B, cfg.d_conv - 1, convc), cfg.compute_dtype)
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        token = batch["token"]
+        x = embed(params["embed"], token, cfg)
+
+        lspecs = self.layer_specs()
+
+        def body(h, xs):
+            lp, st, cv = xs
+            lp = fsdp_gather(lp, lspecs)
+            y, st2, cv2 = mamba2_decode_step(
+                lp["mix"], rmsnorm(h, lp["ln"], cfg.norm_eps), cfg, st, cv)
+            return h + y, (st2, cv2)
+
+        h, (ssm, conv) = lax.scan(body, x, (params["blocks"], cache["ssm"], cache["conv"]))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        return logits, {"ssm": ssm, "conv": conv, "len": cache["len"] + 1}
+
+    def init_cache(self, B: int, max_len: int = 0):
+        cfg = self.cfg
+        ssm = jnp.zeros((cfg.n_layers, B, cfg.ssm_heads, cfg.headdim, cfg.d_state),
+                        jnp.float32)
+        return {"ssm": ssm, "conv": self._zero_conv(B), "len": jnp.int32(0)}
+
+
+# ===========================================================================
+# hybrid (zamba2): mamba backbone + shared attention block per group
+# ===========================================================================
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.attn_every
+
+    def param_specs(self):
+        cfg = self.cfg
+        L, d = cfg.n_layers, cfg.d_model
+        return {
+            "embed": embed_specs(cfg),
+            "mamba": {
+                "ln": spec((L, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "mix": mamba2_specs(cfg, layers=L),
+            },
+            "shared": {
+                "ln1": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "attn": attn_specs(cfg),
+                "ln2": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "mlp": mlp_specs(d, cfg.d_ff, dtype=cfg.param_dtype),
+            },
+            "final_norm": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+        }
+
+    def init(self, rng):
+        return materialize(self.param_specs(), rng)
+
+    def _grouped(self, params):
+        G, E = self.n_groups, self.cfg.attn_every
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape((G, E) + a.shape[1:]), params["mamba"])
+
+    def layer_specs(self):
+        cfg = self.cfg
+        return {"ln": spec((cfg.d_model,), ("embed",), init="ones"),
+                "mix": mamba2_specs(cfg)}
+
+    def shared_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "attn": attn_specs(cfg),
+                "ln2": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "mlp": mlp_specs(d, cfg.d_ff, dtype=cfg.param_dtype)}
+
+    def hidden(self, params, tokens, positions):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+        sp = fsdp_gather(params["shared"], self.shared_specs())
+        lspecs = self.layer_specs()
+
+        def group(h, gp):
+            a_in = rmsnorm(h, sp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(sp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          seq_shard=cfg.attn_seq_shard)
+            h = h + attn_out(sp["attn"], o, cfg)
+            h = h + mlp(sp["mlp"], rmsnorm(h, sp["ln2"], cfg.norm_eps), cfg)
+
+            def mblock(hh, lp):
+                lp = fsdp_gather(lp, lspecs)
+                y, _, _ = mamba2_forward(lp["mix"], rmsnorm(hh, lp["ln"], cfg.norm_eps), cfg)
+                return hh + y, None
+
+            h, _ = lax.scan(mblock, h, gp)
+            return h, None
+
+        h, _ = lax.scan(_remat(group, cfg), x, self._grouped(params))
+        return rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = self.hidden(params, tokens, default_positions(B, S))
+        logits = unembed(params["embed"], h, cfg)
+        ce = cross_entropy(logits, batch["labels"], cfg.padded_vocab)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = default_positions(B, S)
+        x = embed(params["embed"], tokens, cfg)
+        sp = fsdp_gather(params["shared"], self.shared_specs())
+        lspecs = self.layer_specs()
+
+        def group(h, gp):
+            a_in = rmsnorm(h, sp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(sp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          seq_shard=cfg.attn_seq_shard)
+            h = h + attn_out(sp["attn"], o, cfg)
+            h = h + mlp(sp["mlp"], rmsnorm(h, sp["ln2"], cfg.norm_eps), cfg)
+
+            def mblock(hh, lp):
+                lp = fsdp_gather(lp, lspecs)
+                y, st, tail = mamba2_forward(lp["mix"], rmsnorm(hh, lp["ln"], cfg.norm_eps), cfg)
+                return hh + y, (st, tail)
+
+            h, (sts, tls) = lax.scan(mblock, h, gp)
+            return h, (k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype), sts, tls)
+
+        h, (ks, vs, ssm, tails) = lax.scan(_remat(group, cfg), x, self._grouped(params))
+        h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        G, E = self.n_groups, cfg.attn_every
+        convc = cfg.d_inner + 2 * cfg.d_state
+        cache = {
+            "k": _shard_cache(ks), "v": _shard_cache(vs),
+            "ssm": ssm.reshape((G * E,) + ssm.shape[2:]).astype(jnp.float32),
+            "conv": tails.reshape((G * E,) + tails.shape[2:]),
+            "len": jnp.int32(S),
+        }
+        return logits, cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        token = batch["token"]
+        B = token.shape[0]
+        pos = cache["len"]
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        kv_len = jnp.broadcast_to(pos, (B,))      # cache entries < pos are live
+        x = embed(params["embed"], token, cfg)
+        sp = params["shared"]
+        G, E = self.n_groups, cfg.attn_every
+        ssm = cache["ssm"].reshape((G, E) + cache["ssm"].shape[1:])
+        conv = cache["conv"].reshape((G, E) + cache["conv"].shape[1:])
+        sp = fsdp_gather(sp, self.shared_specs())
+        lspecs = self.layer_specs()
+
+        def group(h, xs):
+            gp, ck, cv, st, cvs = xs               # kv caches READ-ONLY
+            a_in = rmsnorm(h, sp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(sp["attn"], a_in, cfg, positions)
+            o = decode_attention(q, ck, cv, k.astype(ck.dtype),
+                                 v.astype(cv.dtype), kv_len,
+                                 seq_shard=cfg.decode_seq_shard)
+            h = h + attn_out(sp["attn"], o, cfg)
+            h = h + mlp(sp["mlp"], rmsnorm(h, sp["ln2"], cfg.norm_eps), cfg)
+
+            def mblock(hh, ys):
+                lp, s1, c1 = ys
+                lp = fsdp_gather(lp, lspecs)
+                y, s2, c2 = mamba2_decode_step(
+                    lp["mix"], rmsnorm(hh, lp["ln"], cfg.norm_eps), cfg, s1, c1)
+                return hh + y, (s2, c2)
+
+            h, (st2, cvs2) = lax.scan(mblock, h, (gp, st, cvs))
+            return h, (k.astype(ck.dtype), v.astype(cv.dtype), st2, cvs2)
+
+        h, (kn, vn, ssm2, conv2) = lax.scan(
+            group, x, (self._grouped(params), cache["k"], cache["v"], ssm, conv))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        ks = lax.dynamic_update_slice(cache["k"], kn, (0, 0, pos, 0, 0))
+        vs = lax.dynamic_update_slice(cache["v"], vn, (0, 0, pos, 0, 0))
+        return logits, {
+            "k": ks, "v": vs,
+            "ssm": ssm2.reshape((G * E,) + ssm2.shape[2:]),
+            "conv": conv2.reshape((G * E,) + conv2.shape[2:]),
+            "len": pos + 1,
+        }
+
+    def init_cache(self, B: int, max_len: int):
+        cfg = self.cfg
+        G = self.n_groups
+        convc = cfg.d_inner + 2 * cfg.d_state
+        return {
+            "k": jnp.zeros((G, B, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.compute_dtype),
+            "v": jnp.zeros((G, B, max_len, cfg.n_kv_heads, cfg.head_dim), cfg.compute_dtype),
+            "ssm": jnp.zeros((cfg.n_layers, B, cfg.ssm_heads, cfg.headdim, cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, B, cfg.d_conv - 1, convc), cfg.compute_dtype),
+            "len": jnp.int32(0),
+        }
+
+
+# ===========================================================================
+# encoder-decoder (seamless text path)
+# ===========================================================================
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        Le, Ld = cfg.n_enc_layers, cfg.n_layers
+        return {
+            "embed": embed_specs(cfg),
+            "enc": {
+                "ln1": spec((Le, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "attn": attn_specs(cfg, layers=Le),
+                "ln2": spec((Le, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "mlp": mlp_specs(d, cfg.d_ff, layers=Le, dtype=cfg.param_dtype),
+            },
+            "enc_norm": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+            "dec": {
+                "ln1": spec((Ld, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "attn": attn_specs(cfg, layers=Ld),
+                "ln2": spec((Ld, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "xattn": attn_specs(cfg, layers=Ld),
+                "ln3": spec((Ld, d), ("layers", "embed"), dtype=cfg.param_dtype, init="ones"),
+                "mlp": mlp_specs(d, cfg.d_ff, layers=Ld, dtype=cfg.param_dtype),
+            },
+            "final_norm": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+        }
+
+    def init(self, rng):
+        return materialize(self.param_specs(), rng)
+
+    def enc_layer_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "attn": attn_specs(cfg),
+                "ln2": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "mlp": mlp_specs(d, cfg.d_ff, dtype=cfg.param_dtype)}
+
+    def dec_layer_specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "attn": attn_specs(cfg),
+                "ln2": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "xattn": attn_specs(cfg),
+                "ln3": spec((d,), ("embed",), dtype=cfg.param_dtype, init="ones"),
+                "mlp": mlp_specs(d, cfg.d_ff, dtype=cfg.param_dtype)}
+
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        B, S, _ = enc_embeds.shape
+        positions = default_positions(B, S)
+        h = enc_embeds.astype(cfg.compute_dtype)
+        especs = self.enc_layer_specs()
+
+        def body(hh, lp):
+            lp = fsdp_gather(lp, especs)
+            a_in = rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+            hh = hh + attn_out(lp["attn"], o, cfg)
+            hh = hh + mlp(lp["mlp"], rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg)
+            return hh, None
+
+        h, _ = lax.scan(_remat(body, cfg), h, params["enc"])
+        return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, lp, enc_out):
+        cfg = self.cfg
+        cd = cfg.compute_dtype
+        B, S, _ = enc_out.shape
+        k = jnp.einsum("bsd,dh->bsh", enc_out, lp["wk"].astype(cd))
+        v = jnp.einsum("bsd,dh->bsh", enc_out, lp["wv"].astype(cd))
+        return (k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim))
+
+    def _cross_q(self, lp, x):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        q = jnp.einsum("bsd,dh->bsh", x, lp["wq"].astype(cfg.compute_dtype))
+        return q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+
+    def decode_hidden(self, params, tokens, enc_out, positions):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, cfg)
+
+        lspecs = self.dec_layer_specs()
+
+        def body(h, lp):
+            lp = fsdp_gather(lp, lspecs)
+            a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          seq_shard=cfg.attn_seq_shard)
+            h = h + attn_out(lp["attn"], o, cfg)
+            xq = self._cross_q(lp["xattn"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            ck, cv = self._cross_kv(lp["xattn"], enc_out)
+            xo = attention(xq, ck, cv, causal=False, chunk=cfg.attn_chunk)
+            h = h + attn_out(lp["xattn"], xo, cfg)
+            h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps), cfg)
+            return h, None
+
+        h, _ = lax.scan(_remat(body, cfg), x, params["dec"])
+        return rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        enc_out = self.encode(params, batch["enc_embeds"])
+        h = self.decode_hidden(params, tokens, enc_out, default_positions(B, S))
+        logits = unembed(params["embed"], h, cfg)
+        ce = cross_entropy(logits, labels, cfg.padded_vocab)
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = default_positions(B, S)
+        enc_out = self.encode(params, batch["enc_embeds"])
+        x = embed(params["embed"], tokens, cfg)
+
+        lspecs = self.dec_layer_specs()
+
+        def body(h, lp):
+            lp = fsdp_gather(lp, lspecs)
+            a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          seq_shard=cfg.attn_seq_shard)
+            h = h + attn_out(lp["attn"], o, cfg)
+            xq = self._cross_q(lp["xattn"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            ck, cv = self._cross_kv(lp["xattn"], enc_out)
+            xo = attention(xq, ck, cv, causal=False, chunk=cfg.attn_chunk)
+            h = h + attn_out(lp["xattn"], xo, cfg)
+            h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps), cfg)
+            return h, (k.astype(cfg.compute_dtype), v.astype(cfg.compute_dtype),
+                       ck.astype(cfg.compute_dtype), cv.astype(cfg.compute_dtype))
+
+        h, (ks, vs, cks, cvs) = lax.scan(_remat(body, cfg), x, params["dec"])
+        h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        cache = {"k": _shard_cache(ks), "v": _shard_cache(vs),
+                 "ck": _shard_cache(cks), "cv": _shard_cache(cvs),
+                 "len": jnp.int32(S)}
+        return logits, cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        token = batch["token"]
+        B = token.shape[0]
+        pos = cache["len"]
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        kv_len = jnp.broadcast_to(pos, (B,))
+        x = embed(params["embed"], token, cfg)
+
+        dspecs = self.dec_layer_specs()
+
+        def body(h, xs):
+            lp, ck, cv, xk, xv = xs                # caches READ-ONLY
+            lp = fsdp_gather(lp, dspecs)
+            a_in = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], a_in, cfg, positions)
+            o = decode_attention(q, ck, cv, k.astype(ck.dtype),
+                                 v.astype(cv.dtype), kv_len,
+                                 seq_shard=cfg.decode_seq_shard)
+            h = h + attn_out(lp["attn"], o, cfg)
+            xq = self._cross_q(lp["xattn"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            xo = attention(xq, xk, xv, causal=False)
+            h = h + attn_out(lp["xattn"], xo, cfg)
+            h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps), cfg)
+            return h, (k.astype(ck.dtype), v.astype(cv.dtype))
+
+        h, (kn, vn) = lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"], cache["ck"], cache["cv"]))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg)
+        ks = lax.dynamic_update_slice(cache["k"], kn, (0, 0, pos, 0, 0))
+        vs = lax.dynamic_update_slice(cache["v"], vn, (0, 0, pos, 0, 0))
+        return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                        "len": pos + 1}
+
+    def init_cache(self, B: int, max_len: int, src_len: int):
+        cfg = self.cfg
+        kd = (cfg.n_layers, B, max_len, cfg.n_kv_heads, cfg.head_dim)
+        xd = (cfg.n_layers, B, src_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kd, cfg.compute_dtype),
+                "v": jnp.zeros(kd, cfg.compute_dtype),
+                "ck": jnp.zeros(xd, cfg.compute_dtype),
+                "cv": jnp.zeros(xd, cfg.compute_dtype),
+                "len": jnp.int32(0)}
+
+
+# ===========================================================================
+# registry
+# ===========================================================================
+
+def build(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return SSMModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

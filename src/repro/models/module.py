@@ -1,0 +1,247 @@
+"""Minimal functional module system.
+
+Models are described as nested dicts of :class:`ParamSpec`.  A spec tree can be
+
+* ``materialize``d into real arrays (smoke tests, examples),
+* ``abstract``ed into ``ShapeDtypeStruct``s (multi-pod dry-run — no allocation),
+* ``partition_specs``'d into ``PartitionSpec``s via divisibility-aware logical
+  axis rules (the distribution layer).
+
+Forward functions are plain JAX functions over the materialized pytree, so the
+same model code serves smoke tests (1 CPU device), the 512-device dry-run and a
+real TPU pod.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[Optional[str], ...]   # one logical axis name (or None) per dim
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+
+def spec(shape, axes, dtype=jnp.float32, init="normal", scale=None) -> ParamSpec:
+    shape = tuple(int(s) for s in shape)
+    assert len(shape) == len(axes), (shape, axes)
+    if scale is None:
+        # fan-in scaled normal by default
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return ParamSpec(shape, dtype, tuple(axes), init, float(scale))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(f: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# materialization / abstraction
+# ---------------------------------------------------------------------------
+
+def materialize(specs, rng: jax.Array):
+    """Instantiate real parameter arrays (used by smoke tests and examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(specs, sharding_fn: Optional[Callable[[ParamSpec], Any]] = None):
+    """ShapeDtypeStruct tree — shape-only stand-ins for .lower()."""
+    def mk(s: ParamSpec):
+        sh = sharding_fn(s) if sharding_fn is not None else None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return tree_map_specs(mk, specs)
+
+
+# ---------------------------------------------------------------------------
+# logical axis rules → PartitionSpec
+# ---------------------------------------------------------------------------
+
+# Baseline parameter-sharding rules.  Each logical axis maps to an ordered list
+# of candidate mesh axes; the first unused mesh axis whose size divides the dim
+# is taken.  ``embed`` rides the FSDP ("data") axis; TP-ish dims ride "model".
+DEFAULT_PARAM_RULES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),        # FSDP: weights gathered per-layer under scan
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),     # expert parallelism
+    "expert_mlp": (),
+    "inner": ("model",),       # ssm inner channels
+    "state": (),
+    "head_dim": (),
+    "layers": (),
+    "conv": (),
+    "qkv": (),
+}
+
+_local = threading.local()
+
+
+def set_param_rules(rules: Optional[Dict[str, Tuple[str, ...]]]) -> None:
+    _local.rules = rules
+
+
+def get_param_rules() -> Dict[str, Tuple[str, ...]]:
+    return getattr(_local, "rules", None) or DEFAULT_PARAM_RULES
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    _local.mesh = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+class use_mesh_and_rules:
+    """Context manager installing (mesh, param rules) for spec resolution and
+    activation sharding constraints."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self._pm, self._pr = current_mesh(), getattr(_local, "rules", None)
+        set_current_mesh(self.mesh)
+        set_param_rules(self.rules)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_current_mesh(self._pm)
+        set_param_rules(self._pr)
+        return False
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        n = 1
+        for a in name:
+            n *= _axis_size(mesh, a)
+        return n
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def partition_spec(s: ParamSpec, mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> P:
+    """Divisibility-aware PartitionSpec for one parameter."""
+    rules = rules or get_param_rules()
+    used: set = set()
+    out = []
+    for dim, ax in zip(s.shape, s.axes):
+        assigned = None
+        for cand in rules.get(ax, ()) if ax else ():
+            if cand in used or cand not in mesh.axis_names:
+                continue
+            if dim % _axis_size(mesh, cand) == 0 and dim > 0:
+                assigned = cand
+                used.add(cand)
+                break
+        out.append(assigned)
+    return P(*out)
+
+
+def param_shardings(specs, mesh: Mesh, rules=None):
+    return tree_map_specs(lambda s: NamedSharding(mesh, partition_spec(s, mesh, rules)), specs)
+
+
+def param_pspecs(specs, mesh: Mesh, rules=None):
+    return tree_map_specs(lambda s: partition_spec(s, mesh, rules), specs)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+# ---------------------------------------------------------------------------
+
+def shard_activation(x: jax.Array, axes: Tuple[Any, ...]) -> jax.Array:
+    """``with_sharding_constraint`` with divisibility checking.
+
+    ``axes`` gives, per dim, a mesh axis name, a tuple of mesh axis names, or
+    None.  No-op when no mesh is installed (pure-CPU tests).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            resolved.append(None)
+            continue
+        cand = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,)) if a in mesh.axis_names)
+        if cand and dim % _axis_size(mesh, cand) == 0:
+            resolved.append(cand if len(cand) > 1 else cand[0])
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))
+
+
+FSDP_AXES = ("data", "pod")
+
+
+def gather_pspec(s: ParamSpec, mesh: Mesh, rules=None) -> P:
+    """PartitionSpec of a weight at *use* time: FSDP axes gathered, TP axes
+    kept.  Constraining a weight to this spec inside the scanned layer body
+    makes GSPMD all-gather the (small) weight shard per layer instead of
+    all-reducing (large) partial activations — classic FSDP/ZeRO-3."""
+    rules = rules or get_param_rules()
+    used: set = set()
+    out = []
+    for dim, ax in zip(s.shape, s.axes):
+        assigned = None
+        for cand in rules.get(ax, ()) if ax else ():
+            if cand in used or cand not in mesh.axis_names or cand in FSDP_AXES:
+                continue
+            if dim % _axis_size(mesh, cand) == 0 and dim > 0:
+                assigned = cand
+                used.add(cand)
+                break
+        out.append(assigned)
+    return P(*out)
+
+
+def fsdp_gather(params, specs):
+    """Apply gathered-layout constraints to a (sub)tree of weights at use.
+
+    ``specs`` is the per-layer ParamSpec tree (no stacked "layers" dim);
+    no-op without an installed mesh (pure-CPU tests)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return params
+    rules = get_param_rules()
+
+    def one(s, w):
+        if w.ndim != len(s.axes):
+            return w             # stacked/grouped variant — caller handles
+        return jax.lax.with_sharding_constraint(
+            w, NamedSharding(mesh, gather_pspec(s, mesh, rules)))
+
+    # map over the spec tree (ParamSpec is itself a pytree, so is_leaf must
+    # fire on the spec side)
+    return jax.tree_util.tree_map(one, specs, params, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))

@@ -1,0 +1,230 @@
+"""Mamba2 (state-space duality) mixer: chunked SSD scan for train/prefill and
+a single-step recurrence for decode.
+
+Follows the SSD block decomposition (Dao & Gu, 2024): exact quadratic
+attention within chunks + linear inter-chunk state recurrence (lax.scan).
+Shapes: x [B, S, D]; heads H = d_inner/headdim; groups G share B/C tensors.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import rmsnorm
+from .module import shard_activation, spec
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg: ModelConfig, layers: int | None = None) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = 1, cfg.d_state, cfg.ssm_heads
+    convc = di + 2 * G * N
+    dt = cfg.param_dtype
+    L = (layers,) if layers else ()
+    La = ("layers",) if layers else ()
+    return {
+        "in_proj": spec(L + (d, 2 * di + 2 * G * N + H), La + ("embed", "inner"), dtype=dt),
+        "conv_w": spec(L + (cfg.d_conv, convc), La + ("conv", "inner"), dtype=dt, scale=0.5),
+        "conv_b": spec(L + (convc,), La + ("inner",), dtype=dt, init="zeros"),
+        "A_log": spec(L + (H,), La + (None,), init="zeros"),       # A = -exp(A_log), f32
+        "D": spec(L + (H,), La + (None,), init="ones"),
+        "dt_bias": spec(L + (H,), La + (None,), init="zeros"),
+        "norm_w": spec(L + (di,), La + ("inner",), dtype=dt, init="ones"),
+        "out_proj": spec(L + (di, d), La + ("inner", "embed"), dtype=dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d via K shifted adds. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        y = y + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] log-decays -> [..., Q, Q] cumulative segment sums,
+    -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]   # sum_{k=j+1..i} a_k
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(x: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  [B, S, H, P]  (already multiplied by dt)
+    dA: [B, S, H]     (log decay = dt * A, negative)
+    Bm, Cm: [B, S, G, N]
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    HG = H // G
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:
+        # zero-pad to a chunk multiple: padded x=0 contributes nothing to the
+        # states and padded dA=0 (decay 1) leaves the recurrence unchanged.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xc = x.reshape(B, nc, Q, H, P)
+    ac = dA.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)               # [B,H,nc,Q]
+    bc = Bm.reshape(B, nc, Q, G, N)
+    cc = Cm.reshape(B, nc, Q, G, N)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                                  # [B,H,nc,Q]
+
+    # (1) intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(ac))                                      # [B,H,nc,Q,Q]
+    Lmat = Lmat.reshape(B, G, HG, nc, Q, Q)
+    xg = xc.reshape(B, nc, Q, G, HG, P)
+    scores = jnp.einsum("bcqgn,bcsgn->bgcqs", cc, bc,
+                        preferred_element_type=jnp.float32)          # [B,G,nc,Q,Q]
+    y_diag = jnp.einsum("bgcqs,bghcqs,bcsghp->bcqghp",
+                        scores, Lmat, xg.astype(jnp.float32))
+
+    # (2) per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                  # [B,H,nc,Q]
+    ds = decay_states.reshape(B, G, HG, nc, Q)
+    states = jnp.einsum("bcqgn,bghcq,bcqghp->bcghpn", bc, ds,
+                        xg.astype(jnp.float32))                      # [B,nc,G,HG,P,N]
+
+    # (3) inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1]).reshape(B, G, HG, nc)      # [B,G,HG,nc]
+    h0 = (jnp.zeros((B, G, HG, P, N), jnp.float32) if init_state is None
+          else init_state.reshape(B, G, HG, P, N).astype(jnp.float32))
+
+    def step(h, xs):
+        st, dec = xs                                                 # st [B,G,HG,P,N]
+        h_in = h
+        h_next = h * dec[..., None, None] + st
+        return h_next, h_in
+
+    (h_final, h_prevs) = lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4, 5),
+                   chunk_decay.transpose(3, 0, 1, 2)))
+    h_prev = h_prevs.transpose(1, 0, 2, 3, 4, 5)                     # [B,nc,G,HG,P,N]
+
+    # (4) off-diagonal contribution
+    sd_out = jnp.exp(a_cum).reshape(B, G, HG, nc, Q)
+    y_off = jnp.einsum("bcqgn,bcghpn,bghcq->bcqghp", cc, h_prev, sd_out)
+
+    y = (y_diag + y_off).reshape(B, nc, Q, H, P).reshape(B, S, H, P)
+    return y[:, :S0].astype(x.dtype), h_final.reshape(B, H, P, N)
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                   init_state: jax.Array | None = None
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence Mamba2 mixer.
+
+    x: [B, S, D] -> (y, final_ssm_state, conv_tail) where conv_tail holds the
+    last (K-1) *pre-conv* xBC inputs — the conv cache handed to decode.
+    """
+    B, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.ssm_heads, cfg.headdim
+    G = 1
+    cd = cfg.compute_dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(cd))
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    conv_tail = xBC[:, -(cfg.d_conv - 1):, :]
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                     # [H]
+    dA = dt * A                                                      # [B,S,H]
+
+    xh = xs.reshape(B, S, H, P)
+    xh = shard_activation(xh, (("pod", "data"), None, "model", None))
+    xd = (xh.astype(jnp.float32) * dt[..., None]).astype(cd)
+
+    y, h_final = ssd_chunked(xd, dA, Bm.astype(cd), Cm.astype(cd),
+                             cfg.ssd_chunk, init_state)
+    y = y.astype(jnp.float32) + p["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd))
+    return out, h_final, conv_tail.astype(cfg.compute_dtype)
+
+
+def mamba2_decode_step(p: Dict, x: jax.Array, cfg: ModelConfig,
+                       ssm_state: jax.Array, conv_state: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent step.
+
+    x: [B, 1, D]; ssm_state: [B, H, P, N]; conv_state: [B, K-1, convc].
+    Returns (y [B,1,D], ssm_state', conv_state').
+    """
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.ssm_heads, cfg.headdim
+    G, K = 1, cfg.d_conv
+    cd = cfg.compute_dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(cd))[:, 0]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+
+    # conv over (state ++ new input)
+    full = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)    # [B,K,convc]
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = (full.astype(jnp.float32) * w[None]).sum(axis=1) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(cd)
+    conv_state_new = full[:, 1:]
+
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    Bm = Bm.reshape(B, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, G, N).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                             # [B,H]
+
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bm, H // G, axis=1)                              # [B,H,N]
+    Ch = jnp.repeat(Cm, H // G, axis=1)
+    upd = (dt[..., None] * xh)[..., None] * Bh[:, :, None, :]        # [B,H,P,N]
+    st = ssm_state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di)
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))[:, None, :]).astype(cd)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cd))
+    return out, st.astype(ssm_state.dtype), conv_state_new

