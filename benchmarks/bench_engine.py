@@ -1,0 +1,108 @@
+"""Engine executor benchmark: fused lax.scan executor vs per-wave driver.
+
+Runs a multi-wave SmallBank workload through both drivers for every
+scheduler, checks the histories are bit-identical, and records wave
+throughput (txns/sec, waves/sec, abort rate) plus fused vs per-wave
+wall-clock into ``BENCH_engine.json`` at the repo root — the perf
+trajectory datapoint for the device-resident hot loop (DESIGN.md §7).
+
+Wall-clock excludes compilation: each driver is warmed up once on the same
+shapes, then timed over ``reps`` fresh stores (the workload itself is
+identical, so the comparison isolates dispatch/host-sync overhead — exactly
+what the fused executor removes).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_engine
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (SCHEDULERS, make_store, potential_backend,
+                        run_workload, run_workload_fused)
+from repro.core.workloads import smallbank_waves
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_engine.json")
+
+N_WAVES = 32
+WAVE_T = 64
+N_NODES = 8
+KEYS_PER_NODE = 200
+REPS = 3
+
+
+def _time(driver, waves, sched, host_skew, reps=REPS):
+    mk = lambda: make_store(N_NODES * KEYS_PER_NODE, 8)
+    out = driver(mk(), waves, sched=sched, n_nodes=N_NODES,
+                 host_skew=host_skew)          # warmup: compile + first run
+    best = float("inf")
+    for _ in range(reps):
+        store = mk()
+        t0 = time.perf_counter()
+        out = driver(store, waves, sched=sched, n_nodes=N_NODES,
+                     host_skew=host_skew)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(scheds=SCHEDULERS) -> Dict:
+    rng = np.random.RandomState(11)
+    waves = smallbank_waves(rng, N_WAVES, WAVE_T, N_NODES, KEYS_PER_NODE,
+                            dist_frac=0.2)
+    n_txn = N_WAVES * WAVE_T
+    rows = {}
+    for sched in scheds:
+        hs = (np.round(np.linspace(0, 2, N_NODES)).astype(np.int32)
+              if sched == "clocksi" else None)
+        t_fused, (_, h_f, st_f) = _time(run_workload_fused, waves, sched, hs)
+        t_wave, (_, h_w, st_w) = _time(run_workload, waves, sched, hs)
+        for (t1, o1), (t2, o2) in zip(h_f, h_w):
+            np.testing.assert_array_equal(t1, t2)
+            for f1, f2 in zip(o1, o2):
+                np.testing.assert_array_equal(f1, f2)
+        rows[sched] = {
+            "fused_wall_s": round(t_fused, 6),
+            "perwave_wall_s": round(t_wave, 6),
+            "speedup": round(t_wave / t_fused, 3),
+            "txns_per_sec": round(n_txn / t_fused, 1),
+            "waves_per_sec": round(N_WAVES / t_fused, 1),
+            "committed": st_f.committed,
+            "aborted": st_f.aborted,
+            "abort_rate": round(st_f.aborted / n_txn, 4),
+        }
+    return {
+        "config": {
+            "workload": "smallbank", "n_waves": N_WAVES, "wave_size": WAVE_T,
+            "n_nodes": N_NODES, "keys_per_node": KEYS_PER_NODE,
+            "dist_frac": 0.2, "reps": REPS,
+            "potential_backend": potential_backend(),
+        },
+        "schedulers": rows,
+    }
+
+
+def write_report(report: Dict) -> None:
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+def main(write_json: bool = True) -> Dict:
+    report = run()
+    if write_json:
+        write_report(report)
+    for sched, r in report["schedulers"].items():
+        print(f"bench_engine/{sched}: fused {r['fused_wall_s']*1e3:.1f}ms "
+              f"vs per-wave {r['perwave_wall_s']*1e3:.1f}ms "
+              f"({r['speedup']:.2f}x)  {r['txns_per_sec']:.0f} txn/s "
+              f"{r['waves_per_sec']:.0f} waves/s abort={r['abort_rate']:.2%}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,19 @@ def _engine_figures() -> None:
              f"tput={r['throughput_tps']:.0f}tps")
 
 
+def _engine_executor() -> None:
+    """Fused-scan vs per-wave executor comparison; also refreshes
+    BENCH_engine.json (the perf-trajectory datapoint)."""
+    from . import bench_engine
+    report = bench_engine.run()
+    bench_engine.write_report(report)     # quiet: keep stdout pure CSV
+    for sched, r in report["schedulers"].items():
+        n_txn = r["committed"] + r["aborted"]
+        _csv(f"engine/fused/{sched}", r["fused_wall_s"] * 1e6 / n_txn,
+             f"speedup={r['speedup']:.2f}x waves/s={r['waves_per_sec']:.0f} "
+             f"abort={100 * r['abort_rate']:.1f}%")
+
+
 def _kernel_micro() -> None:
     """XLA-path kernel micro-benchmarks (CPU wall time; derived = ideal
     throughput class).  The Pallas path is validated in tests."""
@@ -120,6 +133,7 @@ def _roofline_headlines() -> None:
 def main() -> None:
     print("name,us_per_call,derived")
     _engine_figures()
+    _engine_executor()
     _kernel_micro()
     _roofline_headlines()
 

@@ -21,7 +21,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import make_store, run_workload
+from repro.core import make_store, run_workload, run_workload_fused
 
 T_OP = 20.0          # us
 T_MSG = 100.0        # us
@@ -40,12 +40,16 @@ def wave_size(n_nodes: int) -> int:
 
 
 def simulate(waves, sched: str, n_nodes: int, host_skew=None,
-             n_versions: int = 8) -> Dict:
+             n_versions: int = 8, fused: bool = True) -> Dict:
+    """``fused=True`` (default) measures the single-dispatch scan executor —
+    the device-resident hot path; ``fused=False`` falls back to the per-wave
+    debug driver (bit-identical history, one host sync per wave)."""
     n_keys = n_nodes * KEYS_PER_NODE
+    driver = run_workload_fused if fused else run_workload
     t0 = time.perf_counter()
-    _, hist, stats = run_workload(make_store(n_keys, n_versions), waves,
-                                  sched=sched, n_nodes=n_nodes,
-                                  host_skew=host_skew)
+    _, hist, stats = driver(make_store(n_keys, n_versions), waves,
+                            sched=sched, n_nodes=n_nodes,
+                            host_skew=host_skew)
     wall = time.perf_counter() - t0
     n_txn = sum(len(t) for t, _ in hist)
     n_ops = sum(int((o.read_key >= 0).sum() + (o.write_key >= 0).sum())

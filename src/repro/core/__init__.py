@@ -3,9 +3,10 @@
 Decentralized MVCC: transactions negotiate logical time intervals from
 visibility relationships; no central clock exists anywhere in this package.
 """
+from .commit_phase import potential_backend, set_potential_backend
 from .engine import (NOP, READ, RMW, WRITE, RUNNING, COMMITTED, ABORTED,
                      SCHEDULERS, Wave, WaveOut, RunStats, run_wave,
-                     run_workload, set_n_nodes)
+                     run_workload, run_workload_fused, stack_waves)
 from .store import MVStore, make_store, read_newest, read_visible, node_of_key
 from .verify import verify_cv, verify_si
 from . import workloads
@@ -13,6 +14,7 @@ from . import workloads
 __all__ = [
     "NOP", "READ", "RMW", "WRITE", "RUNNING", "COMMITTED", "ABORTED",
     "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_wave", "run_workload",
-    "set_n_nodes", "MVStore", "make_store", "read_newest", "read_visible",
-    "node_of_key", "verify_cv", "verify_si", "workloads",
+    "run_workload_fused", "stack_waves", "potential_backend",
+    "set_potential_backend", "MVStore", "make_store", "read_newest",
+    "read_visible", "node_of_key", "verify_cv", "verify_si", "workloads",
 ]

@@ -1,0 +1,172 @@
+"""Shared commit-phase rules + anti-dependency matrix build (DESIGN.md §7).
+
+Both wave engines — the single-device `engine.py` and the shard_map
+`dist_engine.py` — execute the exact same commit-phase arithmetic (the
+paper's CV rules 5-6 and PostSI rules 3/4/5); only the data-plane
+primitives differ (direct store indexing vs. gather+psum peer collectives).
+This module is the single home of that replicated arithmetic so the two
+engines cannot drift, and of the ``potential`` anti-dependency matrix build,
+which it routes to the tiled Pallas kernel
+(`repro.kernels.interval_negotiate.potential_matrix_pallas`) or the dense
+jnp reference depending on a process-wide backend config.
+
+Backend selection (``set_potential_backend`` / env ``REPRO_POTENTIAL_BACKEND``):
+
+  auto              -> "pallas" on TPU, "pallas_interpret" elsewhere (default)
+  pallas            -> Mosaic-compiled kernel (TPU)
+  pallas_interpret  -> the same kernel body, interpreted on CPU
+  jnp               -> the dense [T,T,O,O] broadcast-compare reference
+                       (escape hatch; bit-identical to the kernel by
+                       tests/test_kernels.py and tests/test_fused_executor.py)
+
+Because the engines jit-compile with the backend baked in at trace time,
+``set_potential_backend`` clears the jit caches registered via
+``register_cache_clear`` so a config change takes effect immediately.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+# op kinds (one code per wave-op slot)
+NOP, READ, WRITE, RMW = 0, 1, 2, 3
+# txn status
+RUNNING, COMMITTED, ABORTED = 0, 1, 2
+
+POTENTIAL_BACKENDS = ("auto", "pallas", "pallas_interpret", "jnp")
+
+_backend = os.environ.get("REPRO_POTENTIAL_BACKEND", "auto")
+_clear_hooks = []
+
+
+def register_cache_clear(jitted) -> None:
+    """Engines register their jitted entry points; a backend switch clears
+    them so the new backend is traced in."""
+    _clear_hooks.append(jitted)
+
+
+def set_potential_backend(name: str) -> None:
+    global _backend
+    assert name in POTENTIAL_BACKENDS, (name, POTENTIAL_BACKENDS)
+    _backend = name
+    for fn in _clear_hooks:
+        try:
+            fn.clear_cache()
+        except Exception:
+            pass
+
+
+def potential_backend() -> str:
+    """The resolved (non-auto) backend name."""
+    if _backend != "auto":
+        return _backend
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# potential[i, j] = "txn i read a key that txn j writes"
+# ---------------------------------------------------------------------------
+
+def potential_matrix_jnp(read_key, write_key, read_mask, write_mask):
+    """Dense reference build: [T,T,O,O] broadcast-compare, diagonal masked."""
+    rk = jnp.where(read_mask, read_key, -1)
+    wk = jnp.where(write_mask, write_key, -2)
+    eq = rk[:, None, :, None] == wk[None, :, None, :]     # [T,T,O,O]
+    pot = eq.any(axis=(2, 3))
+    T = read_key.shape[0]
+    return pot & ~jnp.eye(T, dtype=bool)
+
+
+def build_potential(keys, is_read, is_write, backend: str | None = None):
+    """Anti-dependency candidates for one wave: bool [T, T].
+
+    keys: [T, O] int32 op keys (>= 0 where active); is_read / is_write:
+    [T, O] bool op masks. Routed per ``backend`` (None = process config).
+    """
+    backend = backend or potential_backend()
+    if backend == "jnp":
+        return potential_matrix_jnp(keys, keys, is_read, is_write)
+    from repro.kernels import ops
+    rk = jnp.where(is_read, keys, -1)
+    wk = jnp.where(is_write, keys, -1)
+    out = ops.potential_matrix(rk, wk, use_pallas=True,
+                               interpret=(backend == "pallas_interpret"))
+    return out.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# commit-phase arithmetic shared by engine.py and dist_engine.py
+# ---------------------------------------------------------------------------
+
+def creator_slots(nv_tid, tid0, n_txns, status):
+    """Map newest-version creator TIDs to wave-local txn ids.
+
+    Returns (local [O] int32, creator_committed [O] bool): local is -1 for
+    creators from older waves (their versions are settled and never block a
+    same-wave commit)."""
+    local = nv_tid - tid0
+    local = jnp.where((local >= 0) & (local < n_txns), local, -1)
+    committed = jnp.where(
+        local >= 0, status[jnp.maximum(local, 0)] == COMMITTED, False)
+    return local, committed
+
+
+def lost_update(r_i, w_i, nv_cid, r_cid_i):
+    """CV rule 5(i): an RMW whose read version is no longer newest."""
+    return (r_i & w_i & (nv_cid != r_cid_i)).any()
+
+
+def rw_edge_to_creator(w_i, local, creator_committed, potential_row):
+    """CV rule 5(ii): the newest creator of a key I write has an rw edge
+    from me (I read data it overwrote) -> it is invisible to me -> I cannot
+    overwrite its version."""
+    return jnp.where(w_i & (local >= 0) & creator_committed,
+                     potential_row[jnp.maximum(local, 0)], False).any()
+
+
+def ongoing_readers_of(i, potential, status):
+    """Mask of still-RUNNING txns that read a key txn i writes (self off)."""
+    readers = potential[:, i] & (status == RUNNING)
+    return readers.at[i].set(False)
+
+
+def postsi_bounds(s_lo_i, s_hi_i, c_lo_i, r_i, w_i, nv_cid, nv_sid, cur_sid,
+                  ongoing_reader, s_lo):
+    """PostSI rules 3/4(a)/5 for the committing txn i.
+
+    Inputs: current bounds (s_lo_i, s_hi_i, c_lo_i), op masks r_i/w_i [O],
+    newest-version cid/sid over i's keys (nv_cid/nv_sid [O]), re-gathered
+    SIDs of i's read slots (cur_sid [O] — peers may have bumped them while i
+    ran), ongoing_reader [T] mask and the wave s_lo vector [T].
+    Returns (s_i, c_i, interval_abort)."""
+    w_cid_max = jnp.where(w_i, nv_cid, 0).max()
+    # rule 3 for overwrites: creators of overwritten versions must be visible
+    s_lo_i = jnp.maximum(s_lo_i, w_cid_max)
+    c_lo_i = jnp.maximum(c_lo_i, w_cid_max)
+    # rule 4(a): commit time above SIDs of read versions ...
+    c_lo_i = jnp.maximum(c_lo_i, jnp.where(r_i, cur_sid, 0).max())
+    # ... and above SIDs of versions we *overwrite* (blind writes): SID
+    # passes committed readers' start times to later writers
+    c_lo_i = jnp.maximum(c_lo_i, jnp.where(w_i, nv_sid, 0).max())
+    # ... and above s_lo of every ongoing reader of my write set
+    c_lo_i = jnp.maximum(c_lo_i, jnp.where(ongoing_reader, s_lo, 0).max())
+    # rule 5: no valid start time left
+    interval_abort = s_lo_i > s_hi_i
+    s_i = s_lo_i
+    c_i = jnp.maximum(c_lo_i, s_i) + 1
+    return s_i, c_i, interval_abort
+
+
+def push_bounds(i, commit, s_i, c_i, potential, status, s_lo, s_hi, c_lo):
+    """PostSI rule 4(b): a committing txn pushes the interval bounds of every
+    conflicting *ongoing* transaction (replicated arithmetic — identical on
+    every node of the dist engine)."""
+    running = status == RUNNING
+    i_reads_them = potential[i, :] & running          # me -rw-> them
+    c_lo = jnp.where(commit & i_reads_them, jnp.maximum(c_lo, s_i + 1), c_lo)
+    they_read_mine = potential[:, i] & running
+    s_hi = jnp.where(commit & they_read_mine, jnp.minimum(s_hi, c_i - 1), s_hi)
+    s_lo = s_lo.at[i].set(jnp.where(commit, s_i, s_lo[i]))
+    return s_lo, s_hi, c_lo

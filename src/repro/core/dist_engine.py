@@ -14,8 +14,11 @@ node, while all data accesses are peer collectives:
                  are replicated arithmetic — **zero coordinator anywhere**.
 
 Semantics are bit-identical to the single-device engine (same commit order,
-same rules) — tests/test_distribution.py checks the differential.
-Currently implements the paper's scheduler (postsi) only.
+same rules) — tests/test_distribution.py checks the differential.  The
+commit-phase arithmetic (CV rules 5-6, PostSI rules 3/4/5 and the dense
+``potential`` build) is the shared ``commit_phase`` module, so this engine
+and ``engine.py`` execute the exact same replicated math by construction;
+only the paper's scheduler (postsi) is implemented on the mesh.
 """
 from __future__ import annotations
 
@@ -29,7 +32,11 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .engine import COMMITTED, NOP, READ, RMW, RUNNING, ABORTED, WRITE, Wave
+from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
+                           creator_slots, lost_update, ongoing_readers_of,
+                           postsi_bounds, potential_matrix_jnp, push_bounds,
+                           rw_edge_to_creator)
+from .engine import Wave
 from .store import INF, MVStore, NO_TID, make_store
 
 
@@ -89,10 +96,9 @@ def run_wave_postsi_dist(store: MVStore, wave: Wave, wave_idx, mesh: Mesh,
         c_lo0 = s_lo0
         s_hi0 = jnp.full((T,), INF, jnp.int32)
 
-        rk = jnp.where(is_read, op_key, -1)
-        wk = jnp.where(is_write, op_key, -2)
-        potential = (rk[:, None, :, None] == wk[None, :, None, :]).any((2, 3))
-        potential = potential & ~jnp.eye(T, dtype=bool)
+        # replicated dense build (the Pallas kernel is not used inside
+        # shard_map — every node computes the same [T, T] matrix)
+        potential = potential_matrix_jnp(op_key, op_key, is_read, is_write)
 
         def commit_one(i, carry):
             st_l, s_lo, s_hi, c_lo, status, s_arr, c_arr = carry
@@ -101,27 +107,19 @@ def run_wave_postsi_dist(store: MVStore, wave: Wave, wave_idx, mesh: Mesh,
             r_i = is_read[i]
             nv_val, nv_tid, nv_cid, nv_sid, nv_slot = read_all(st_l, k_i)
 
-            local = nv_tid - tids_g[0]
-            local = jnp.where((local >= 0) & (local < T), local, -1)
-            creator_committed = jnp.where(
-                local >= 0, status[jnp.maximum(local, 0)] == COMMITTED, False)
-            lost = (r_i & w_i & (nv_cid != r_cid[i])).any()
-            rw_to_creator = jnp.where(
-                w_i & (local >= 0) & creator_committed,
-                potential[i, jnp.maximum(local, 0)], False).any()
+            local, creator_committed = creator_slots(nv_tid, tids_g[0], T,
+                                                     status)
+            lost = lost_update(r_i, w_i, nv_cid, r_cid[i])
+            rw_to_creator = rw_edge_to_creator(w_i, local, creator_committed,
+                                               potential[i])
             abort = lost | rw_to_creator
 
-            s_lo_i = jnp.maximum(s_lo[i], jnp.where(w_i, nv_cid, 0).max())
-            c_lo_i = jnp.maximum(c_lo[i], jnp.where(w_i, nv_cid, 0).max())
-            c_lo_i = jnp.maximum(c_lo_i, jnp.where(r_i, nv_sid * 0 +
-                                                   read_sid(st_l, k_i, r_slot[i]), 0).max())
-            c_lo_i = jnp.maximum(c_lo_i, jnp.where(w_i, nv_sid, 0).max())
-            ongoing_reader = potential[:, i] & (status == RUNNING)
-            ongoing_reader = ongoing_reader.at[i].set(False)
-            c_lo_i = jnp.maximum(c_lo_i, jnp.where(ongoing_reader, s_lo, 0).max())
-            abort = abort | (s_lo_i > s_hi[i])
-            s_i = s_lo_i
-            c_i = jnp.maximum(c_lo_i, s_i) + 1
+            cur_sid = read_sid(st_l, k_i, r_slot[i])
+            ongoing_reader = ongoing_readers_of(i, potential, status)
+            s_i, c_i, iv_abort = postsi_bounds(
+                s_lo[i], s_hi[i], c_lo[i], r_i, w_i, nv_cid, nv_sid, cur_sid,
+                ongoing_reader, s_lo)
+            abort = abort | iv_abort
 
             active = status[i] == RUNNING
             commit = active & ~abort
@@ -152,14 +150,8 @@ def run_wave_postsi_dist(store: MVStore, wave: Wave, wave_idx, mesh: Mesh,
                 sid=st_l.sid.at[lk_sid, r_slot[i]].max(s_i, mode="drop"))
 
             # rule 4(b): replicated bound pushes
-            running = status == RUNNING
-            i_reads_them = potential[i, :] & running
-            c_lo = jnp.where(commit & i_reads_them,
-                             jnp.maximum(c_lo, s_i + 1), c_lo)
-            they_read_mine = potential[:, i] & running
-            s_hi = jnp.where(commit & they_read_mine,
-                             jnp.minimum(s_hi, c_i - 1), s_hi)
-            s_lo = s_lo.at[i].set(jnp.where(commit, s_i, s_lo[i]))
+            s_lo, s_hi, c_lo = push_bounds(i, commit, s_i, c_i, potential,
+                                           status, s_lo, s_hi, c_lo)
 
             status = status.at[i].set(new_status)
             s_arr = s_arr.at[i].set(jnp.where(commit, s_i, -1))

@@ -29,6 +29,17 @@ Schedulers:
              txns; remote-read snapshot mismatch aborts
   clocksi  — loosely synchronized per-node clocks with ``skew`` (in waves);
              behind-host txns read stale snapshots, ahead-remote reads wait
+
+Drivers (DESIGN.md §7): ``run_workload_fused`` stacks a whole workload into
+[W, T, O] batches and executes it as ONE device program — a single
+``lax.scan`` over waves carrying (store, clock), no per-wave host round
+trips.  ``run_workload`` dispatches one jitted wave at a time and syncs each
+WaveOut to host; it is kept as the debug/differential path and the fused
+executor is bit-identical to it (tests/test_fused_executor.py).
+
+The commit-phase arithmetic (rules 3/4/5, the ``potential`` matrix build)
+lives in ``commit_phase`` and is shared with the shard_map engine in
+``dist_engine.py``.
 """
 from __future__ import annotations
 
@@ -40,13 +51,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
+                           build_potential, creator_slots, lost_update,
+                           ongoing_readers_of, postsi_bounds, push_bounds,
+                           potential_matrix_jnp, register_cache_clear,
+                           rw_edge_to_creator)
 from .store import (INF, MVStore, NO_TID, bump_sid, install_version,
                     make_store, node_of_key, read_newest, read_visible)
-
-# op kinds
-NOP, READ, WRITE, RMW = 0, 1, 2, 3
-# txn status
-RUNNING, COMMITTED, ABORTED = 0, 1, 2
 
 SCHEDULERS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
 WAVE_STRIDE = 1 << 16      # logical clock stride per wave for clocked baselines
@@ -74,14 +85,9 @@ class WaveOut(NamedTuple):
     waits: jax.Array       # scalar: clock-si skew waits
 
 
-def _potential_antidep(read_key, write_key, read_mask, write_mask):
-    """potential[i, j] = txn i read a key txn j writes (i != j)."""
-    rk = jnp.where(read_mask, read_key, -1)
-    wk = jnp.where(write_mask, write_key, -2)
-    eq = rk[:, None, :, None] == wk[None, :, None, :]     # [T,T,O,O]
-    pot = eq.any(axis=(2, 3))
-    T = read_key.shape[0]
-    return pot & ~jnp.eye(T, dtype=bool)
+# jnp reference build of potential[i, j] = "txn i read a key txn j writes";
+# run_wave routes through commit_phase.build_potential (Pallas by default)
+_potential_antidep = potential_matrix_jnp
 
 
 @functools.partial(jax.jit, static_argnames=("sched", "skew"))
@@ -121,7 +127,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     c_lo0 = s_lo0
     s_hi0 = jnp.full((T,), INF, jnp.int32)
 
-    potential = _potential_antidep(keys, keys, is_read, is_write)  # [T,T]
+    potential = build_potential(keys, is_read, is_write)           # [T,T]
 
     # --------------------------------------------------------------- commits
     # deterministic commit order = wave-local index (tids ascend within wave)
@@ -135,18 +141,15 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         nv_val, nv_tid, nv_cid, nv_sid, nv_slot = read_newest(st, k_i)
 
         # map newest creators to wave-local ids (or -1 if older wave)
-        local = nv_tid - wave.tid[0]
-        local = jnp.where((local >= 0) & (local < T), local, -1)
-        creator_committed = jnp.where(local >= 0, status[jnp.maximum(local, 0)] == COMMITTED, False)
+        local, creator_committed = creator_slots(nv_tid, wave.tid[0], T, status)
 
         # lost update: an RMW whose read version is no longer newest
-        lost = (r_i & w_i & (nv_cid != r_cid[i])).any()
+        lost = lost_update(r_i, w_i, nv_cid, r_cid[i])
         # CV rule 5(ii): newest creator has an rw edge from me (I read data it
         # overwrote) -> it is invisible to me -> cannot overwrite its version
         if sched in ("postsi", "cv"):
-            rw_to_creator = jnp.where(
-                w_i & (local >= 0) & creator_committed,
-                potential[i, jnp.maximum(local, 0)], False).any()
+            rw_to_creator = rw_edge_to_creator(w_i, local, creator_committed,
+                                               potential[i])
         else:
             rw_to_creator = jnp.array(False)
 
@@ -166,25 +169,14 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
             abort = abort | stale_remote
 
         if sched == "postsi":
-            # rule 3 for overwrites: creators of overwritten versions must be
-            # visible
-            s_lo_i = jnp.maximum(s_lo[i], jnp.where(w_i, nv_cid, 0).max())
-            c_lo_i = jnp.maximum(c_lo[i], jnp.where(w_i, nv_cid, 0).max())
-            # rule 4(a): commit time above SIDs of read versions (re-gathered:
-            # peers may have bumped them while we ran)
+            # rules 3/4(a)/5 (commit_phase.postsi_bounds); SIDs of read slots
+            # are re-gathered: peers may have bumped them while we ran
             cur_sid = st.sid[k_i, r_slot[i]]
-            c_lo_i = jnp.maximum(c_lo_i, jnp.where(r_i, cur_sid, 0).max())
-            # ... and above SIDs of versions we *overwrite* (blind writes):
-            # SID passes committed readers' start times to later writers
-            c_lo_i = jnp.maximum(c_lo_i, jnp.where(w_i, nv_sid, 0).max())
-            # ... and above s_lo of every ongoing reader of my write set
-            ongoing_reader = potential[:, i] & (status == RUNNING)
-            ongoing_reader = ongoing_reader.at[i].set(False)
-            c_lo_i = jnp.maximum(c_lo_i, jnp.where(ongoing_reader, s_lo, 0).max())
-            # rule 5: no valid start time left
-            abort = abort | (s_lo_i > s_hi[i])
-            s_i = s_lo_i
-            c_i = jnp.maximum(c_lo_i, s_i) + 1
+            ongoing_reader = ongoing_readers_of(i, potential, status)
+            s_i, c_i, iv_abort = postsi_bounds(
+                s_lo[i], s_hi[i], c_lo[i], r_i, w_i, nv_cid, nv_sid, cur_sid,
+                ongoing_reader, s_lo)
+            abort = abort | iv_abort
         else:
             # clocked baselines: snapshot = wave-entry clock; commit = clock++
             s_i = clock0
@@ -217,12 +209,8 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
 
         # ---- rule 4(b): push bounds of conflicting *ongoing* transactions --
         if sched == "postsi":
-            running = status == RUNNING
-            i_reads_them = potential[i, :] & running              # j -rw-> k := me -> them
-            c_lo = jnp.where(commit & i_reads_them, jnp.maximum(c_lo, s_i + 1), c_lo)
-            they_read_mine = potential[:, i] & running
-            s_hi = jnp.where(commit & they_read_mine, jnp.minimum(s_hi, c_i - 1), s_hi)
-            s_lo = s_lo.at[i].set(jnp.where(commit, s_i, s_lo[i]))
+            s_lo, s_hi, c_lo = push_bounds(i, commit, s_i, c_i, potential,
+                                           status, s_lo, s_hi, c_lo)
 
         status = status.at[i].set(new_status)
         s_arr = s_arr.at[i].set(jnp.where(commit, s_i, -1))
@@ -299,10 +287,6 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     return store, out, clock
 
 
-def set_n_nodes(n: int) -> None:   # kept for API compat; n_nodes is traced now
-    pass
-
-
 class RunStats(NamedTuple):
     committed: int
     aborted: int
@@ -314,24 +298,87 @@ class RunStats(NamedTuple):
 
 def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
                  host_skew: np.ndarray | None = None, n_nodes: int = 8):
-    """Python driver: execute a list of Waves; returns (store, history, stats).
+    """Per-wave debug driver: one jitted dispatch + host sync per wave.
 
-    history is a list of numpy-ified WaveOut for the verifier.
+    Returns (store, history, stats); history is a list of numpy-ified
+    WaveOut for the verifier.  The measured hot path is
+    ``run_workload_fused`` (bit-identical output); this driver is kept as
+    the reference for differential tests and wave-by-wave debugging.
     """
     clock = jnp.int32(1)
     hs = None if host_skew is None else jnp.asarray(host_skew, jnp.int32)
     history = []
-    tot = dict(committed=0, aborted=0, msgs_cross=0, msgs_coord=0, waits=0)
     for w_idx, wave in enumerate(waves):
         store, out, clock = run_wave(store, wave, jnp.int32(w_idx + 1), clock,
                                      jnp.int32(n_nodes), sched=sched,
                                      skew=skew, host_skew=hs)
-        o = jax.tree_util.tree_map(np.asarray, out)
-        history.append((np.asarray(wave.tid), o))
+        history.append((np.asarray(wave.tid),
+                        jax.tree_util.tree_map(np.asarray, out)))
+    return store, history, _stats_of(history)
+
+
+def _stats_of(history) -> RunStats:
+    tot = dict(committed=0, aborted=0, msgs_cross=0, msgs_coord=0, waits=0)
+    for _, o in history:
         tot["committed"] += int((o.status == COMMITTED).sum())
         tot["aborted"] += int((o.status == ABORTED).sum())
         tot["msgs_cross"] += int(o.msgs_cross)
         tot["msgs_coord"] += int(o.msgs_coord)
         tot["waits"] += int(o.waits)
-    stats = RunStats(waves=len(waves), **tot)
-    return store, history, stats
+    return RunStats(waves=len(history), **tot)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-wave executor (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def stack_waves(waves) -> Wave:
+    """Stack per-wave [T, O] arrays into one [W, T, O] batch (leading axis =
+    wave index) — the scan carrier for the fused executor."""
+    return Wave(*(jnp.stack([getattr(w, f) for w in waves])
+                  for f in Wave._fields))
+
+
+@functools.partial(jax.jit, static_argnames=("sched", "skew"))
+def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
+                n_nodes: jax.Array, sched: str = "postsi", skew: int = 0,
+                host_skew: jax.Array | None = None):
+    """One device program for a whole workload: lax.scan over the wave axis
+    carrying (store, clock); each step is the run_wave computation inlined.
+    Returns (store', WaveOut with leading [W] axis, clock')."""
+    W = stacked.op_kind.shape[0]
+
+    def body(carry, xs):
+        st, clk = carry
+        wave, w_idx = xs
+        st, out, clk = run_wave(st, wave, w_idx, clk, n_nodes, sched=sched,
+                                skew=skew, host_skew=host_skew)
+        return (st, clk), out
+
+    (store, clock), outs = lax.scan(
+        body, (store, clock), (stacked, jnp.arange(1, W + 1, dtype=jnp.int32)))
+    return store, outs, clock
+
+
+def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
+                       skew: int = 0, host_skew: np.ndarray | None = None,
+                       n_nodes: int = 8):
+    """Fused driver: the entire workload as a single jitted dispatch.
+
+    Same signature and same (store, history, stats) contract as
+    ``run_workload``, with bit-identical WaveOut history — only the host
+    round-trips per wave are gone.
+    """
+    stacked = stack_waves(waves)
+    hs = None if host_skew is None else jnp.asarray(host_skew, jnp.int32)
+    store, outs, _ = _scan_waves(store, stacked, jnp.int32(1),
+                                 jnp.int32(n_nodes), sched=sched, skew=skew,
+                                 host_skew=hs)
+    outs = jax.tree_util.tree_map(np.asarray, outs)
+    history = [(np.asarray(w.tid), WaveOut(*(f[i] for f in outs)))
+               for i, w in enumerate(waves)]
+    return store, history, _stats_of(history)
+
+
+register_cache_clear(run_wave)
+register_cache_clear(_scan_waves)

@@ -7,6 +7,8 @@ scheduler never exhibits partial visibility or lost updates (Definition 5).
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import make_store, run_workload, verify_cv, verify_si
