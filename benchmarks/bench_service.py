@@ -1,0 +1,161 @@
+"""Closed-loop service benchmark: offered load vs goodput/latency/retries.
+
+Runs the ``repro.service.TxnService`` end-to-end on CPU for every scheduler:
+a Poisson SmallBank request stream at several offered-load factors (fraction
+of wave capacity ``T`` arriving per tick), with contention high enough that
+aborts and retries actually happen.  Records, per (scheduler, load):
+
+  * sustained txns/sec (all executions, wall) and goodput (committed/sec)
+  * retry rate (retries / admitted) and drop/reject counts
+  * end-to-end latency percentiles p50/p95/p99 (ticks, admission -> commit)
+  * the GC watermark's ``evicted_visible`` counter (0 == V is large enough)
+
+plus a GC ring-depth section: a blind-write-heavy replay swept over V shows
+the still-visible-eviction counter rising as the ring shrinks, and
+``gc_block=True`` trading those corruptions for aborts (counter pinned to 0).
+
+Writes ``BENCH_service.json`` at the repo root.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_service [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict
+
+import numpy as np
+
+from repro.core import SCHEDULERS, make_store, run_workload_fused
+from repro.core.workloads import micro_waves, poisson_arrivals
+from repro.service import RetryPolicy, TxnService, smallbank_txn_gen
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_service.json")
+
+N_TICKS = 24
+WAVE_T = 64
+N_NODES = 8
+KEYS_PER_NODE = 100
+LOAD_FACTORS = (0.5, 0.9, 1.3)      # offered arrivals per tick / T
+HOT_FRAC = 0.5
+HOT_PER_NODE = 4
+
+SMOKE = dict(n_ticks=6, T=16, n_nodes=4, keys_per_node=40,
+             load_factors=(0.9,), scheds=("postsi", "si"))
+
+
+def _host_skew(sched: str, n_nodes: int):
+    return (np.round(np.linspace(0, 2, n_nodes)).astype(np.int32)
+            if sched == "clocksi" else None)
+
+
+def _run_one(sched: str, load: float, n_ticks: int, T: int, n_nodes: int,
+             keys_per_node: int, seed: int = 0) -> Dict:
+    """One closed-loop session.  ``verify_errors`` counts post-hoc SI
+    violations — 0 for every scheduler except clocksi, whose skewed hosts
+    read stale snapshots by design (the paper §II anomaly the waits model)."""
+    hs = _host_skew(sched, n_nodes)
+    svc = TxnService(n_keys=n_nodes * keys_per_node, n_versions=8, T=T,
+                     sched=sched, n_nodes=n_nodes,
+                     retry=RetryPolicy(max_attempts=8), host_skew=hs,
+                     seed=seed)
+    arr_rng = np.random.RandomState(100 + seed)
+    gen = smallbank_txn_gen(np.random.RandomState(200 + seed), n_nodes,
+                            keys_per_node, dist_frac=0.2, hot_frac=HOT_FRAC,
+                            hot_per_node=HOT_PER_NODE)
+    report = svc.run_stream(poisson_arrivals(arr_rng, load * T, n_ticks), gen)
+    row = report.as_dict()
+    row["load_factor"] = load
+    row["verify_errors"] = len(svc.verify())
+    return row
+
+
+def _gc_ring_sweep(n_ticks: int, T: int, n_nodes: int,
+                   keys_per_node: int) -> Dict:
+    """Blind-write contention replay over ring depths: the counter reports
+    when V is too small, and gc_block converts corruption into aborts."""
+    rng = np.random.RandomState(5)
+    waves = micro_waves(rng, n_ticks, T, n_nodes, keys_per_node, n_ops=4,
+                        read_ratio=0.2, hot_frac=0.8, hot_per_node=2,
+                        blind_frac=0.9)
+    n_keys = n_nodes * keys_per_node
+    sweep = []
+    for V in (2, 3, 4, 8, 16):
+        _, _, st = run_workload_fused(make_store(n_keys, V), waves,
+                                      sched="postsi", n_nodes=n_nodes,
+                                      gc_track=True)
+        sweep.append({"n_versions": V, "committed": st.committed,
+                      "aborted": st.aborted,
+                      "evicted_visible": st.evicted_visible})
+    _, _, st = run_workload_fused(make_store(n_keys, 2), waves,
+                                  sched="postsi", n_nodes=n_nodes,
+                                  gc_block=True)
+    blocked = {"n_versions": 2, "committed": st.committed,
+               "aborted": st.aborted, "evicted_visible": st.evicted_visible}
+    return {"ring_sweep": sweep, "gc_block": blocked}
+
+
+def run(smoke: bool = False) -> Dict:
+    if smoke:
+        n_ticks, T = SMOKE["n_ticks"], SMOKE["T"]
+        n_nodes, kpn = SMOKE["n_nodes"], SMOKE["keys_per_node"]
+        loads, scheds = SMOKE["load_factors"], SMOKE["scheds"]
+    else:
+        n_ticks, T, n_nodes, kpn = N_TICKS, WAVE_T, N_NODES, KEYS_PER_NODE
+        loads, scheds = LOAD_FACTORS, SCHEDULERS
+    sweep = {}
+    for sched in scheds:
+        # warmup: populate the jit cache for this (sched, T, O) signature so
+        # the first timed load does not absorb compilation
+        TxnService(n_keys=n_nodes * kpn, T=T, sched=sched, n_nodes=n_nodes,
+                   host_skew=_host_skew(sched, n_nodes)).run_stream(
+            [T], smallbank_txn_gen(np.random.RandomState(0), n_nodes, kpn))
+        sweep[sched] = [_run_one(sched, load, n_ticks, T, n_nodes, kpn)
+                        for load in loads]
+    return {
+        "config": {
+            "workload": "smallbank-poisson", "n_ticks": n_ticks,
+            "wave_size": T, "n_nodes": n_nodes, "keys_per_node": kpn,
+            "hot_frac": HOT_FRAC, "hot_per_node": HOT_PER_NODE,
+            "load_factors": list(loads), "smoke": smoke,
+        },
+        "sweep": sweep,
+        "gc": _gc_ring_sweep(max(n_ticks // 4, 4), T, n_nodes, kpn),
+    }
+
+
+def write_report(report: Dict) -> None:
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+def main(write_json: bool = True, smoke: bool = False) -> Dict:
+    report = run(smoke=smoke)
+    if write_json:
+        write_report(report)
+    for sched, rows in report["sweep"].items():
+        for r in rows:
+            print(f"bench_service/{sched}/load{r['load_factor']}: "
+                  f"goodput {r['goodput_tps']:.0f}/s "
+                  f"sustained {r['txns_per_sec']:.0f}/s "
+                  f"retry {r['retry_rate']:.2f} "
+                  f"p50/p95/p99 {r['latency_p50']:.0f}/"
+                  f"{r['latency_p95']:.0f}/{r['latency_p99']:.0f} ticks "
+                  f"dropped {r['dropped']} rejected {r['rejected']} "
+                  f"evicted {r['evicted_visible']} "
+                  f"verify_errors {r['verify_errors']}")
+    for row in report["gc"]["ring_sweep"]:
+        print(f"bench_service/gc/V{row['n_versions']}: "
+              f"evicted_visible={row['evicted_visible']} "
+              f"committed={row['committed']}")
+    b = report["gc"]["gc_block"]
+    print(f"bench_service/gc/V{b['n_versions']}+block: "
+          f"evicted_visible={b['evicted_visible']} aborted={b['aborted']}")
+    return report
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

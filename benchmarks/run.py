@@ -1,8 +1,17 @@
 """Benchmark aggregator: one block per paper table/figure + roofline + kernel
-micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV (per assignment).
+micro-benchmarks + the closed-loop service.  Prints ``name,us_per_call,
+derived`` CSV (per assignment).
+
+Run all blocks, or name the ones you want:
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python benchmarks/run.py service     # one block
+    PYTHONPATH=src python -m benchmarks.run figures engine
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 
 import numpy as np
@@ -70,6 +79,24 @@ def _engine_executor() -> None:
              f"abort={100 * r['abort_rate']:.1f}%")
 
 
+def _service() -> None:
+    """Closed-loop transaction service (DESIGN.md §8); also refreshes
+    BENCH_service.json (goodput/latency/retry trajectory datapoint)."""
+    from . import bench_service
+    report = bench_service.run()
+    bench_service.write_report(report)    # quiet: keep stdout pure CSV
+    for sched, rows in report["sweep"].items():
+        for r in rows:
+            _csv(f"service/{sched}/load{r['load_factor']}",
+                 r["wall_s"] * 1e6 / max(r["executions"], 1),
+                 f"goodput={r['goodput_tps']:.0f}tps retry={r['retry_rate']:.2f} "
+                 f"p99={r['latency_p99']:.0f}ticks dropped={r['dropped']} "
+                 f"evicted={r['evicted_visible']}")
+    for row in report["gc"]["ring_sweep"]:
+        _csv(f"service/gc/V{row['n_versions']}", 0.0,
+             f"evicted_visible={row['evicted_visible']}")
+
+
 def _kernel_micro() -> None:
     """XLA-path kernel micro-benchmarks (CPU wall time; derived = ideal
     throughput class).  The Pallas path is validated in tests."""
@@ -130,13 +157,29 @@ def _roofline_headlines() -> None:
              f"dominant={s['dominant']} useful={u if u is None else round(u, 2)}")
 
 
-def main() -> None:
+BLOCKS = {
+    "figures": _engine_figures,
+    "engine": _engine_executor,
+    "service": _service,
+    "kernels": _kernel_micro,
+    "roofline": _roofline_headlines,
+}
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    names = [a for a in argv if not a.startswith("-")] or list(BLOCKS)
+    unknown = [n for n in names if n not in BLOCKS]
+    if unknown:
+        raise SystemExit(f"unknown block(s) {unknown}; pick from {list(BLOCKS)}")
     print("name,us_per_call,derived")
-    _engine_figures()
-    _engine_executor()
-    _kernel_micro()
-    _roofline_headlines()
+    for n in names:
+        BLOCKS[n]()
 
 
 if __name__ == "__main__":
+    if __package__ in (None, ""):          # `python benchmarks/run.py ...`
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        __package__ = "benchmarks"
     main()

@@ -56,8 +56,8 @@ from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
                            ongoing_readers_of, postsi_bounds, push_bounds,
                            potential_matrix_jnp, register_cache_clear,
                            rw_edge_to_creator)
-from .store import (INF, MVStore, NO_TID, bump_sid, install_version,
-                    make_store, node_of_key, read_newest, read_visible)
+from .store import (INF, MVStore, NO_TID, evicting_visible, node_of_key,
+                    read_newest, read_visible)
 
 SCHEDULERS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
 WAVE_STRIDE = 1 << 16      # logical clock stride per wave for clocked baselines
@@ -83,6 +83,8 @@ class WaveOut(NamedTuple):
     msgs_cross: jax.Array  # scalar: cross-node data/negotiation messages
     msgs_coord: jax.Array  # scalar: messages through the central coordinator
     waits: jax.Array       # scalar: clock-si skew waits
+    evicted_visible: jax.Array  # scalar: ring-slot reuses of still-visible
+                                # versions (GC watermark violations, §8)
 
 
 # jnp reference build of potential[i, j] = "txn i read a key txn j writes";
@@ -90,15 +92,34 @@ class WaveOut(NamedTuple):
 _potential_antidep = potential_matrix_jnp
 
 
-@functools.partial(jax.jit, static_argnames=("sched", "skew"))
+@functools.partial(jax.jit,
+                   static_argnames=("sched", "skew", "gc_track", "gc_block"))
 def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
              n_nodes: jax.Array = 8, sched: str = "postsi", skew: int = 0,
-             host_skew: jax.Array | None = None) -> Tuple[MVStore, WaveOut, jax.Array]:
+             host_skew: jax.Array | None = None,
+             watermark: jax.Array | None = None, gc_track: bool = False,
+             gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
     """Execute one wave. Returns (store', out, clock').
-    ``n_nodes`` is traced, so scaling sweeps don't recompile."""
+    ``n_nodes`` is traced, so scaling sweeps don't recompile.
+
+    ``watermark`` is the GC watermark for version reclamation (DESIGN.md §8):
+    the decentralized min over live readers' ``s_lo``.  In the wave model
+    every reader's snapshot is pinned at a wave boundary, so the min
+    collapses to the wave-entry clock; ``None`` defaults to exactly that.
+    The closed-loop service passes an explicit (possibly lower) value when
+    external readers pin it — e.g. clock-skewed hosts or retry pins.
+
+    GC accounting is opt-in (static flags) so the pure replay path pays
+    nothing for it.  With ``gc_track=True`` each install that would evict a
+    version still visible above the watermark is counted in
+    ``WaveOut.evicted_visible``; with ``gc_block=True`` the writer is
+    aborted instead (and the counter stays 0), so the retry pipeline
+    re-runs it after the watermark has advanced past the ring."""
     assert sched in SCHEDULERS, sched
     T, O = wave.op_kind.shape
     clock0 = clock          # wave-entry clock = snapshot time for clocked scheds
+    track_gc = gc_track or gc_block
+    wm = clock if watermark is None else watermark
     is_read = (wave.op_kind == READ) | (wave.op_kind == RMW)
     is_write = (wave.op_kind == WRITE) | (wave.op_kind == RMW)
     keys = wave.op_key
@@ -132,7 +153,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     # --------------------------------------------------------------- commits
     # deterministic commit order = wave-local index (tids ascend within wave)
     def commit_one(i, carry):
-        (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk) = carry
+        (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk, ev_cnt) = carry
         active = status[i] == RUNNING
 
         k_i = keys[i]                                             # [O]
@@ -182,6 +203,15 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
             s_i = clock0
             c_i = clk + 1
 
+        # GC watermark consult (DESIGN.md §8): does any write reuse a ring
+        # slot whose version is still visible above the watermark?
+        if track_gc:
+            evict_unsafe = w_i & evicting_visible(st, k_i, wm)        # [O]
+        if gc_block:
+            # blocked install: abort instead of corrupting still-visible
+            # reads; retried once the watermark passes the superseder
+            abort = abort | evict_unsafe.any()
+
         commit = active & ~abort
         new_status = jnp.where(active, jnp.where(abort, ABORTED, COMMITTED), status[i])
 
@@ -216,16 +246,21 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         s_arr = s_arr.at[i].set(jnp.where(commit, s_i, -1))
         c_arr = c_arr.at[i].set(jnp.where(commit, c_i, -1))
         clk = jnp.where(commit, jnp.maximum(clk, c_i), clk)
-        return (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk)
+        if track_gc:
+            ev_cnt = ev_cnt + jnp.where(
+                commit, evict_unsafe.astype(jnp.int32).sum(), 0)
+        return (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk, ev_cnt)
 
     status0 = jnp.full((T,), RUNNING, jnp.int32)
     s0 = jnp.full((T,), -1, jnp.int32)
     c0 = jnp.full((T,), -1, jnp.int32)
     wcid0 = jnp.full((T, O), -1, jnp.int32)
 
-    (store, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clock) = lax.fori_loop(
+    (store, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clock,
+     evicted) = lax.fori_loop(
         0, T, commit_one,
-        (store, s_lo0, s_hi0, c_lo0, status0, s0, c0, wcid0, clock))
+        (store, s_lo0, s_hi0, c_lo0, status0, s0, c0, wcid0, clock,
+         jnp.int32(0)))
 
     write_key = jnp.where(is_write & (status[:, None] == COMMITTED), keys, -1)
 
@@ -283,7 +318,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         waits = jnp.maximum(node_skew - my_skew, 0).sum(where=remote_op & is_read)
 
     out = WaveOut(status, s_arr, c_arr, read_key, read_cid, write_key, wcid,
-                  msgs_cross, msgs_coord, waits)
+                  msgs_cross, msgs_coord, waits, evicted)
     return store, out, clock
 
 
@@ -293,11 +328,38 @@ class RunStats(NamedTuple):
     msgs_cross: int
     msgs_coord: int
     waits: int
+    evicted_visible: int   # still-visible versions destroyed by ring reuse
     waves: int
 
 
+def step_wave(store: MVStore, wave: Wave, wave_idx: int, clock,
+              *, sched: str = "postsi", n_nodes: int = 8, skew: int = 0,
+              host_skew: np.ndarray | None = None, watermark=None,
+              gc_track: bool = True, gc_block: bool = False):
+    """Closed-loop step API (DESIGN.md §8): execute ONE wave and sync the
+    per-txn outcomes to host so a caller can requeue aborted transactions.
+
+    Unlike the replay drivers below, the caller owns the loop: it keeps the
+    device-resident ``store``/``clock`` opaque between steps and receives a
+    numpy ``WaveOut`` whose ``status``/``s``/``c`` rows line up with
+    ``wave.tid`` — everything the wave former and retry pipeline in
+    ``repro.service`` need.  ``watermark``/``gc_block`` plumb the service's
+    GC policy into the engine's install path.
+
+    Returns ``(store', out_np, clock')``.
+    """
+    hs = None if host_skew is None else jnp.asarray(host_skew, jnp.int32)
+    wm = None if watermark is None else jnp.int32(watermark)
+    store, out, clock = run_wave(store, wave, jnp.int32(wave_idx), clock,
+                                 jnp.int32(n_nodes), sched=sched, skew=skew,
+                                 host_skew=hs, watermark=wm,
+                                 gc_track=gc_track, gc_block=gc_block)
+    return store, jax.tree_util.tree_map(np.asarray, out), clock
+
+
 def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
-                 host_skew: np.ndarray | None = None, n_nodes: int = 8):
+                 host_skew: np.ndarray | None = None, n_nodes: int = 8,
+                 gc_track: bool = False, gc_block: bool = False):
     """Per-wave debug driver: one jitted dispatch + host sync per wave.
 
     Returns (store, history, stats); history is a list of numpy-ified
@@ -311,20 +373,23 @@ def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
     for w_idx, wave in enumerate(waves):
         store, out, clock = run_wave(store, wave, jnp.int32(w_idx + 1), clock,
                                      jnp.int32(n_nodes), sched=sched,
-                                     skew=skew, host_skew=hs)
+                                     skew=skew, host_skew=hs,
+                                     gc_track=gc_track, gc_block=gc_block)
         history.append((np.asarray(wave.tid),
                         jax.tree_util.tree_map(np.asarray, out)))
     return store, history, _stats_of(history)
 
 
 def _stats_of(history) -> RunStats:
-    tot = dict(committed=0, aborted=0, msgs_cross=0, msgs_coord=0, waits=0)
+    tot = dict(committed=0, aborted=0, msgs_cross=0, msgs_coord=0, waits=0,
+               evicted_visible=0)
     for _, o in history:
         tot["committed"] += int((o.status == COMMITTED).sum())
         tot["aborted"] += int((o.status == ABORTED).sum())
         tot["msgs_cross"] += int(o.msgs_cross)
         tot["msgs_coord"] += int(o.msgs_coord)
         tot["waits"] += int(o.waits)
+        tot["evicted_visible"] += int(o.evicted_visible)
     return RunStats(waves=len(history), **tot)
 
 
@@ -339,10 +404,12 @@ def stack_waves(waves) -> Wave:
                   for f in Wave._fields))
 
 
-@functools.partial(jax.jit, static_argnames=("sched", "skew"))
+@functools.partial(jax.jit,
+                   static_argnames=("sched", "skew", "gc_track", "gc_block"))
 def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
                 n_nodes: jax.Array, sched: str = "postsi", skew: int = 0,
-                host_skew: jax.Array | None = None):
+                host_skew: jax.Array | None = None, gc_track: bool = False,
+                gc_block: bool = False):
     """One device program for a whole workload: lax.scan over the wave axis
     carrying (store, clock); each step is the run_wave computation inlined.
     Returns (store', WaveOut with leading [W] axis, clock')."""
@@ -352,7 +419,8 @@ def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
         st, clk = carry
         wave, w_idx = xs
         st, out, clk = run_wave(st, wave, w_idx, clk, n_nodes, sched=sched,
-                                skew=skew, host_skew=host_skew)
+                                skew=skew, host_skew=host_skew,
+                                gc_track=gc_track, gc_block=gc_block)
         return (st, clk), out
 
     (store, clock), outs = lax.scan(
@@ -362,7 +430,8 @@ def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
 
 def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
                        skew: int = 0, host_skew: np.ndarray | None = None,
-                       n_nodes: int = 8):
+                       n_nodes: int = 8, gc_track: bool = False,
+                       gc_block: bool = False):
     """Fused driver: the entire workload as a single jitted dispatch.
 
     Same signature and same (store, history, stats) contract as
@@ -373,7 +442,8 @@ def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
     hs = None if host_skew is None else jnp.asarray(host_skew, jnp.int32)
     store, outs, _ = _scan_waves(store, stacked, jnp.int32(1),
                                  jnp.int32(n_nodes), sched=sched, skew=skew,
-                                 host_skew=hs)
+                                 host_skew=hs, gc_track=gc_track,
+                                 gc_block=gc_block)
     outs = jax.tree_util.tree_map(np.asarray, outs)
     history = [(np.asarray(w.tid), WaveOut(*(f[i] for f in outs)))
                for i, w in enumerate(waves)]

@@ -80,9 +80,50 @@ def read_newest(store: MVStore, keys: jax.Array):
     return read_visible(store, keys, jnp.broadcast_to(INF, keys.shape))
 
 
+def evicting_visible(store: MVStore, keys: jax.Array,
+                     watermark: jax.Array) -> jax.Array:
+    """GC watermark consult (DESIGN.md §8): would installing a new version of
+    ``keys`` evict a version that is still visible to a live snapshot?
+
+    The slot about to be reused (``head + 1``) holds the key's *oldest*
+    version.  That version is dead — reclaimable — once its superseding
+    version (the next-oldest slot) has ``CID <= watermark``: every snapshot a
+    live or future reader can still take is ``>= watermark``, and all of them
+    resolve to the superseder or newer.  Conversely, ``superseder.CID >
+    watermark`` means some snapshot in ``[watermark, superseder.CID)`` still
+    maps to the evicted version — reusing the slot silently corrupts that
+    read.  ``watermark`` is the decentralized min over live readers'
+    ``s_lo`` (plus any external pins; see repro/service/gc.py).
+
+    Returns a bool mask shaped like ``keys`` (False for empty slots — a ring
+    that has not wrapped yet never evicts anything).
+    """
+    k = jnp.minimum(keys, store.n_keys - 1)
+    h_new = (store.head[k] + 1) % store.n_versions
+    evicted_live = store.tid[k, h_new] != NO_TID
+    superseder_cid = store.cid[k, (h_new + 1) % store.n_versions]
+    return evicted_live & (superseder_cid > watermark)
+
+
 def install_version(store: MVStore, key: jax.Array, value: jax.Array,
-                    tid: jax.Array, cid: jax.Array, wave_idx: jax.Array) -> MVStore:
-    """Push one new version onto a key's ring (commit-phase write install)."""
+                    tid: jax.Array, cid: jax.Array, wave_idx: jax.Array,
+                    watermark: jax.Array | None = None):
+    """Push one new version onto a key's ring (commit-phase write install).
+
+    Returns ``(store', evicted_visible)`` where ``evicted_visible`` counts
+    ring-slot reuses that destroyed a version still visible to a live
+    snapshot per ``evicting_visible`` — the silent ring-buffer overflow this
+    store used to ignore.  With ``watermark=None`` the check is maximally
+    conservative (watermark 0: any wrap of a superseded-after-bootstrap
+    version counts); callers that maintain a real watermark pass it in and
+    see 0 whenever V is sized to the read horizon.  (The wave engines
+    inline this install as a masked scatter over a whole wave — see
+    ``engine.run_wave`` — and apply the same ``evicting_visible`` check
+    there; this host-level helper serves single-key callers and the unit
+    tests that pin the shared semantics.)
+    """
+    wm = jnp.int32(0) if watermark is None else watermark
+    evicted = evicting_visible(store, key, wm).astype(jnp.int32).sum()
     h = (store.head[key] + 1) % store.n_versions
     return store._replace(
         val=store.val.at[key, h].set(value),
@@ -91,7 +132,7 @@ def install_version(store: MVStore, key: jax.Array, value: jax.Array,
         sid=store.sid.at[key, h].set(0),
         head=store.head.at[key].set(h),
         wave=store.wave.at[key].set(wave_idx),
-    )
+    ), evicted
 
 
 def bump_sid(store: MVStore, key: jax.Array, slot: jax.Array,

@@ -41,14 +41,70 @@ def _pick_nodes(rng, host, n_nodes, distributed):
     return [host] + list(extra)
 
 
+SMALLBANK_O = 4
+
+
+def smallbank_txn(rng: np.random.RandomState, host: int, n_nodes: int,
+                  keys_per_node: int, dist_frac: float = 0.2,
+                  hot_frac: float = 0.0, hot_per_node: int = 20):
+    """One SmallBank transaction on ``host``: balance (2 reads), deposit
+    (1 rmw), transfer (2 rmw), write-check (1 read + 1 rmw).
+
+    Returns ``(op_kind, op_key, op_val)`` as ``[SMALLBANK_O]`` int32 arrays —
+    the per-txn building block shared by the batch generator below and the
+    open-stream request generator in ``repro.service``."""
+    O = SMALLBANK_O
+    op_kind = np.zeros(O, np.int32)
+    op_key = np.zeros(O, np.int32)
+    op_val = np.zeros(O, np.int32)
+    nodes = _pick_nodes(rng, host, n_nodes, rng.rand() < dist_frac)
+    hot = rng.rand() < hot_frac
+
+    def draw(node):
+        pool = hot_per_node if hot else keys_per_node
+        return _key(rng.randint(0, pool), node, n_nodes)
+
+    kind = rng.randint(0, 4)
+    if kind == 0:      # balance: read two accounts
+        op_kind[:2] = READ
+        op_key[0] = draw(nodes[0])
+        op_key[1] = draw(nodes[-1])
+    elif kind == 1:    # deposit
+        op_kind[0] = RMW
+        op_key[0] = draw(nodes[0])
+        op_val[0] = rng.randint(1, 100)
+    elif kind == 2:    # transfer: two rmws (possibly cross-node)
+        op_kind[:2] = RMW
+        op_key[0] = draw(nodes[0])
+        op_key[1] = draw(nodes[-1])
+        amt = rng.randint(1, 100)
+        op_val[0] = -amt
+        op_val[1] = amt
+    else:              # write-check: read one, rmw another
+        op_kind[0] = READ
+        op_kind[1] = RMW
+        op_key[0] = draw(nodes[0])
+        op_key[1] = draw(nodes[-1])
+        op_val[1] = -rng.randint(1, 50)
+    # de-dup keys inside a txn (engine assumes distinct write keys)
+    seen = {}
+    for o in range(O):
+        if op_kind[o] != NOP:
+            k = op_key[o]
+            if k in seen:
+                op_kind[o] = NOP
+            seen[k] = True
+    return op_kind, op_key, op_val
+
+
 def smallbank_waves(rng: np.random.RandomState, n_waves: int, T: int,
                     n_nodes: int, keys_per_node: int, dist_frac: float = 0.2,
                     hot_frac: float = 0.0, hot_per_node: int = 20,
                     tid0: int = 1) -> List[Wave]:
-    """SmallBank: balance (2 reads), deposit (1 rmw), transfer (2 rmw),
-    write-check (1 read + 1 rmw).  ``hot_frac`` of txns draw keys from the
+    """SmallBank in closed batches: ``n_waves`` waves of ``T`` txns drawn
+    from ``smallbank_txn``.  ``hot_frac`` of txns draw keys from the
     per-node hotspot (paper §V-D contention study)."""
-    O = 4
+    O = SMALLBANK_O
     waves = []
     for w in range(n_waves):
         op_kind = np.zeros((T, O), np.int32)
@@ -56,43 +112,9 @@ def smallbank_waves(rng: np.random.RandomState, n_waves: int, T: int,
         op_val = np.zeros((T, O), np.int32)
         host = rng.randint(0, n_nodes, T)
         for t in range(T):
-            nodes = _pick_nodes(rng, host[t], n_nodes, rng.rand() < dist_frac)
-            hot = rng.rand() < hot_frac
-
-            def draw(node):
-                pool = hot_per_node if hot else keys_per_node
-                return _key(rng.randint(0, pool), node, n_nodes)
-
-            kind = rng.randint(0, 4)
-            if kind == 0:      # balance: read two accounts
-                op_kind[t, :2] = READ
-                op_key[t, 0] = draw(nodes[0])
-                op_key[t, 1] = draw(nodes[-1])
-            elif kind == 1:    # deposit
-                op_kind[t, 0] = RMW
-                op_key[t, 0] = draw(nodes[0])
-                op_val[t, 0] = rng.randint(1, 100)
-            elif kind == 2:    # transfer: two rmws (possibly cross-node)
-                op_kind[t, :2] = RMW
-                op_key[t, 0] = draw(nodes[0])
-                op_key[t, 1] = draw(nodes[-1])
-                amt = rng.randint(1, 100)
-                op_val[t, 0] = -amt
-                op_val[t, 1] = amt
-            else:              # write-check: read one, rmw another
-                op_kind[t, 0] = READ
-                op_kind[t, 1] = RMW
-                op_key[t, 0] = draw(nodes[0])
-                op_key[t, 1] = draw(nodes[-1])
-                op_val[t, 1] = -rng.randint(1, 50)
-            # de-dup keys inside a txn (engine assumes distinct write keys)
-            seen = {}
-            for o in range(O):
-                if op_kind[t, o] != NOP:
-                    k = op_key[t, o]
-                    if k in seen:
-                        op_kind[t, o] = NOP
-                    seen[k] = True
+            op_kind[t], op_key[t], op_val[t] = smallbank_txn(
+                rng, host[t], n_nodes, keys_per_node, dist_frac, hot_frac,
+                hot_per_node)
         waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
     return waves
 
@@ -188,3 +210,31 @@ def micro_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
                 op_key[t, o] = k
         waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
     return waves
+
+
+# ---------------------------------------------------------------------------
+# open-stream arrival processes (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(rng: np.random.RandomState, rate: float,
+                     n_ticks: int) -> np.ndarray:
+    """Open-system arrivals: i.i.d. ``Poisson(rate)`` new requests per
+    scheduler tick (one tick = one wave slot of the closed-loop service)."""
+    return rng.poisson(rate, size=n_ticks).astype(np.int64)
+
+
+def bursty_arrivals(rng: np.random.RandomState, rate: float, n_ticks: int,
+                    burst_factor: float = 6.0, p_enter: float = 0.08,
+                    p_exit: float = 0.35) -> np.ndarray:
+    """Two-state Markov-modulated Poisson process: a calm state at ``rate``
+    and a burst state at ``rate * burst_factor``; geometric sojourns with
+    entry/exit probabilities per tick.  Mean offered load exceeds ``rate``
+    by the burst duty cycle — bursts model flash crowds, the case where the
+    wave former's admission control and the retry pipeline's backoff earn
+    their keep."""
+    counts = np.zeros(n_ticks, np.int64)
+    burst = False
+    for t in range(n_ticks):
+        burst = (rng.rand() < p_enter) if not burst else (rng.rand() >= p_exit)
+        counts[t] = rng.poisson(rate * burst_factor if burst else rate)
+    return counts

@@ -1,0 +1,17 @@
+"""Closed-loop transaction service on the decentralized wave engine.
+
+Three cooperating parts (DESIGN.md §8): the open-stream **wave former**
+(admission control + fixed-shape packing), the **abort-retry pipeline**
+(fresh TIDs, bounded exponential backoff, end-to-end latency tracking) and
+the **visibility-based GC watermark** (decentralized min over live readers'
+``s_lo``, consulted by the store's ring-slot reuse).
+"""
+from .former import TxnRequest, WaveFormer
+from .gc import VisibilityGC, seq_watermark
+from .retry import RetryPolicy
+from .service import ServiceReport, TxnService, smallbank_txn_gen
+
+__all__ = [
+    "TxnRequest", "WaveFormer", "VisibilityGC", "RetryPolicy",
+    "ServiceReport", "TxnService", "seq_watermark", "smallbank_txn_gen",
+]

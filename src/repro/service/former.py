@@ -1,0 +1,133 @@
+"""Open-stream wave former (DESIGN.md §8).
+
+The fused engine consumes fixed-shape ``[T, O]`` waves; an open system
+produces a ragged request stream.  The wave former is the adapter: it holds
+a bounded ready queue (admission control — a request arriving to a full
+queue is **rejected**, the load-shedding answer an open system must give),
+a retry calendar ordered by earliest-eligible tick, and packs up to ``T``
+transactions per tick into a wave, padding the tail with NOP rows so the
+jitted engine never recompiles.  Due retries are packed **before** fresh
+arrivals: a transaction that already burned scheduler work has priority
+over new load (no starvation under saturation).
+
+TIDs are a contiguous ``arange`` per wave — the engine's commit phase maps
+newest-version creators to wave-local slots by ``tid - tid[0]``
+(``commit_phase.creator_slots``), so the former owns the TID counter and
+every retry executes under a fresh TID, as the paper's rules require.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Wave
+from repro.core.commit_phase import NOP
+
+
+@dataclasses.dataclass
+class TxnRequest:
+    """One client transaction riding the closed loop."""
+    req_id: int
+    op_kind: np.ndarray          # [O] int32
+    op_key: np.ndarray           # [O] int32
+    op_val: np.ndarray           # [O] int32
+    host: int
+    arrive_tick: int = -1        # set at admission
+    attempts: int = 0            # executions so far
+    tid: int = -1                # TID of the latest execution
+    status: str = "new"          # new|queued|inflight|committed|dropped|rejected
+    commit_tick: int = -1
+    s: int = -1                  # induced interval of the committed run
+    c: int = -1
+
+    @property
+    def latency(self) -> int:
+        """End-to-end ticks from admission to commit (incl. the commit
+        tick); -1 until committed."""
+        if self.status != "committed":
+            return -1
+        return self.commit_tick - self.arrive_tick + 1
+
+
+class WaveFormer:
+    """Admission control + retry calendar + fixed-shape wave packing."""
+
+    def __init__(self, T: int, O: int, max_queue: Optional[int] = None,
+                 next_tid: int = 1):
+        self.T, self.O = T, O
+        self.max_queue = 4 * T if max_queue is None else max_queue
+        self.next_tid = next_tid
+        self.ready: deque = deque()          # admitted, eligible now (FIFO)
+        self._retry: list = []               # heap: (eligible_tick, seq, req)
+        self._seq = 0
+        self.rejected = 0
+        self.admitted = 0
+
+    # --------------------------------------------------------- admission
+    def offer(self, req: TxnRequest, tick: int) -> bool:
+        """Admit a fresh arrival, or shed it when the queue is full."""
+        assert req.op_kind.shape == (self.O,), (req.op_kind.shape, self.O)
+        if len(self.ready) >= self.max_queue:
+            req.status = "rejected"
+            self.rejected += 1
+            return False
+        req.status = "queued"
+        req.arrive_tick = tick
+        self.admitted += 1
+        self.ready.append(req)
+        return True
+
+    def requeue(self, req: TxnRequest, eligible_tick: int) -> None:
+        """Put an aborted transaction on the retry calendar (no admission
+        check — it already holds a slot in the system)."""
+        req.status = "queued"
+        self._seq += 1
+        heapq.heappush(self._retry, (eligible_tick, self._seq, req))
+
+    # ----------------------------------------------------------- packing
+    def backlog(self, tick: int) -> int:
+        """Transactions eligible to run at ``tick`` (ready + due retries)."""
+        return len(self.ready) + sum(1 for t, _, _ in self._retry if t <= tick)
+
+    def pending(self) -> int:
+        """All transactions still inside the former, due or not."""
+        return len(self.ready) + len(self._retry)
+
+    def form(self, tick: int) -> Optional[Tuple[Wave, List[TxnRequest]]]:
+        """Pack one wave for ``tick``; ``None`` when nothing is eligible.
+
+        Returns ``(wave, slots)``: ``slots[i]`` is the request in wave row
+        ``i`` (the NOP padding rows have no request and always commit
+        vacuously — the service skips them when reading outcomes)."""
+        slots: List[TxnRequest] = []
+        while len(slots) < self.T and self._retry and self._retry[0][0] <= tick:
+            slots.append(heapq.heappop(self._retry)[2])
+        while len(slots) < self.T and self.ready:
+            slots.append(self.ready.popleft())
+        if not slots:
+            return None
+
+        T, O = self.T, self.O
+        op_kind = np.full((T, O), NOP, np.int32)
+        op_key = np.zeros((T, O), np.int32)
+        op_val = np.zeros((T, O), np.int32)
+        host = np.zeros(T, np.int32)
+        tid0 = self.next_tid
+        self.next_tid += T                     # padding rows burn TIDs too
+        for i, req in enumerate(slots):
+            op_kind[i] = req.op_kind
+            op_key[i] = req.op_key
+            op_val[i] = req.op_val
+            host[i] = req.host
+            req.tid = tid0 + i
+            req.attempts += 1
+            req.status = "inflight"
+        wave = Wave(op_kind=jnp.asarray(op_kind), op_key=jnp.asarray(op_key),
+                    op_val=jnp.asarray(op_val), host=jnp.asarray(host),
+                    tid=jnp.asarray(tid0 + np.arange(T), jnp.int32))
+        return wave, slots

@@ -1,0 +1,92 @@
+"""Visibility-based version GC watermark (DESIGN.md §8).
+
+The paper removes the central timestamp authority; this module removes the
+central garbage-collection authority the same way.  The reclamation
+watermark is not handed down by a coordinator — it is the **decentralized
+min over live readers' ``s_lo``**: a version superseded by a commit at or
+below the watermark can never again be the visible version for any live or
+future snapshot, so its ring slot may be reused.  (Proof sketch, mirrored by
+``tests/test_gc_watermark.py`` against the sequential oracle: a reader that
+would still need version ``v`` must take a snapshot ``s`` with
+``s < CID(superseder) <= watermark <= s_lo <= s`` — contradiction; PostSI
+rule 5 aborts it before it can read ``v``.)
+
+In the wave engine every reader's snapshot is pinned at its wave boundary,
+so between waves the min over live readers collapses to the engine clock at
+the last boundary — that is the engine's default watermark
+(``run_wave(watermark=None)``).  This tracker contributes the parts the
+engine cannot see:
+
+* **pins** — external long-lived readers (an s_hi-pinned retry per paper
+  §IV-B, a backup/analytics scanner, a clock-skewed host whose snapshot
+  lags by ``skew`` waves) register the lowest snapshot they may still take;
+  the watermark is the min over all pins and never exceeds the clock.
+* **accounting** — the per-wave ``evicted_visible`` counters stream in via
+  ``observe`` so the service can report when V (the ring depth) is too
+  small for the offered load, and ``block=True`` asks the engine to abort
+  the offending writer instead of corrupting a still-visible version.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Optional
+
+
+def seq_watermark(scheduler, pins=()) -> int:
+    """The decentralized watermark over a ``repro.core.seq.SeqScheduler``:
+    min over running transactions' ``s_lo`` and external ``pins``; with no
+    live reader at all it rises to the newest commit time (every future
+    reader then resolves to newest versions only).  Versions superseded at
+    or below this value are reclaimable — ``tests/test_gc_watermark.py``
+    checks that differentially against the oracle's actual reads."""
+    lows = [t.s_lo for t in scheduler.txns.values() if t.status == "running"]
+    lows += [int(p) for p in pins]
+    if lows:
+        return min(lows)
+    return max((v.cid for chain in scheduler.versions.values()
+                for v in chain), default=0)
+
+
+class VisibilityGC:
+    """Watermark tracker + eviction accounting for one service instance."""
+
+    def __init__(self, block: bool = False):
+        self.block = block
+        self.clock = 0                    # engine clock after the last wave
+        self.evicted_visible = 0          # cumulative watermark violations
+        self._pins: Dict[int, int] = {}   # handle -> pinned snapshot floor
+        self._handles = itertools.count(1)
+
+    # ------------------------------------------------------------- pins
+    def pin(self, snapshot_floor: int) -> int:
+        """Register a live reader whose snapshot may go as low as
+        ``snapshot_floor``; returns a handle for ``release``."""
+        h = next(self._handles)
+        self._pins[h] = int(snapshot_floor)
+        return h
+
+    def release(self, handle: int) -> None:
+        self._pins.pop(handle, None)
+
+    # -------------------------------------------------------- watermark
+    def watermark(self) -> Optional[int]:
+        """Current reclamation watermark, or ``None`` when no pins exist —
+        the engine then uses its own boundary collapse (the wave-entry
+        clock), which is the exact min over its live readers."""
+        if not self._pins:
+            return None
+        return min(min(self._pins.values()), self.clock)
+
+    # ------------------------------------------------------- accounting
+    def observe(self, out_np, clock: int) -> None:
+        """Fold one wave's outcome into the accounting state."""
+        self.clock = int(clock)
+        self.evicted_visible += int(out_np.evicted_visible)
+
+    def report(self) -> Dict[str, int]:
+        return {
+            "evicted_visible": self.evicted_visible,
+            "pins": len(self._pins),
+            "watermark": self.watermark() if self._pins else self.clock,
+            "blocking": int(self.block),
+        }

@@ -1,0 +1,228 @@
+"""Closed-loop transaction service over the fused wave engine (DESIGN.md §8).
+
+The replay drivers in ``repro.core.engine`` execute *static* wave lists:
+aborted transactions die silently and nothing ever arrives.  ``TxnService``
+closes the loop into the open system the paper describes serving:
+
+    arrivals ──> WaveFormer ──> engine.step_wave ──> outcomes
+                   ^  (admission, packing)   │
+                   └── RetryPolicy (backoff) ┴──> committed / dropped
+
+Each scheduler *tick* forms at most one ``[T, O]`` wave from due retries
+plus fresh arrivals, executes it on-device through ``engine.step_wave``
+(any of the six schedulers), and routes per-transaction outcomes: commits
+record end-to-end latency (admission tick → commit tick); aborts re-enter
+through the retry calendar with a fresh TID and exponential backoff until
+the retry budget drops them.  The ``VisibilityGC`` tracker supplies the
+version-reclamation watermark to the engine's install path and accumulates
+the ``evicted_visible`` accounting.
+
+The full history (including aborted attempts) is kept in the engine's
+``(tids, WaveOut)`` format, so the standard verifiers run unchanged on
+served traffic: ``service.verify()`` checks SI/CV validity and that the
+final store matches a serial replay of the committed history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COMMITTED, make_store, step_wave
+from repro.core.verify import final_values_ok, verify_cv, verify_si
+from repro.core.workloads import SMALLBANK_O, smallbank_txn
+
+from .former import TxnRequest, WaveFormer
+from .gc import VisibilityGC
+from .retry import RetryPolicy
+
+
+def _pct(xs: List[int], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+@dataclasses.dataclass
+class ServiceReport:
+    """End-of-run metrics for one closed-loop session."""
+    sched: str
+    offered: int           # requests presented to admission
+    admitted: int
+    rejected: int          # shed at admission (queue full)
+    committed: int
+    dropped: int           # retry budget exhausted
+    retries: int           # re-executions scheduled
+    executions: int        # total txn slots executed (incl. retries)
+    waves: int
+    idle_ticks: int
+    wall_s: float
+    txns_per_sec: float    # sustained executed txns/sec (wall)
+    goodput_tps: float     # committed txns/sec (wall)
+    retry_rate: float      # retries / admitted
+    latency_p50: float     # ticks, admission -> commit
+    latency_p95: float
+    latency_p99: float
+    evicted_visible: int   # GC watermark violations observed
+    gc: Dict[str, int]
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+class TxnService:
+    """Closed-loop transaction service: open stream in, commits out."""
+
+    def __init__(self, n_keys: int, n_versions: int = 8, T: int = 64,
+                 O: int = SMALLBANK_O, sched: str = "postsi",
+                 n_nodes: int = 8, retry: Optional[RetryPolicy] = None,
+                 gc_block: bool = False, max_queue: Optional[int] = None,
+                 host_skew: Optional[np.ndarray] = None, seed: int = 0):
+        self.sched = sched
+        self.n_nodes = n_nodes
+        self.host_skew = host_skew
+        self.T, self.O = T, O
+        self.store = make_store(n_keys, n_versions)
+        self.n_keys = n_keys
+        self.clock = jnp.int32(1)
+        self.former = WaveFormer(T, O, max_queue=max_queue)
+        self.retry = retry or RetryPolicy()
+        self.gc = VisibilityGC(block=gc_block)
+        self.rng = np.random.RandomState(seed)       # backoff jitter only
+        self.tick = 0
+        self.wave_idx = 0
+        self.history: List = []                      # (tids, WaveOut) numpy
+        self.requests: List[TxnRequest] = []         # every offered request
+        self.committed = 0
+        self.dropped = 0
+        self.retries = 0
+        self.executions = 0
+        self.idle_ticks = 0
+        self.latencies: List[int] = []
+        self._req_ids = itertools.count(1)
+        self._wall_s = 0.0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, op_kind: np.ndarray, op_key: np.ndarray,
+               op_val: np.ndarray, host: int) -> TxnRequest:
+        """Offer one transaction to admission control; the returned request
+        carries its fate (``rejected`` immediately, else async)."""
+        req = TxnRequest(next(self._req_ids), np.asarray(op_kind, np.int32),
+                         np.asarray(op_key, np.int32),
+                         np.asarray(op_val, np.int32), int(host))
+        self.requests.append(req)
+        self.former.offer(req, self.tick + 1)     # eligible from next tick
+        return req
+
+    # ------------------------------------------------------------- loop
+    def step(self):
+        """One scheduler tick: form a wave, execute it, route outcomes.
+        Returns the numpy ``WaveOut`` or ``None`` for an idle tick."""
+        self.tick += 1
+        t0 = time.perf_counter()
+        formed = self.former.form(self.tick)
+        if formed is None:
+            self.idle_ticks += 1
+            return None
+        wave, slots = formed
+        self.wave_idx += 1
+        self.store, out, self.clock = step_wave(
+            self.store, wave, self.wave_idx, self.clock, sched=self.sched,
+            n_nodes=self.n_nodes, host_skew=self.host_skew,
+            watermark=self.gc.watermark(), gc_block=self.gc.block)
+        self.gc.observe(out, int(self.clock))
+        self.history.append((np.asarray(wave.tid), out))
+        self.executions += len(slots)
+        for i, req in enumerate(slots):
+            if out.status[i] == COMMITTED:
+                req.status = "committed"
+                req.commit_tick = self.tick
+                req.s, req.c = int(out.s[i]), int(out.c[i])
+                self.committed += 1
+                self.latencies.append(req.latency)
+            else:
+                delay = self.retry.next_delay(req.attempts, self.rng)
+                if delay is None:
+                    req.status = "dropped"
+                    self.dropped += 1
+                else:
+                    self.retries += 1
+                    self.former.requeue(req, self.tick + delay)
+        self._wall_s += time.perf_counter() - t0
+        return out
+
+    def drain(self, max_ticks: Optional[int] = None) -> int:
+        """Run ticks until no request is pending (or the safety cap).
+        Returns the number of ticks consumed."""
+        if max_ticks is None:
+            max_ticks = (self.retry.worst_case_ticks()
+                         + self.former.pending() // max(self.T, 1) + 8)
+        n = 0
+        while self.former.pending() and n < max_ticks:
+            self.step()
+            n += 1
+        return n
+
+    def run_stream(self, arrivals: Iterable[int],
+                   txn_gen: Callable[[], tuple], drain: bool = True):
+        """Feed ``arrivals[t]`` fresh requests per tick (from ``txn_gen``,
+        which returns ``(op_kind, op_key, op_val, host)``), stepping once
+        per tick; optionally drain the backlog afterwards."""
+        for n_arr in arrivals:
+            for _ in range(int(n_arr)):
+                self.submit(*txn_gen())
+            self.step()
+        if drain:
+            self.drain()
+        return self.report()
+
+    # ------------------------------------------------------------ output
+    def report(self) -> ServiceReport:
+        wall = max(self._wall_s, 1e-9)
+        admitted = self.former.admitted
+        return ServiceReport(
+            sched=self.sched,
+            offered=len(self.requests),
+            admitted=admitted,
+            rejected=self.former.rejected,
+            committed=self.committed,
+            dropped=self.dropped,
+            retries=self.retries,
+            executions=self.executions,
+            waves=self.wave_idx,
+            idle_ticks=self.idle_ticks,
+            wall_s=round(wall, 6),
+            txns_per_sec=round(self.executions / wall, 1),
+            goodput_tps=round(self.committed / wall, 1),
+            retry_rate=round(self.retries / max(admitted, 1), 4),
+            latency_p50=_pct(self.latencies, 50),
+            latency_p95=_pct(self.latencies, 95),
+            latency_p99=_pct(self.latencies, 99),
+            evicted_visible=self.gc.evicted_visible,
+            gc=self.gc.report(),
+        )
+
+    def verify(self) -> List[str]:
+        """Post-hoc correctness of the served history: SI (or CV) validity
+        plus final-store-matches-serial-replay, via ``repro.core.verify``."""
+        check = verify_cv if self.sched == "cv" else verify_si
+        errors = check(self.history)
+        errors += final_values_ok(self.store, self.history, self.n_keys)
+        return errors
+
+
+def smallbank_txn_gen(rng: np.random.RandomState, n_nodes: int,
+                      keys_per_node: int, dist_frac: float = 0.2,
+                      hot_frac: float = 0.0, hot_per_node: int = 20):
+    """Request factory for ``run_stream``: SmallBank transactions on random
+    host nodes (the open-stream analogue of ``workloads.smallbank_waves``)."""
+    def gen():
+        host = int(rng.randint(0, n_nodes))
+        op_kind, op_key, op_val = smallbank_txn(
+            rng, host, n_nodes, keys_per_node, dist_frac, hot_frac,
+            hot_per_node)
+        return op_kind, op_key, op_val, host
+    return gen

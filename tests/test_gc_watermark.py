@@ -1,0 +1,245 @@
+"""GC watermark safety (DESIGN.md §8), differential against core/seq.py.
+
+The reclamation rule — a version is garbage once its superseder's CID is at
+or below the watermark (the decentralized min over live readers' ``s_lo``
+plus external pins) — must never destroy a version any live transaction
+can still read.  We check that *empirically* against the sequential oracle:
+drive random interleavings through ``SeqScheduler``, reclaim (irreversibly)
+whatever the rule allows after every commit, and assert no later successful
+read or commit-time SID bump ever touches a reclaimed version.
+
+Also covered: the engine-side counter (``RunStats.evicted_visible``) fires
+exactly when V is too small for the write rate, ``gc_block`` converts those
+corruptions into aborts, and the pin API protects §IV-B s_hi-pinned retries
+(whose snapshot floor the min-over-``s_lo`` alone cannot see).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import evicting_visible, make_store, run_workload, \
+    run_workload_fused
+from repro.core.seq import SeqScheduler
+from repro.core.store import bump_sid, install_version
+from repro.core.workloads import micro_waves
+from repro.service import VisibilityGC, seq_watermark
+
+
+# ---------------------------------------------------------------------------
+# differential: watermark rule vs the sequential oracle's actual reads
+# ---------------------------------------------------------------------------
+
+def _reclaim(s: SeqScheduler, reclaimed: dict, era: int, pins=()) -> None:
+    """Irreversibly mark every version the watermark rule allows to die,
+    stamped with the era (event count) of first reclamation."""
+    wm = seq_watermark(s, pins)
+    for key, chain in s.versions.items():
+        for idx in range(len(chain) - 1):
+            if chain[idx + 1].cid <= wm:
+                reclaimed.setdefault((key, idx), era)
+
+
+def _drive_with_gc(seed: int, n_keys=5, n_slots=4, n_actions=60):
+    """Random begin/read/write/commit interleaving; after every event,
+    reclaim per the watermark.  Safety: no transaction ever reads (or
+    SID-bumps at commit) a version reclaimed *while it was live*.
+
+    A version reclaimed BEFORE a transaction began is different: PostSI's
+    rule 4(b) can collapse a newborn's ``s_hi`` below past watermarks, and
+    §IV-B's CID-visibility read then reaches for the old version — in a
+    real engine that is an availability abort ("version not retained"),
+    not a corruption, and the pin API exists to prevent it (see
+    ``test_pin_protects_s_hi_pinned_retry``).  We count those separately.
+
+    Returns (reclaimed_count, pre_birth_misses).
+    """
+    rng = np.random.RandomState(seed)
+    s = SeqScheduler(n_keys, "postsi")
+    reclaimed: dict = {}               # (key, idx) -> era first reclaimed
+    birth_era: dict = {}               # tid -> era at begin
+    tids = {}
+    val = 0
+    pre_birth_misses = 0
+    for era in range(n_actions):
+        kind = rng.randint(0, 3)
+        slot = rng.randint(0, n_slots)
+        key = rng.randint(0, n_keys)
+        tid = tids.get(slot)
+        if tid is None or s.txns[tid].status != "running":
+            tid = s.begin()
+            birth_era[tid] = era
+            tids[slot] = tid
+        if kind == 0:
+            before = s.txns[tid].reads.get(key)
+            got = s.read(tid, key)
+            if (got is not None and s.txns[tid].status == "running"
+                    and key in s.txns[tid].reads):   # not read-your-own-write
+                idx = s.txns[tid].reads[key]
+                if idx != before and (key, idx) in reclaimed:
+                    assert reclaimed[(key, idx)] < birth_era[tid], (
+                        f"seed={seed}: txn {tid} (born era "
+                        f"{birth_era[tid]}) read version key={key} "
+                        f"idx={idx} reclaimed at era "
+                        f"{reclaimed[(key, idx)]} while it was live")
+                    pre_birth_misses += 1
+        elif kind == 1:
+            val += 1
+            s.write(tid, key, val)
+        else:
+            t = s.txns[tid]
+            if t.status == "running":
+                held = list(t.reads.items())
+                ok = s.commit(tid)
+                if ok:
+                    # rule 4(c) bumped SIDs of every held read version —
+                    # none may have been reclaimed while the txn was live
+                    for k, idx in held:
+                        if (k, idx) in reclaimed:
+                            assert reclaimed[(k, idx)] < birth_era[tid], (
+                                f"seed={seed}: SID bump on version "
+                                f"key={k} idx={idx} reclaimed while "
+                                f"txn {tid} was live")
+        _reclaim(s, reclaimed, era)
+    return len(reclaimed), pre_birth_misses
+
+
+def test_watermark_never_reclaims_readable_versions():
+    total = 0
+    for seed in range(40):
+        n, _ = _drive_with_gc(seed)
+        total += n
+    assert total > 0       # the rule actually reclaimed something
+
+
+def test_watermark_rises_when_idle_and_tracks_min_s_lo():
+    s = SeqScheduler(2, "postsi")
+    for v in range(3):                       # B = key 1 gets cids 1, 2, 3
+        t = s.begin()
+        s.write(t, 1, 10 + v)
+        assert s.commit(t)
+    assert seq_watermark(s) == 3             # idle: newest commit time
+    t1 = s.begin()
+    assert s.read(t1, 0) is not None         # s_lo stays 0 (bootstrap read)
+    assert seq_watermark(s) == 0             # live reader floors the min
+    assert seq_watermark(s, pins=(2,)) == 0
+    assert s.commit(t1)
+    assert seq_watermark(s, pins=(2,)) == 2  # pin holds it below the clock
+
+
+def test_pin_protects_s_hi_pinned_retry():
+    """Paper §IV-B retries read *old* versions (s_hi pinned below the hot
+    key's newest CID).  The min-over-live-s_lo watermark cannot see a pin
+    that belongs to a not-yet-begun retry — without registering it, the
+    rule legally reclaims the version the retry needs; with the pin held
+    in VisibilityGC, the version survives and the retry commits."""
+    def build():
+        s = SeqScheduler(2, "postsi")
+        for v in range(3):                   # hot B: cids 1, 2, 3
+            t = s.begin()
+            s.write(t, 1, 10 + v)
+            assert s.commit(t)
+        return s
+
+    pin = 1                                  # retry may snapshot as low as 1
+
+    # without the pin: idle watermark = 3 reclaims B@cid1 and B@cid2 ...
+    s = build()
+    reclaimed: dict = {}
+    _reclaim(s, reclaimed, era=0)
+    t = s.begin(s_hi_pin=pin)
+    assert s.read(t, 1) is not None
+    idx = s.txns[t].reads[1]
+    assert (1, idx) in reclaimed             # ... exactly what the retry read
+
+    # with the pin registered before reclamation: the version survives
+    s = build()
+    gcv = VisibilityGC()
+    h = gcv.pin(pin)
+    reclaimed = {}
+    _reclaim(s, reclaimed, era=0, pins=gcv._pins.values())
+    t = s.begin(s_hi_pin=pin)
+    assert s.read(t, 1) is not None
+    assert (1, s.txns[t].reads[1]) not in reclaimed
+    assert s.commit(t)
+    gcv.release(h)
+
+
+# ---------------------------------------------------------------------------
+# store: install_version accounting + evicting_visible semantics
+# ---------------------------------------------------------------------------
+
+def test_install_version_counts_visible_evictions():
+    """The host-level install reports the silent ring overflow: wrapping a
+    V=2 ring evicts nothing at first (empty slot), then a dead version
+    (superseder at/below the watermark), then a still-visible one."""
+    st = make_store(n_keys=3, n_versions=2)
+    key = jnp.int32(1)
+    # ring: [bootstrap cid0] [empty] -> install cid 5 evicts the empty slot
+    st, ev = install_version(st, key, jnp.int32(11), jnp.int32(1),
+                             jnp.int32(5), jnp.int32(1), watermark=jnp.int32(0))
+    assert int(ev) == 0
+    assert not bool(evicting_visible(st, key, jnp.int32(5)))
+    # next install evicts the bootstrap, whose superseder (cid 5) is at the
+    # watermark -> dead, reclaim is safe
+    st, ev = install_version(st, key, jnp.int32(12), jnp.int32(2),
+                             jnp.int32(9), jnp.int32(2), watermark=jnp.int32(5))
+    assert int(ev) == 0
+    # now the ring holds cids (5, 9); with the watermark still at 5 the
+    # cid-5 version is the visible one for snapshots in [5, 9) -> evicting
+    # it must be counted
+    assert bool(evicting_visible(st, key, jnp.int32(5)))
+    st, ev = install_version(st, key, jnp.int32(13), jnp.int32(3),
+                             jnp.int32(14), jnp.int32(3),
+                             watermark=jnp.int32(5))
+    assert int(ev) == 1
+    # other keys' rings are untouched throughout
+    assert int(st.head[0]) == 0 and int(st.head[2]) == 0
+
+
+def test_bump_sid_is_monotone():
+    st = make_store(n_keys=2, n_versions=2)
+    st = bump_sid(st, jnp.int32(0), jnp.int32(0), jnp.int32(7))
+    assert int(st.sid[0, 0]) == 7
+    st = bump_sid(st, jnp.int32(0), jnp.int32(0), jnp.int32(3))
+    assert int(st.sid[0, 0]) == 7          # rule 4(c): max, never lowered
+
+
+# ---------------------------------------------------------------------------
+# engine: the evicted_visible counter and gc_block
+# ---------------------------------------------------------------------------
+
+def _blind_waves():
+    rng = np.random.RandomState(1)
+    return micro_waves(rng, 6, 32, 4, 60, n_ops=4, read_ratio=0.2,
+                       hot_frac=0.8, hot_per_node=2, blind_frac=0.9)
+
+
+def test_engine_counter_reports_small_rings():
+    waves = _blind_waves()
+    evicted = {}
+    for V in (2, 16):
+        _, _, st = run_workload(make_store(4 * 60, V), waves,
+                                sched="postsi", n_nodes=4, gc_track=True)
+        evicted[V] = st.evicted_visible
+    assert evicted[2] > 0          # V too small: still-visible versions died
+    assert evicted[16] == 0        # watermark respected: nothing visible died
+
+
+def test_engine_gc_block_trades_corruption_for_aborts():
+    waves = _blind_waves()
+    _, _, free = run_workload(make_store(4 * 60, 2), waves,
+                              sched="postsi", n_nodes=4, gc_track=True)
+    _, _, blocked = run_workload(make_store(4 * 60, 2), waves,
+                                 sched="postsi", n_nodes=4, gc_block=True)
+    assert free.evicted_visible > 0
+    assert blocked.evicted_visible == 0
+    assert blocked.aborted > free.aborted
+    assert blocked.committed + blocked.aborted == free.committed + free.aborted
+
+
+def test_engine_fused_matches_perwave_counter():
+    waves = _blind_waves()
+    _, _, a = run_workload(make_store(4 * 60, 2), waves, sched="postsi",
+                           n_nodes=4, gc_track=True)
+    _, _, b = run_workload_fused(make_store(4 * 60, 2), waves,
+                                 sched="postsi", n_nodes=4, gc_track=True)
+    assert a == b and a.evicted_visible > 0

@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) for the closed-loop service.
+
+The retry-pipeline contract (DESIGN.md §8), over randomized arrival
+processes, contention mixes and schedulers:
+
+* **commit-or-drop** — every admitted transaction reaches a terminal state
+  within the retry bound: committed (with a latency inside the worst-case
+  backoff horizon) or dropped after exactly ``max_attempts`` executions;
+  nothing is lost or left in flight after drain.
+* **serial-replay equivalence** — the served history (including aborted
+  attempts) is snapshot-isolated and the final store state matches a serial
+  replay of the committed transactions (``repro.core.verify``).
+* **watermark safety** — the GC watermark rule never reclaims a version
+  readable by a transaction live at reclamation time, for arbitrary
+  sequential interleavings (the randomized twin of
+  ``test_gc_watermark.py``).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workloads import poisson_arrivals
+from repro.service import RetryPolicy, TxnService, smallbank_txn_gen
+
+T = 8
+N_NODES, KPN = 4, 30
+
+
+def _run_session(seed: int, sched: str, hot: float, rate: float,
+                 max_attempts: int):
+    """One closed-loop session; returns (service, report)."""
+    rng = np.random.RandomState(seed)
+    svc = TxnService(n_keys=N_NODES * KPN, T=T, sched=sched,
+                     n_nodes=N_NODES,
+                     retry=RetryPolicy(max_attempts=max_attempts),
+                     max_queue=2 * T, seed=seed)
+    gen = smallbank_txn_gen(rng, N_NODES, KPN, dist_frac=0.3, hot_frac=hot,
+                            hot_per_node=2)
+    report = svc.run_stream(poisson_arrivals(rng, rate, 8), gen)
+    return svc, report
+
+
+def check_commit_or_drop(seed: int, sched: str, hot: float, rate: float,
+                         max_attempts: int) -> None:
+    svc, rep = _run_session(seed, sched, hot, rate, max_attempts)
+    assert svc.former.pending() == 0                 # fully drained
+    assert rep.committed + rep.dropped == rep.admitted
+    assert rep.offered == rep.admitted + rep.rejected
+    horizon = svc.retry.worst_case_ticks() + svc.tick
+    for r in svc.requests:
+        assert r.status in ("committed", "dropped", "rejected")
+        if r.status == "committed":
+            assert 1 <= r.attempts <= max_attempts
+            assert 1 <= r.latency <= horizon
+        elif r.status == "dropped":
+            assert r.attempts == max_attempts        # budget fully spent
+    # serial-replay equivalence of the committed history
+    assert svc.verify() == [], svc.verify()[:3]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["postsi", "si"]),
+       st.floats(0.0, 0.9), st.floats(2.0, 14.0), st.integers(1, 6))
+def test_admitted_txns_commit_or_drop(seed, sched, hot, rate, max_attempts):
+    check_commit_or_drop(seed, sched, hot, rate, max_attempts)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.3, 0.9))
+def test_cv_service_serial_replay(seed, hot):
+    svc, rep = _run_session(seed, "cv", hot, 10.0, 4)
+    assert rep.committed + rep.dropped == rep.admitted
+    assert svc.verify() == []
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 100_000))
+def test_watermark_safety_random_interleavings(seed):
+    from test_gc_watermark import _drive_with_gc
+    _drive_with_gc(seed, n_keys=4, n_slots=3, n_actions=50)
