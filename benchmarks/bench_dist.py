@@ -1,0 +1,226 @@
+"""Distributed wave-engine benchmark: the decentralized-scaling story on a
+virtual-device mesh (DESIGN.md §4).
+
+Needs more than one XLA device, so ``main()`` defaults
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* importing
+jax (the device count is locked at jax init) — which is also why the
+``benchmarks.run dist`` block shells out to this module instead of calling
+into it.  Three sections, all through the ONE shared commit loop
+(``engine.run_wave_on``) over a ``MeshSubstrate``:
+
+* **scaling** — goodput (committed txns/s) for every scheduler × node
+  count, fused executor, fixed total key space (so more nodes = smaller
+  blocks + more peer-collective fan-in, the paper's §V scaling axis);
+* **executor** — fused scan-on-mesh vs per-wave dispatch at max nodes:
+  the host-sync tax measured on the distributed path;
+* **service** — one closed-loop SmallBank session served from the mesh
+  (``TxnService(mesh=...)``) against the identical single-device session:
+  commits must match exactly, walls differ.
+
+Prints ``name,us_per_call,derived`` CSV rows (aggregator format) and writes
+``BENCH_dist.json`` at the repo root.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_dist [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_dist.json")
+
+N_WAVES = 8
+WAVE_T = 64
+N_KEYS = 512            # divisible by every node count below
+NODE_COUNTS = (1, 2, 4, 8)
+LOAD_FACTOR = 0.9
+SVC_TICKS = 10
+
+SMOKE = dict(n_waves=3, T=16, node_counts=(1, 2), svc_ticks=5,
+             scheds=("postsi", "si"))
+
+
+def _mk_waves(n_waves: int, T: int, n_nodes: int, n_keys: int):
+    import numpy as np
+    from repro.core.workloads import smallbank_waves
+    return smallbank_waves(np.random.RandomState(7), n_waves, T, n_nodes,
+                           n_keys // n_nodes, dist_frac=0.3, hot_frac=0.4,
+                           hot_per_node=4)
+
+
+def _host_skew(sched: str, n_nodes: int):
+    import numpy as np
+    return (np.round(np.linspace(0, 2, n_nodes)).astype(np.int32)
+            if sched == "clocksi" else None)
+
+
+def _timed(setup, fn, reps: int = 3):
+    """(result, best wall seconds) for ``fn(setup())``.  The first call pays
+    jit outside the timer, and each rep's fresh store (allocation +
+    device_put sharding) is built and synced *before* its timer starts —
+    only mesh execution is measured."""
+    import jax
+    out = fn(setup())
+    best = float("inf")
+    for _ in range(reps):
+        arg = jax.block_until_ready(setup())
+        t0 = time.perf_counter()
+        out = fn(arg)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _scaling(scheds, node_counts, n_waves, T) -> Dict:
+    from repro.core import make_store
+    from repro.core.dist_engine import (make_node_mesh, run_workload_fused_dist,
+                                        shard_store)
+    rows = []
+    for n in node_counts:
+        mesh = make_node_mesh(n)
+        waves = _mk_waves(n_waves, T, n, N_KEYS)
+        for sched in scheds:
+            hs = _host_skew(sched, n)
+
+            def setup():
+                return shard_store(make_store(N_KEYS, 8), mesh)
+
+            def run(st):
+                return run_workload_fused_dist(st, waves, mesh, sched=sched,
+                                               n_nodes=n, host_skew=hs)
+
+            (_, _, stats), wall = _timed(setup, run)
+            n_txn = stats.committed + stats.aborted
+            rows.append({
+                "sched": sched, "n_nodes": n, "wall_s": round(wall, 6),
+                "committed": stats.committed, "aborted": stats.aborted,
+                "goodput_tps": round(stats.committed / wall, 1),
+                "txns_per_sec": round(n_txn / wall, 1),
+                "msgs_cross": stats.msgs_cross,
+            })
+    return {"rows": rows}
+
+
+def _executor(scheds, n, n_waves, T) -> Dict:
+    from repro.core import make_store
+    from repro.core.dist_engine import (make_node_mesh, run_workload_dist,
+                                        run_workload_fused_dist, shard_store)
+    mesh = make_node_mesh(n)
+    waves = _mk_waves(n_waves, T, n, N_KEYS)
+    rows = []
+    for sched in scheds:
+        hs = _host_skew(sched, n)
+
+        def setup():
+            return shard_store(make_store(N_KEYS, 8), mesh)
+
+        def per_wave(st):
+            return run_workload_dist(st, waves, mesh, sched=sched, n_nodes=n,
+                                     host_skew=hs)
+
+        def fused(st):
+            return run_workload_fused_dist(st, waves, mesh, sched=sched,
+                                           n_nodes=n, host_skew=hs)
+
+        (_, h1, s1), wall_pw = _timed(setup, per_wave)
+        (_, h2, s2), wall_fz = _timed(setup, fused)
+        assert s1 == s2, (sched, s1, s2)    # bit-identical by construction
+        rows.append({
+            "sched": sched, "n_nodes": n,
+            "per_wave_wall_s": round(wall_pw, 6),
+            "fused_wall_s": round(wall_fz, 6),
+            "speedup": round(wall_pw / wall_fz, 2),
+            "committed": s1.committed, "aborted": s1.aborted,
+        })
+    return {"n_nodes": n, "rows": rows}
+
+
+def _service(n, T, n_ticks, sched: str = "postsi") -> Dict:
+    import numpy as np
+    from repro.core.dist_engine import make_node_mesh
+    from repro.core.workloads import poisson_arrivals
+    from repro.service import RetryPolicy, TxnService, smallbank_txn_gen
+    mesh = make_node_mesh(n)
+    out = {}
+    for tag, m in (("single", None), ("mesh", mesh)):
+        svc = TxnService(n_keys=N_KEYS, n_versions=8, T=T, sched=sched,
+                         n_nodes=n, retry=RetryPolicy(max_attempts=6),
+                         seed=0, mesh=m)
+        arrivals = poisson_arrivals(np.random.RandomState(100),
+                                    LOAD_FACTOR * T, n_ticks)
+        gen = smallbank_txn_gen(np.random.RandomState(200), n, N_KEYS // n,
+                                dist_frac=0.3, hot_frac=0.5, hot_per_node=4)
+        rep = svc.run_stream(arrivals, gen)
+        row = rep.as_dict()
+        row["verify_errors"] = len(svc.verify())
+        out[tag] = row
+    assert out["single"]["committed"] == out["mesh"]["committed"], out
+    return out
+
+
+def run(smoke: bool = False) -> Dict:
+    import jax
+    from repro.core import SCHEDULERS
+    if smoke:
+        n_waves, T = SMOKE["n_waves"], SMOKE["T"]
+        node_counts, scheds = SMOKE["node_counts"], SMOKE["scheds"]
+        svc_ticks = SMOKE["svc_ticks"]
+    else:
+        n_waves, T, svc_ticks = N_WAVES, WAVE_T, SVC_TICKS
+        node_counts, scheds = NODE_COUNTS, SCHEDULERS
+    node_counts = tuple(n for n in node_counts if n <= jax.device_count())
+    n_max = max(node_counts)
+    return {
+        "config": {"workload": "smallbank", "n_waves": n_waves,
+                   "wave_size": T, "n_keys": N_KEYS,
+                   "node_counts": list(node_counts),
+                   "device_count": jax.device_count(), "smoke": smoke},
+        "scaling": _scaling(scheds, node_counts, n_waves, T),
+        "executor": _executor(scheds, n_max, n_waves, T),
+        "service": _service(n_max, T, svc_ticks),
+    }
+
+
+def write_report(report: Dict) -> None:
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+def print_csv(report: Dict) -> None:
+    """Aggregator-format rows (``name,us_per_call,derived``)."""
+    for r in report["scaling"]["rows"]:
+        n_txn = max(r["committed"] + r["aborted"], 1)
+        print(f"dist/fused/{r['sched']}/n{r['n_nodes']},"
+              f"{r['wall_s'] * 1e6 / n_txn:.2f},"
+              f"goodput={r['goodput_tps']:.0f}tps "
+              f"cross/txn={r['msgs_cross'] / n_txn:.2f}", flush=True)
+    for r in report["executor"]["rows"]:
+        n_txn = max(r["committed"] + r["aborted"], 1)
+        print(f"dist/executor/{r['sched']}/n{r['n_nodes']},"
+              f"{r['fused_wall_s'] * 1e6 / n_txn:.2f},"
+              f"fused_vs_per_wave={r['speedup']:.2f}x", flush=True)
+    for tag in ("single", "mesh"):
+        r = report["service"][tag]
+        print(f"dist/service/{tag}/{r['sched']},"
+              f"{r['wall_s'] * 1e6 / max(r['executions'], 1):.2f},"
+              f"goodput={r['goodput_tps']:.0f}tps committed={r['committed']} "
+              f"verify_errors={r['verify_errors']}", flush=True)
+
+
+def main(argv=None) -> Dict:
+    argv = sys.argv[1:] if argv is None else argv
+    report = run(smoke="--smoke" in argv)
+    write_report(report)
+    print_csv(report)
+    return report
+
+
+if __name__ == "__main__":
+    # must precede the first jax import: device count is locked at init
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    main()

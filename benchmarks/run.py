@@ -97,6 +97,30 @@ def _service() -> None:
              f"evicted_visible={row['evicted_visible']}")
 
 
+def _dist() -> None:
+    """Distributed wave engine on an 8-virtual-device mesh; also refreshes
+    BENCH_dist.json.  Runs in a child python: the XLA device count is locked
+    at jax init, and this process may already have initialized jax with one
+    device — only a fresh interpreter can see the forced 8."""
+    import subprocess
+
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    env.setdefault("PYTHONPATH", "src")
+    args = [sys.executable, "-m", "benchmarks.bench_dist"]
+    if "--smoke" in _FLAGS:
+        args.append("--smoke")
+    out = subprocess.run(args, env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise SystemExit(f"benchmarks.bench_dist failed:\n{out.stderr[-3000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith("dist/"):        # pass through the CSV rows
+            print(line, flush=True)
+
+
 def _kernel_micro() -> None:
     """XLA-path kernel micro-benchmarks (CPU wall time; derived = ideal
     throughput class).  The Pallas path is validated in tests."""
@@ -161,13 +185,18 @@ BLOCKS = {
     "figures": _engine_figures,
     "engine": _engine_executor,
     "service": _service,
+    "dist": _dist,
     "kernels": _kernel_micro,
     "roofline": _roofline_headlines,
 }
 
 
+_FLAGS: list = []      # dash-flags of the current invocation (for blocks)
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    _FLAGS[:] = [a for a in argv if a.startswith("-")]
     names = [a for a in argv if not a.startswith("-")] or list(BLOCKS)
     unknown = [n for n in names if n not in BLOCKS]
     if unknown:

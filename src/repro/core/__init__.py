@@ -6,17 +6,20 @@ visibility relationships; no central clock exists anywhere in this package.
 from .commit_phase import potential_backend, set_potential_backend
 from .engine import (NOP, READ, RMW, WRITE, RUNNING, COMMITTED, ABORTED,
                      SCHEDULERS, Wave, WaveOut, RunStats, run_wave,
-                     run_workload, run_workload_fused, stack_waves, step_wave)
+                     run_wave_on, run_workload, run_workload_fused,
+                     stack_waves, step_wave)
 from .store import (MVStore, evicting_visible, make_store, read_newest,
                     read_visible, node_of_key)
+from .substrate import LocalSubstrate, MeshSubstrate
 from .verify import verify_cv, verify_si
 from . import workloads
 
 __all__ = [
     "NOP", "READ", "RMW", "WRITE", "RUNNING", "COMMITTED", "ABORTED",
-    "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_wave", "run_workload",
-    "run_workload_fused", "stack_waves", "step_wave", "potential_backend",
-    "set_potential_backend", "MVStore", "evicting_visible", "make_store",
-    "read_newest", "read_visible", "node_of_key", "verify_cv", "verify_si",
-    "workloads",
+    "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_wave", "run_wave_on",
+    "run_workload", "run_workload_fused", "stack_waves", "step_wave",
+    "potential_backend", "set_potential_backend", "MVStore",
+    "evicting_visible", "make_store", "read_newest", "read_visible",
+    "node_of_key", "LocalSubstrate", "MeshSubstrate", "verify_cv",
+    "verify_si", "workloads",
 ]

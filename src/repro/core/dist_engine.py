@@ -1,24 +1,36 @@
-"""Shard_map PostSI engine: the paper's shared-nothing cluster as a JAX mesh.
+"""Shard_map wave engine: the paper's shared-nothing cluster as a JAX mesh.
 
 The version store is block-partitioned over a 1-D ``("node",)`` mesh axis
 (node = key // keys_per_node); transaction state (interval bounds, status)
 is *replicated* and updated by identical deterministic computation on every
 node, while all data accesses are peer collectives:
 
-  read phase     all_gather the wave's key requests; each node answers for
-                 its block (others masked); psum merges the responses —
-                 the lockstep equivalent of the paper's work delegation.
-  commit phase   per-commit re-validation reads use the same gather+psum;
-                 version installs and SID bumps apply only on the owning
-                 node (masked local scatter); PostSI rule 4(b) bound pushes
-                 are replicated arithmetic — **zero coordinator anywhere**.
+  read phase     each node answers the wave's key requests from its block
+                 (others masked to zero); psum merges the responses — the
+                 lockstep equivalent of the paper's work delegation.
+  commit phase   per-commit re-validation reads use the same masked-answer
+                 + psum; version installs and SID bumps apply only on the
+                 owning node (masked local scatter); PostSI rule 4(b) bound
+                 pushes are replicated arithmetic — **zero coordinator
+                 anywhere**.
 
-Semantics are bit-identical to the single-device engine (same commit order,
-same rules) — tests/test_distribution.py checks the differential.  The
-commit-phase arithmetic (CV rules 5-6, PostSI rules 3/4/5 and the dense
-``potential`` build) is the shared ``commit_phase`` module, so this engine
-and ``engine.py`` execute the exact same replicated math by construction;
-only the paper's scheduler (postsi) is implemented on the mesh.
+This module contains NO concurrency-control rules.  The single commit loop
+lives in ``engine.run_wave_on``; here it is merely *wired* to a
+``substrate.MeshSubstrate`` inside ``shard_map`` bodies, which lifts all
+six schedulers (postsi, cv, si, optimal, dsi, clocksi) onto the mesh at
+once.  Drivers mirror the single-device engine one-for-one:
+
+  ``run_wave_dist``           one wave          <->  ``engine.run_wave``
+  ``run_workload_dist``       per-wave driver   <->  ``engine.run_workload``
+  ``run_workload_fused_dist`` one lax.scan
+                              device program    <->  ``run_workload_fused``
+  ``step_wave_dist``          closed-loop step  <->  ``engine.step_wave``
+
+plus ``mesh_watermark``, the decentralized GC-watermark merge: per-node
+live-reader floors reduced with ``lax.pmin`` on the mesh (DESIGN.md §8).
+Semantics are bit-identical to the single-device engine — same commit sets,
+same induced intervals, same final stores — for every scheduler on both the
+per-wave and fused paths (tests/test_distribution.py).
 """
 from __future__ import annotations
 
@@ -32,155 +44,238 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
-                           creator_slots, lost_update, ongoing_readers_of,
-                           postsi_bounds, potential_matrix_jnp, push_bounds,
-                           rw_edge_to_creator)
-from .engine import Wave
-from .store import INF, MVStore, NO_TID, make_store
+from .engine import Wave, WaveOut, _stats_of, run_wave_on
+from .store import MVStore
+from .substrate import MeshSubstrate
+
+_SUB = MeshSubstrate("node")
 
 
 def make_node_mesh(n_nodes: int) -> Mesh:
-    devs = jax.devices()[:n_nodes]
-    return Mesh(np.array(devs), ("node",))
+    """1-D ``("node",)`` mesh over the first ``n_nodes`` XLA devices.
+
+    Raises ``ValueError`` when the platform exposes fewer devices than
+    requested — ``jax.devices()[:n]`` would otherwise silently build an
+    under-provisioned mesh (fewer shards than the caller sized for).
+    """
+    devs = jax.devices()
+    if len(devs) < n_nodes:
+        raise ValueError(
+            f"make_node_mesh({n_nodes}): only {len(devs)} XLA device(s) "
+            f"available; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_nodes} (or run on a platform with >= {n_nodes} devices)")
+    return Mesh(np.array(devs[:n_nodes]), ("node",))
 
 
 def shard_store(store: MVStore, mesh: Mesh) -> MVStore:
+    """Block-partition a store over the mesh's ``node`` axis.
+
+    Raises ``ValueError`` when ``n_keys`` does not divide the node count —
+    JAX would otherwise shard unevenly/pad and the substrate's
+    ``base = axis_index * n_local`` block arithmetic would resolve keys to
+    the wrong owner (silent corruption, not an error).
+    """
+    n_nodes = mesh.devices.size
+    if store.n_keys % n_nodes != 0:
+        raise ValueError(
+            f"shard_store: n_keys={store.n_keys} is not divisible by the "
+            f"mesh's {n_nodes} node(s); pad the key space or resize the mesh")
     sh = NamedSharding(mesh, P("node"))
     return MVStore(*(jax.device_put(a, sh) for a in store))
 
 
-def _local_lookup(st_local: MVStore, keys: jax.Array, base: jax.Array,
-                  n_local: int):
-    """Gathered newest-version lookup answered from the local block.
+# ---------------------------------------------------------------------------
+# shard_map wiring: flatten (MVStore, Wave) <-> leaf arrays at the boundary
+# ---------------------------------------------------------------------------
 
-    keys: [...] GLOBAL key ids; returns fields with zeros for keys owned by
-    other nodes (psum merges)."""
-    lk = keys - base
-    mine = (lk >= 0) & (lk < n_local)
-    lk = jnp.clip(lk, 0, n_local - 1)
-    cids = st_local.cid[lk]
-    tids = st_local.tid[lk]
-    ok = tids != NO_TID
-    masked = jnp.where(ok, cids, -1)
-    slot = jnp.argmax(masked, axis=-1)
-    take = lambda a: jnp.take_along_axis(a[lk], slot[..., None], -1)[..., 0]
-    zero = lambda x: jnp.where(mine, x, 0)
-    return (zero(take(st_local.val)), zero(take(st_local.tid)),
-            zero(take(st_local.cid)), zero(take(st_local.sid)),
-            zero(slot), mine)
+_N_STORE = len(MVStore._fields)
+_N_WAVE = len(Wave._fields)
+_N_OUT = len(WaveOut._fields)
 
 
-def run_wave_postsi_dist(store: MVStore, wave: Wave, wave_idx, mesh: Mesh,
-                         keys_per_node: int):
-    """One PostSI wave on the node mesh. Returns (store', status, s, c)."""
-    n_nodes = mesh.devices.size
-    T, O = wave.op_kind.shape
+@functools.lru_cache(maxsize=None)
+def _wave_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
+             gc_block: bool, jit: bool = True):
+    """Single-wave mesh executor: shard_map around ``engine.run_wave_on``
+    over a ``MeshSubstrate``.  Takes/returns flat leaves (store sharded
+    P("node"), everything else replicated)."""
 
-    def node_fn(val, tid, cid, sid, head, wv, op_kind, op_key, op_val, tids_g):
-        st = MVStore(val, tid, cid, sid, head, wv)
-        n_local = val.shape[0]
-        base = lax.axis_index("node") * n_local
+    def node_fn(*args):
+        st = MVStore(*args[:_N_STORE])
+        wave = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])
+        wave_idx, clock, n_nodes, hs, wm = args[_N_STORE + _N_WAVE:]
+        st, out, clk = run_wave_on(_SUB, st, wave, wave_idx, clock, n_nodes,
+                                   sched=sched, skew=skew, host_skew=hs,
+                                   watermark=wm, gc_track=gc_track,
+                                   gc_block=gc_block)
+        return (*st, *out, clk)
 
-        is_read = (op_kind == READ) | (op_kind == RMW)
-        is_write = (op_kind == WRITE) | (op_kind == RMW)
-
-        def read_all(st_l, keys):
-            parts = _local_lookup(st_l, keys, base, n_local)
-            merged = [lax.psum(p, "node") for p in parts[:5]]
-            return merged  # val, tid, cid, sid, slot
-
-        r_val, r_tid, r_cid, r_sid, r_slot = read_all(st, op_key)
-
-        s_lo0 = jnp.where(is_read, r_cid, 0).max(axis=1)
-        c_lo0 = s_lo0
-        s_hi0 = jnp.full((T,), INF, jnp.int32)
-
-        # replicated dense build (the Pallas kernel is not used inside
-        # shard_map — every node computes the same [T, T] matrix)
-        potential = potential_matrix_jnp(op_key, op_key, is_read, is_write)
-
-        def commit_one(i, carry):
-            st_l, s_lo, s_hi, c_lo, status, s_arr, c_arr = carry
-            k_i = op_key[i]
-            w_i = is_write[i]
-            r_i = is_read[i]
-            nv_val, nv_tid, nv_cid, nv_sid, nv_slot = read_all(st_l, k_i)
-
-            local, creator_committed = creator_slots(nv_tid, tids_g[0], T,
-                                                     status)
-            lost = lost_update(r_i, w_i, nv_cid, r_cid[i])
-            rw_to_creator = rw_edge_to_creator(w_i, local, creator_committed,
-                                               potential[i])
-            abort = lost | rw_to_creator
-
-            cur_sid = read_sid(st_l, k_i, r_slot[i])
-            ongoing_reader = ongoing_readers_of(i, potential, status)
-            s_i, c_i, iv_abort = postsi_bounds(
-                s_lo[i], s_hi[i], c_lo[i], r_i, w_i, nv_cid, nv_sid, cur_sid,
-                ongoing_reader, s_lo)
-            abort = abort | iv_abort
-
-            active = status[i] == RUNNING
-            commit = active & ~abort
-            new_status = jnp.where(active, jnp.where(abort, ABORTED, COMMITTED),
-                                   status[i])
-
-            # install writes on the owning node only
-            lk = k_i - base
-            mine = (lk >= 0) & (lk < n_local)
-            wmask = w_i & commit & mine
-            lk_safe = jnp.where(wmask, jnp.clip(lk, 0, n_local - 1), n_local)
-            h_new = (st_l.head[jnp.clip(lk, 0, n_local - 1)] + 1) % st_l.n_versions
-            val_new = jnp.where(op_kind[i] == RMW, r_val[i] + op_val[i],
-                                op_val[i])
-            st_l = st_l._replace(
-                val=st_l.val.at[lk_safe, h_new].set(val_new, mode="drop"),
-                tid=st_l.tid.at[lk_safe, h_new].set(tids_g[i], mode="drop"),
-                cid=st_l.cid.at[lk_safe, h_new].set(c_i, mode="drop"),
-                sid=st_l.sid.at[lk_safe, h_new].set(0, mode="drop"),
-                head=st_l.head.at[lk_safe].set(h_new, mode="drop"),
-                wave=st_l.wave.at[lk_safe].set(wave_idx, mode="drop"),
-            )
-            # SID bump on owning node (guarded against recycled slots)
-            rmask = r_i & commit & mine & (
-                st_l.tid[jnp.clip(lk, 0, n_local - 1), r_slot[i]] == r_tid[i])
-            lk_sid = jnp.where(rmask, jnp.clip(lk, 0, n_local - 1), n_local)
-            st_l = st_l._replace(
-                sid=st_l.sid.at[lk_sid, r_slot[i]].max(s_i, mode="drop"))
-
-            # rule 4(b): replicated bound pushes
-            s_lo, s_hi, c_lo = push_bounds(i, commit, s_i, c_i, potential,
-                                           status, s_lo, s_hi, c_lo)
-
-            status = status.at[i].set(new_status)
-            s_arr = s_arr.at[i].set(jnp.where(commit, s_i, -1))
-            c_arr = c_arr.at[i].set(jnp.where(commit, c_i, -1))
-            return (st_l, s_lo, s_hi, c_lo, status, s_arr, c_arr)
-
-        def read_sid(st_l, keys, slots):
-            lk = keys - base
-            mine = (lk >= 0) & (lk < n_local)
-            lk = jnp.clip(lk, 0, n_local - 1)
-            v = jnp.where(mine, st_l.sid[lk, slots], 0)
-            return lax.psum(v, "node")
-
-        status0 = jnp.full((T,), RUNNING, jnp.int32)
-        init = (st, s_lo0, s_hi0, c_lo0, status0,
-                jnp.full((T,), -1, jnp.int32), jnp.full((T,), -1, jnp.int32))
-        st, s_lo, s_hi, c_lo, status, s_arr, c_arr = lax.fori_loop(
-            0, T, commit_one, init)
-        return (st.val, st.tid, st.cid, st.sid, st.head, st.wave,
-                status, s_arr, c_arr)
-
-    spec_store = P("node")
-    spec_rep = P()
-    out = shard_map(
+    mapped = shard_map(
         node_fn, mesh=mesh,
-        in_specs=(spec_store,) * 6 + (spec_rep,) * 4,
-        out_specs=(spec_store,) * 6 + (spec_rep,) * 3,
+        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 5),
+        out_specs=(P("node"),) * _N_STORE + (P(),) * (_N_OUT + 1),
         check_rep=False,
-    )(store.val, store.tid, store.cid, store.sid, store.head, store.wave,
-      wave.op_kind, wave.op_key, wave.op_val, wave.tid)
-    new_store = MVStore(*out[:6])
-    return new_store, out[6], out[7], out[8]
+    )
+    return jax.jit(mapped) if jit else mapped
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
+             gc_block: bool):
+    """Fused multi-wave mesh executor: ONE device program for a whole
+    workload — lax.scan over the wave axis *inside* the shard_map body, so
+    the host is not touched between waves (mesh mirror of
+    ``engine._scan_waves``)."""
+
+    def node_fn(*args):
+        st = MVStore(*args[:_N_STORE])
+        stacked = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])   # [W, ...] leaves
+        clock, n_nodes, hs = args[_N_STORE + _N_WAVE:]
+        W = stacked.op_kind.shape[0]
+
+        def body(carry, xs):
+            st, clk = carry
+            wave, w_idx = xs
+            st, out, clk = run_wave_on(_SUB, st, wave, w_idx, clk, n_nodes,
+                                       sched=sched, skew=skew, host_skew=hs,
+                                       gc_track=gc_track, gc_block=gc_block)
+            return (st, clk), out
+
+        (st, clock), outs = lax.scan(
+            body, (st, clock),
+            (stacked, jnp.arange(1, W + 1, dtype=jnp.int32)))
+        return (*st, *outs, clock)
+
+    mapped = shard_map(
+        node_fn, mesh=mesh,
+        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 3),
+        out_specs=(P("node"),) * _N_STORE + (P(),) * (_N_OUT + 1),
+        check_rep=False,
+    )
+    return jax.jit(mapped)
+
+
+def _norm_hs(host_skew) -> jax.Array:
+    """None -> zeros: the engine's clocksi path clamp-gathers, so a length-1
+    zero vector means 'no skew anywhere' (same as the local default)."""
+    if host_skew is None:
+        return jnp.zeros((1,), jnp.int32)
+    return jnp.asarray(host_skew, jnp.int32)
+
+
+def dist_wave_traceable(mesh: Mesh, sched: str = "postsi", skew: int = 0,
+                        gc_track: bool = False, gc_block: bool = False):
+    """Unjitted traceable single-wave mesh executor over the NamedTuples —
+    for callers that lower/compile themselves (repro.launch.dryrun_postsi).
+    Returns ``f(store, wave, wave_idx, clock, n_nodes, host_skew=None,
+    watermark=None) -> (store', WaveOut, clock')``."""
+    fn = _wave_fn(mesh, sched, skew, gc_track, gc_block, jit=False)
+
+    def call(store, wave, wave_idx, clock, n_nodes, host_skew=None,
+             watermark=None):
+        wm = clock if watermark is None else watermark
+        out = fn(*store, *wave, jnp.int32(wave_idx), jnp.int32(clock),
+                 jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
+        return (MVStore(*out[:_N_STORE]),
+                WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]), out[-1])
+
+    return call
+
+
+def run_wave_dist(store: MVStore, wave: Wave, wave_idx, clock, mesh: Mesh,
+                  n_nodes=None, sched: str = "postsi", skew: int = 0,
+                  host_skew=None, watermark=None, gc_track: bool = False,
+                  gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
+    """One wave on the node mesh, any scheduler; mesh twin of
+    ``engine.run_wave`` (same contract: (store', WaveOut, clock')).
+
+    ``n_nodes`` is the *logical* cluster model the rules and message
+    accounting use (dsi locality, clocksi skew, msgs_cross); it defaults to
+    the physical node count of ``mesh`` so a resized mesh cannot silently
+    run under a stale cluster model — pass it explicitly to decouple the
+    two (e.g. an 8-node logical workload served from 4 physical shards)."""
+    n_nodes = mesh.devices.size if n_nodes is None else n_nodes
+    wm = clock if watermark is None else watermark
+    out = _wave_fn(mesh, sched, skew, gc_track, gc_block)(
+        *store, *wave, jnp.int32(wave_idx), jnp.int32(clock),
+        jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
+    return (MVStore(*out[:_N_STORE]),
+            WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]), out[-1])
+
+
+def step_wave_dist(store: MVStore, wave: Wave, wave_idx: int, clock,
+                   mesh: Mesh, *, sched: str = "postsi",
+                   n_nodes: int | None = None, skew: int = 0, host_skew=None,
+                   watermark=None, gc_track: bool = True,
+                   gc_block: bool = False):
+    """Closed-loop step API on the mesh (DESIGN.md §8): one wave in, numpy
+    per-txn outcomes out, store/clock kept device-resident (sharded)
+    between steps — drop-in for ``engine.step_wave`` so ``TxnService``
+    serves an open stream from the whole mesh."""
+    store, out, clock = run_wave_dist(
+        store, wave, wave_idx, clock, mesh, n_nodes=n_nodes, sched=sched,
+        skew=skew, host_skew=host_skew, watermark=watermark,
+        gc_track=gc_track, gc_block=gc_block)
+    return store, jax.tree_util.tree_map(np.asarray, out), clock
+
+
+def run_workload_dist(store: MVStore, waves, mesh: Mesh,
+                      sched: str = "postsi", skew: int = 0, host_skew=None,
+                      n_nodes: int | None = None, gc_track: bool = False,
+                      gc_block: bool = False):
+    """Per-wave mesh driver (debug/differential twin of
+    ``engine.run_workload``): one dispatch + host sync per wave.
+    Returns (store, history, stats)."""
+    clock = jnp.int32(1)
+    history = []
+    for w_idx, wave in enumerate(waves):
+        store, out, clock = run_wave_dist(
+            store, wave, w_idx + 1, clock, mesh, n_nodes=n_nodes, sched=sched,
+            skew=skew, host_skew=host_skew, gc_track=gc_track,
+            gc_block=gc_block)
+        history.append((np.asarray(wave.tid),
+                        jax.tree_util.tree_map(np.asarray, out)))
+    return store, history, _stats_of(history)
+
+
+def run_workload_fused_dist(store: MVStore, waves, mesh: Mesh,
+                            sched: str = "postsi", skew: int = 0,
+                            host_skew=None, n_nodes: int | None = None,
+                            gc_track: bool = False, gc_block: bool = False):
+    """Fused mesh driver: the whole workload as a single jitted shard_map
+    dispatch (scan-over-waves inside).  Same (store, history, stats)
+    contract and bit-identical history to every other driver."""
+    from .engine import stack_waves
+    n_nodes = mesh.devices.size if n_nodes is None else n_nodes
+    stacked = stack_waves(waves)
+    out = _scan_fn(mesh, sched, skew, gc_track, gc_block)(
+        *store, *stacked, jnp.int32(1), jnp.int32(n_nodes),
+        _norm_hs(host_skew))
+    store = MVStore(*out[:_N_STORE])
+    outs = jax.tree_util.tree_map(
+        np.asarray, WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]))
+    history = [(np.asarray(w.tid), WaveOut(*(f[i] for f in outs)))
+               for i, w in enumerate(waves)]
+    return store, history, _stats_of(history)
+
+
+# ---------------------------------------------------------------------------
+# decentralized GC watermark merge (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pmin_fn(mesh: Mesh):
+    return jax.jit(shard_map(
+        lambda f: lax.pmin(jnp.min(f), "node"), mesh=mesh,
+        in_specs=P("node"), out_specs=P(), check_rep=False))
+
+
+def mesh_watermark(mesh: Mesh, node_floors) -> int:
+    """Merge per-node live-reader snapshot floors into the global GC
+    watermark with ``lax.pmin`` on the mesh — the decentralized min the
+    paper's visibility argument calls for: each node contributes the lowest
+    ``s_lo`` any of its live readers may still take, and no coordinator ever
+    owns the result (``service.VisibilityGC.node_floors`` produces the
+    per-node inputs)."""
+    floors = jnp.asarray(node_floors, jnp.int32).reshape(mesh.devices.size)
+    return int(_pmin_fn(mesh)(floors))

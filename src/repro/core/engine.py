@@ -52,12 +52,11 @@ import numpy as np
 from jax import lax
 
 from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
-                           build_potential, creator_slots, lost_update,
-                           ongoing_readers_of, postsi_bounds, push_bounds,
-                           potential_matrix_jnp, register_cache_clear,
-                           rw_edge_to_creator)
-from .store import (INF, MVStore, NO_TID, evicting_visible, node_of_key,
-                    read_newest, read_visible)
+                           creator_slots, lost_update, ongoing_readers_of,
+                           postsi_bounds, push_bounds, potential_matrix_jnp,
+                           register_cache_clear, rw_edge_to_creator)
+from .store import INF, MVStore, node_of_key
+from .substrate import LocalSubstrate
 
 SCHEDULERS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
 WAVE_STRIDE = 1 << 16      # logical clock stride per wave for clocked baselines
@@ -91,30 +90,25 @@ class WaveOut(NamedTuple):
 # run_wave routes through commit_phase.build_potential (Pallas by default)
 _potential_antidep = potential_matrix_jnp
 
+_LOCAL = LocalSubstrate()
 
-@functools.partial(jax.jit,
-                   static_argnames=("sched", "skew", "gc_track", "gc_block"))
-def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
-             n_nodes: jax.Array = 8, sched: str = "postsi", skew: int = 0,
-             host_skew: jax.Array | None = None,
-             watermark: jax.Array | None = None, gc_track: bool = False,
-             gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
-    """Execute one wave. Returns (store', out, clock').
-    ``n_nodes`` is traced, so scaling sweeps don't recompile.
 
-    ``watermark`` is the GC watermark for version reclamation (DESIGN.md §8):
-    the decentralized min over live readers' ``s_lo``.  In the wave model
-    every reader's snapshot is pinned at a wave boundary, so the min
-    collapses to the wave-entry clock; ``None`` defaults to exactly that.
-    The closed-loop service passes an explicit (possibly lower) value when
-    external readers pin it — e.g. clock-skewed hosts or retry pins.
+def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
+                clock: jax.Array, n_nodes: jax.Array = 8,
+                sched: str = "postsi", skew: int = 0,
+                host_skew: jax.Array | None = None,
+                watermark: jax.Array | None = None, gc_track: bool = False,
+                gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
+    """Execute one wave on a data-access substrate (DESIGN.md §4).
 
-    GC accounting is opt-in (static flags) so the pure replay path pays
-    nothing for it.  With ``gc_track=True`` each install that would evict a
-    version still visible above the watermark is counted in
-    ``WaveOut.evicted_visible``; with ``gc_block=True`` the writer is
-    aborted instead (and the counter stays 0), so the retry pipeline
-    re-runs it after the watermark has advanced past the ring."""
+    This function is the ONLY copy of the concurrency-control rules for all
+    six schedulers; every data-plane access (read-phase lookup, commit-phase
+    re-validation read, version install, SID bump, GC watermark consult)
+    goes through ``sub`` — ``substrate.LocalSubstrate`` under the jitted
+    single-device ``run_wave`` below, or ``substrate.MeshSubstrate`` inside
+    the ``shard_map`` bodies of ``dist_engine``, which is how one commit
+    loop serves every placement.  Pure trace-level function: callers own
+    jit / shard_map / scan wrapping.  Returns (store', out, clock')."""
     assert sched in SCHEDULERS, sched
     T, O = wave.op_kind.shape
     clock0 = clock          # wave-entry clock = snapshot time for clocked scheds
@@ -130,14 +124,13 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         my_skew = hs[wave.host]                                   # [T]
         cutoff_wave = wave_idx - my_skew                          # snapshot wave
         # visible: newest version whose wave tag < cutoff (stale snapshot)
-        key_wave = store.wave[keys]                               # [T,O]
-        head_cid = jnp.take_along_axis(store.cid[keys], store.head[keys][..., None],
-                                       axis=-1)[..., 0]
+        key_wave, head_cid = sub.key_staleness(store, keys)       # [T,O] each
         stale = key_wave >= cutoff_wave[:, None]
         max_cid = jnp.where(stale, head_cid - 1, INF)
-        r_val, r_tid, r_cid, r_sid, r_slot = read_visible(store, keys, max_cid)
+        r_val, r_tid, r_cid, r_sid, r_slot = sub.read_visible(store, keys,
+                                                              max_cid)
     else:
-        r_val, r_tid, r_cid, r_sid, r_slot = read_newest(store, keys)
+        r_val, r_tid, r_cid, r_sid, r_slot = sub.read_newest(store, keys)
 
     read_key = jnp.where(is_read, keys, -1)
     read_cid = jnp.where(is_read, r_cid, -1)
@@ -148,7 +141,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     c_lo0 = s_lo0
     s_hi0 = jnp.full((T,), INF, jnp.int32)
 
-    potential = build_potential(keys, is_read, is_write)           # [T,T]
+    potential = sub.build_potential(keys, is_read, is_write)       # [T,T]
 
     # --------------------------------------------------------------- commits
     # deterministic commit order = wave-local index (tids ascend within wave)
@@ -159,7 +152,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         k_i = keys[i]                                             # [O]
         w_i = is_write[i]
         r_i = is_read[i]
-        nv_val, nv_tid, nv_cid, nv_sid, nv_slot = read_newest(st, k_i)
+        nv_val, nv_tid, nv_cid, nv_sid, nv_slot = sub.read_newest(st, k_i)
 
         # map newest creators to wave-local ids (or -1 if older wave)
         local, creator_committed = creator_slots(nv_tid, wave.tid[0], T, status)
@@ -192,7 +185,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         if sched == "postsi":
             # rules 3/4(a)/5 (commit_phase.postsi_bounds); SIDs of read slots
             # are re-gathered: peers may have bumped them while we ran
-            cur_sid = st.sid[k_i, r_slot[i]]
+            cur_sid = sub.read_sid(st, k_i, r_slot[i])
             ongoing_reader = ongoing_readers_of(i, potential, status)
             s_i, c_i, iv_abort = postsi_bounds(
                 s_lo[i], s_hi[i], c_lo[i], r_i, w_i, nv_cid, nv_sid, cur_sid,
@@ -206,7 +199,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         # GC watermark consult (DESIGN.md §8): does any write reuse a ring
         # slot whose version is still visible above the watermark?
         if track_gc:
-            evict_unsafe = w_i & evicting_visible(st, k_i, wm)        # [O]
+            evict_unsafe = w_i & sub.evicting_visible(st, k_i, wm)    # [O]
         if gc_block:
             # blocked install: abort instead of corrupting still-visible
             # reads; retried once the watermark passes the superseder
@@ -215,27 +208,17 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
         commit = active & ~abort
         new_status = jnp.where(active, jnp.where(abort, ABORTED, COMMITTED), status[i])
 
-        # ---- install writes (masked scatter; OOB key drops inactive ops) ----
+        # ---- install writes (masked scatter; owner/OOB handling is the
+        # substrate's concern: sentinel-drop locally, owner-only on the mesh)
         wmask = w_i & commit
-        k_install = jnp.where(wmask, k_i, st.n_keys)              # OOB -> drop
-        h_new = (st.head[jnp.minimum(k_i, st.n_keys - 1)] + 1) % st.n_versions
         val_new = jnp.where(wave.op_kind[i] == RMW, r_val[i] + wave.op_val[i],
                             wave.op_val[i])
-        st = st._replace(
-            val=st.val.at[k_install, h_new].set(val_new, mode="drop"),
-            tid=st.tid.at[k_install, h_new].set(wave.tid[i], mode="drop"),
-            cid=st.cid.at[k_install, h_new].set(c_i, mode="drop"),
-            sid=st.sid.at[k_install, h_new].set(0, mode="drop"),
-            head=st.head.at[k_install].set(h_new, mode="drop"),
-            wave=st.wave.at[k_install].set(wave_idx, mode="drop"),
-        )
+        st = sub.install(st, wmask, k_i, val_new, wave.tid[i], c_i, wave_idx)
         wcid = wcid.at[i].set(jnp.where(wmask, c_i, -1))
 
         # ---- rule 4(c): bump SIDs of read versions to my start time --------
         # guarded: skip if the ring slot was recycled since our wave-start read
-        rmask = r_i & commit & (st.tid[k_i, r_slot[i]] == r_tid[i])
-        k_sid = jnp.where(rmask, k_i, st.n_keys)
-        st = st._replace(sid=st.sid.at[k_sid, r_slot[i]].max(s_i, mode="drop"))
+        st = sub.bump_sid(st, r_i & commit, k_i, r_slot[i], r_tid[i], s_i)
 
         # ---- rule 4(b): push bounds of conflicting *ongoing* transactions --
         if sched == "postsi":
@@ -320,6 +303,39 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     out = WaveOut(status, s_arr, c_arr, read_key, read_cid, write_key, wcid,
                   msgs_cross, msgs_coord, waits, evicted)
     return store, out, clock
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sched", "skew", "gc_track", "gc_block"))
+def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
+             n_nodes: jax.Array = 8, sched: str = "postsi", skew: int = 0,
+             host_skew: jax.Array | None = None,
+             watermark: jax.Array | None = None, gc_track: bool = False,
+             gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
+    """Execute one wave single-device. Returns (store', out, clock').
+    ``n_nodes`` is traced, so scaling sweeps don't recompile.
+
+    Thin jit wrapper: ``run_wave_on`` over the ``LocalSubstrate`` — the
+    mesh engine wraps the very same function over a ``MeshSubstrate``
+    (``dist_engine.run_wave_dist``).
+
+    ``watermark`` is the GC watermark for version reclamation (DESIGN.md §8):
+    the decentralized min over live readers' ``s_lo``.  In the wave model
+    every reader's snapshot is pinned at a wave boundary, so the min
+    collapses to the wave-entry clock; ``None`` defaults to exactly that.
+    The closed-loop service passes an explicit (possibly lower) value when
+    external readers pin it — e.g. clock-skewed hosts or retry pins.
+
+    GC accounting is opt-in (static flags) so the pure replay path pays
+    nothing for it.  With ``gc_track=True`` each install that would evict a
+    version still visible above the watermark is counted in
+    ``WaveOut.evicted_visible``; with ``gc_block=True`` the writer is
+    aborted instead (and the counter stays 0), so the retry pipeline
+    re-runs it after the watermark has advanced past the ring."""
+    return run_wave_on(_LOCAL, store, wave, wave_idx, clock, n_nodes,
+                       sched=sched, skew=skew, host_skew=host_skew,
+                       watermark=watermark, gc_track=gc_track,
+                       gc_block=gc_block)
 
 
 class RunStats(NamedTuple):

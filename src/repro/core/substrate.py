@@ -1,0 +1,171 @@
+"""Data-access substrate: the engine/placement seam (DESIGN.md §4).
+
+``engine.run_wave_on`` holds the only copy of the concurrency-control rules
+(read-phase visibility, CV rules 5-6, PostSI rules 3/4/5).  Everything that
+rule arithmetic needs from the *data plane* — the read-phase lookup, the
+commit-phase re-validation read, the version install, the SID bump and the
+GC watermark consult — goes through the small interface below, so the same
+commit loop runs on any placement:
+
+* ``LocalSubstrate`` — the store is one dense array per field; every access
+  is direct indexing / masked scatter (``store.py`` ops).  This is the
+  single-device engine.
+* ``MeshSubstrate`` — the store is block-partitioned over a 1-D mesh axis
+  (``node = key // keys_per_node``) and the substrate runs *inside* a
+  ``shard_map`` body: reads are answered by the owning node from its local
+  block (others contribute zeros) and merged with ``lax.psum`` — the
+  lockstep equivalent of the paper's work delegation — while installs and
+  SID bumps are masked local scatters applied only on the owner.  No
+  coordinator exists anywhere: every collective is a peer merge.
+
+Both substrates are stateless and cheap to construct; the mesh one derives
+its block base from ``lax.axis_index`` at trace time, so one traced program
+serves every node (SPMD).  ``tests/test_distribution.py`` pins the two
+substrates bit-identical for all six schedulers, per-wave and fused.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .commit_phase import build_potential, potential_matrix_jnp
+from .store import INF, MVStore
+from . import store as store_ops
+
+
+class LocalSubstrate:
+    """Direct-indexing data plane: the whole key space lives in one store."""
+
+    def read_visible(self, store: MVStore, keys, max_cid):
+        """Latest version with CID <= max_cid per key (paper §IV-B read rule).
+        Returns (val, tid, cid, sid, slot), shaped like ``keys``."""
+        return store_ops.read_visible(store, keys, max_cid)
+
+    def read_newest(self, store: MVStore, keys):
+        """Newest committed version (PostSI reads start with s_hi = +inf)."""
+        return store_ops.read_newest(store, keys)
+
+    def read_sid(self, store: MVStore, keys, slots):
+        """Re-gather SIDs of previously read (key, slot) pairs — peers may
+        have bumped them since the read phase (rule 4(a) input)."""
+        return store.sid[keys, slots]
+
+    def key_staleness(self, store: MVStore, keys):
+        """Per-key (last-commit wave tag, head CID) — the clocksi stale-read
+        cutoff inputs."""
+        key_wave = store.wave[keys]
+        head_cid = jnp.take_along_axis(
+            store.cid[keys], store.head[keys][..., None], axis=-1)[..., 0]
+        return key_wave, head_cid
+
+    def evicting_visible(self, store: MVStore, keys, watermark):
+        """Would installing into ``keys`` evict a version still visible above
+        the GC watermark?  (store.evicting_visible; DESIGN.md §8)."""
+        return store_ops.evicting_visible(store, keys, watermark)
+
+    def install(self, store: MVStore, mask, keys, values, tid, cid, wave_idx):
+        """Masked version install: push a new ring version for every key with
+        ``mask`` set (rule 4(c) CID stamping).  OOB sentinel drops the rest."""
+        k_install = jnp.where(mask, keys, store.n_keys)
+        h_new = (store.head[jnp.minimum(keys, store.n_keys - 1)] + 1
+                 ) % store.n_versions
+        return store._replace(
+            val=store.val.at[k_install, h_new].set(values, mode="drop"),
+            tid=store.tid.at[k_install, h_new].set(tid, mode="drop"),
+            cid=store.cid.at[k_install, h_new].set(cid, mode="drop"),
+            sid=store.sid.at[k_install, h_new].set(0, mode="drop"),
+            head=store.head.at[k_install].set(h_new, mode="drop"),
+            wave=store.wave.at[k_install].set(wave_idx, mode="drop"),
+        )
+
+    def bump_sid(self, store: MVStore, mask, keys, slots, expect_tid, s_val):
+        """Rule 4(c) SID bump: raise SID of read versions to the reader's
+        start time, guarded against ring slots recycled since the read."""
+        ok = mask & (store.tid[keys, slots] == expect_tid)
+        k_sid = jnp.where(ok, keys, store.n_keys)
+        return store._replace(
+            sid=store.sid.at[k_sid, slots].max(s_val, mode="drop"))
+
+    def build_potential(self, keys, is_read, is_write):
+        """Anti-dependency candidate matrix [T, T] — routed through the
+        configured backend (Pallas kernel / interpret / jnp)."""
+        return build_potential(keys, is_read, is_write)
+
+
+_LOCAL = LocalSubstrate()
+
+
+class MeshSubstrate:
+    """Peer-collective data plane for a block-partitioned store.
+
+    Must be used inside a ``shard_map`` body whose store arguments carry the
+    per-node block (P(axis) over the key dim); all key arguments are GLOBAL
+    ids, replicated on every node.  Reads: masked local answer + psum merge.
+    Writes: owner-only masked scatter.
+
+    There is deliberately no second copy of the data-plane logic here:
+    every method translates global keys to local block indices and then
+    *delegates* to the LocalSubstrate / ``store.py`` body on the local
+    block (the per-node ``MVStore`` is itself a complete store with
+    ``n_keys == n_local``), masking non-owned answers to zero before the
+    psum merge and masking non-owned writes off entirely.  A rule or
+    GC-formula fix in ``store.py`` therefore reaches both placements by
+    construction.
+    """
+
+    def __init__(self, axis: str = "node"):
+        self.axis = axis
+
+    # ------------------------------------------------------------ helpers
+    def _local(self, store: MVStore, keys):
+        """(local_idx clipped, mine mask, n_local) for global ``keys``."""
+        n_local = store.val.shape[0]
+        base = lax.axis_index(self.axis) * n_local
+        lk = keys - base
+        mine = (lk >= 0) & (lk < n_local)
+        return jnp.clip(lk, 0, n_local - 1), mine, n_local
+
+    def _merge(self, mine, *parts):
+        """Owner keeps its answer, others contribute 0; psum merges."""
+        return tuple(lax.psum(jnp.where(mine, p, 0), self.axis)
+                     for p in parts)
+
+    # -------------------------------------------------------------- reads
+    def read_visible(self, store: MVStore, keys, max_cid):
+        lk, mine, _ = self._local(store, keys)
+        return self._merge(mine, *_LOCAL.read_visible(store, lk, max_cid))
+
+    def read_newest(self, store: MVStore, keys):
+        return self.read_visible(store, keys,
+                                 jnp.broadcast_to(INF, keys.shape))
+
+    def read_sid(self, store: MVStore, keys, slots):
+        lk, mine, _ = self._local(store, keys)
+        (sid,) = self._merge(mine, _LOCAL.read_sid(store, lk, slots))
+        return sid
+
+    def key_staleness(self, store: MVStore, keys):
+        lk, mine, _ = self._local(store, keys)
+        return self._merge(mine, *_LOCAL.key_staleness(store, lk))
+
+    def evicting_visible(self, store: MVStore, keys, watermark):
+        lk, mine, _ = self._local(store, keys)
+        ev = _LOCAL.evicting_visible(store, lk, watermark).astype(jnp.int32)
+        (ev,) = self._merge(mine, ev)
+        return ev.astype(bool)
+
+    # ------------------------------------------------------------- writes
+    def install(self, store: MVStore, mask, keys, values, tid, cid, wave_idx):
+        lk, mine, _ = self._local(store, keys)
+        return _LOCAL.install(store, mask & mine, lk, values, tid, cid,
+                              wave_idx)
+
+    def bump_sid(self, store: MVStore, mask, keys, slots, expect_tid, s_val):
+        lk, mine, _ = self._local(store, keys)
+        return _LOCAL.bump_sid(store, mask & mine, lk, slots, expect_tid,
+                               s_val)
+
+    def build_potential(self, keys, is_read, is_write):
+        # replicated dense build: the Pallas kernel is not used inside
+        # shard_map — every node computes the same [T, T] matrix
+        return potential_matrix_jnp(keys, keys, is_read, is_write)

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dist_engine import make_node_mesh, run_wave_postsi_dist, shard_store
+from repro.core.dist_engine import dist_wave_traceable, make_node_mesh, shard_store
 from repro.core.workloads import micro_waves
 from repro.core.store import make_store
 from repro.launch.dryrun import (ICI_BW, PEAK_FLOPS, HBM_BW, _memory_analysis,
@@ -42,14 +42,15 @@ def main():
     store_abs = jax.eval_shape(lambda: make_store(args.nodes * args.keys_per_node, 8))
     t0 = time.time()
 
+    wave_fn = dist_wave_traceable(mesh, sched="postsi")
+
     def step(val, tid, cid, sid, head, wv, ok, okey, oval, host, tids):
         from repro.core.store import MVStore
         st = MVStore(val, tid, cid, sid, head, wv)
         from repro.core.engine import Wave
         w = Wave(ok, okey, oval, host, tids)
-        st2, status, s, c = run_wave_postsi_dist(st, w, jnp.int32(1), mesh,
-                                                 args.keys_per_node)
-        return st2.val, st2.cid, status, s, c
+        st2, out, _ = wave_fn(st, w, jnp.int32(1), jnp.int32(1), args.nodes)
+        return st2.val, st2.cid, out.status, out.s, out.c
 
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh_store = NamedSharding(mesh, P("node"))

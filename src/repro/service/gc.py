@@ -50,23 +50,43 @@ def seq_watermark(scheduler, pins=()) -> int:
 class VisibilityGC:
     """Watermark tracker + eviction accounting for one service instance."""
 
-    def __init__(self, block: bool = False):
+    def __init__(self, block: bool = False, n_nodes: Optional[int] = None):
         self.block = block
+        self.n_nodes = n_nodes            # mesh node-id bound for pins (opt.)
         self.clock = 0                    # engine clock after the last wave
         self.evicted_visible = 0          # cumulative watermark violations
         self._pins: Dict[int, int] = {}   # handle -> pinned snapshot floor
+        self._pin_node: Dict[int, int] = {}  # handle -> hosting mesh node
         self._handles = itertools.count(1)
 
     # ------------------------------------------------------------- pins
-    def pin(self, snapshot_floor: int) -> int:
+    def pin(self, snapshot_floor: int, node: int = 0) -> int:
         """Register a live reader whose snapshot may go as low as
-        ``snapshot_floor``; returns a handle for ``release``."""
+        ``snapshot_floor``; returns a handle for ``release``.  ``node`` is
+        the mesh node hosting the reader — on the sharded service the
+        watermark is merged *from per-node floors* with a ``lax.pmin``
+        collective (``dist_engine.mesh_watermark``), so each pin must name
+        where its reader lives; single-device callers can ignore it."""
+        if node < 0:
+            raise ValueError(f"pin: node must be >= 0, got {node}")
+        if self.n_nodes is not None and node >= self.n_nodes:
+            # fail at the buggy call, not ticks later inside the serve loop
+            raise ValueError(f"pin: node {node} out of range for the "
+                             f"{self.n_nodes}-node mesh")
         h = next(self._handles)
         self._pins[h] = int(snapshot_floor)
+        self._pin_node[h] = int(node)
         return h
+
+    @property
+    def pinned(self) -> bool:
+        """True when any live pin exists (the watermark is then lower than
+        the engine's own wave-boundary collapse may assume)."""
+        return bool(self._pins)
 
     def release(self, handle: int) -> None:
         self._pins.pop(handle, None)
+        self._pin_node.pop(handle, None)
 
     # -------------------------------------------------------- watermark
     def watermark(self) -> Optional[int]:
@@ -76,6 +96,22 @@ class VisibilityGC:
         if not self._pins:
             return None
         return min(min(self._pins.values()), self.clock)
+
+    def node_floors(self, n_nodes: int):
+        """Per-node snapshot floors for the decentralized mesh merge: node
+        ``k``'s entry is the min floor over its live pinned readers, or the
+        engine clock when it hosts none (neutral in the min — the wave
+        boundary is every unpinned reader's floor).  ``lax.pmin`` over
+        these equals ``watermark()`` by construction."""
+        floors = [self.clock] * n_nodes
+        for h, f in self._pins.items():
+            node = self._pin_node[h]
+            if node >= n_nodes:
+                raise ValueError(
+                    f"pin handle {h} names node {node}, but the mesh has "
+                    f"only {n_nodes} node(s)")
+            floors[node] = min(floors[node], f)
+        return floors
 
     # ------------------------------------------------------- accounting
     def observe(self, out_np, clock: int) -> None:

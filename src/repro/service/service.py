@@ -74,23 +74,40 @@ class ServiceReport:
 
 
 class TxnService:
-    """Closed-loop transaction service: open stream in, commits out."""
+    """Closed-loop transaction service: open stream in, commits out.
+
+    ``mesh`` switches the data plane: ``None`` serves from the single-device
+    engine (``engine.step_wave``); a 1-D ``("node",)`` mesh (from
+    ``dist_engine.make_node_mesh``) shards the version store over the mesh
+    and serves every wave through ``dist_engine.step_wave_dist`` — the same
+    commit loop over peer collectives, any scheduler, with the GC watermark
+    merged from per-node reader floors by ``lax.pmin`` instead of a host-side
+    min.  Outcomes are bit-identical between the two placements.
+    """
 
     def __init__(self, n_keys: int, n_versions: int = 8, T: int = 64,
                  O: int = SMALLBANK_O, sched: str = "postsi",
                  n_nodes: int = 8, retry: Optional[RetryPolicy] = None,
                  gc_block: bool = False, max_queue: Optional[int] = None,
-                 host_skew: Optional[np.ndarray] = None, seed: int = 0):
+                 host_skew: Optional[np.ndarray] = None, seed: int = 0,
+                 mesh=None):
         self.sched = sched
         self.n_nodes = n_nodes
         self.host_skew = host_skew
         self.T, self.O = T, O
-        self.store = make_store(n_keys, n_versions)
+        self.mesh = mesh
+        if mesh is None:
+            self.store = make_store(n_keys, n_versions)
+        else:
+            from repro.core.dist_engine import shard_store
+            self.store = shard_store(make_store(n_keys, n_versions), mesh)
         self.n_keys = n_keys
         self.clock = jnp.int32(1)
         self.former = WaveFormer(T, O, max_queue=max_queue)
         self.retry = retry or RetryPolicy()
-        self.gc = VisibilityGC(block=gc_block)
+        self.gc = VisibilityGC(
+            block=gc_block,
+            n_nodes=None if mesh is None else mesh.devices.size)
         self.rng = np.random.RandomState(seed)       # backoff jitter only
         self.tick = 0
         self.wave_idx = 0
@@ -129,10 +146,7 @@ class TxnService:
             return None
         wave, slots = formed
         self.wave_idx += 1
-        self.store, out, self.clock = step_wave(
-            self.store, wave, self.wave_idx, self.clock, sched=self.sched,
-            n_nodes=self.n_nodes, host_skew=self.host_skew,
-            watermark=self.gc.watermark(), gc_block=self.gc.block)
+        self.store, out, self.clock = self._step_wave(wave)
         self.gc.observe(out, int(self.clock))
         self.history.append((np.asarray(wave.tid), out))
         self.executions += len(slots)
@@ -153,6 +167,26 @@ class TxnService:
                     self.former.requeue(req, self.tick + delay)
         self._wall_s += time.perf_counter() - t0
         return out
+
+    def _step_wave(self, wave):
+        """Dispatch one formed wave to the configured data plane."""
+        if self.mesh is None:
+            return step_wave(
+                self.store, wave, self.wave_idx, self.clock, sched=self.sched,
+                n_nodes=self.n_nodes, host_skew=self.host_skew,
+                watermark=self.gc.watermark(), gc_block=self.gc.block)
+        from repro.core.dist_engine import mesh_watermark, step_wave_dist
+        # decentralized GC watermark: per-node live-reader floors merged by
+        # a pmin collective on the mesh, never a host-side reduction; with
+        # no pins the engine's own wave-boundary collapse applies (None)
+        wm = None
+        if self.gc.pinned:
+            wm = mesh_watermark(self.mesh,
+                                self.gc.node_floors(self.mesh.devices.size))
+        return step_wave_dist(
+            self.store, wave, self.wave_idx, self.clock, self.mesh,
+            sched=self.sched, n_nodes=self.n_nodes, host_skew=self.host_skew,
+            watermark=wm, gc_block=self.gc.block)
 
     def drain(self, max_ticks: Optional[int] = None) -> int:
         """Run ticks until no request is pending (or the safety cap).

@@ -138,38 +138,149 @@ print("ELASTIC-RESHARD-OK")
 """))
 
 
-def test_dist_engine_matches_single_device():
-    """The shard_map PostSI engine (peer collectives, no coordinator) commits
-    the exact same transactions with the exact same induced intervals as the
-    single-device engine."""
+def test_mesh_misconfiguration_rejected_in_parent():
+    """Cheap in-process check (this process sees exactly 1 CPU device):
+    asking for more mesh nodes than devices is a clear ValueError, never a
+    silently under-provisioned mesh."""
+    import jax
+
+    from repro.core.dist_engine import make_node_mesh
+
+    with pytest.raises(ValueError, match="device"):
+        make_node_mesh(len(jax.devices()) + 1)
+
+
+def test_dist_engine_all_schedulers_match_single_device():
+    """The substrate-unified mesh engine (peer collectives, no coordinator,
+    ONE commit loop shared with engine.py) commits the exact same
+    transactions with the exact same induced intervals as the single-device
+    engine — for ALL SIX schedulers, on both the per-wave and the fused
+    lax.scan-under-shard_map paths, including the GC accounting — and the
+    misconfiguration guards raise instead of silently mis-sharding."""
     print(_run(r"""
-import numpy as np, jax, jax.numpy as jnp
-from repro.core import make_store, run_wave
-from repro.core.dist_engine import (make_node_mesh, run_wave_postsi_dist,
+import numpy as np, jax
+from repro.core import SCHEDULERS, make_store, run_workload, run_workload_fused
+from repro.core.dist_engine import (make_node_mesh, run_workload_dist,
+                                    run_workload_fused_dist, shard_store)
+from repro.core.workloads import smallbank_waves
+
+n_nodes, kpn, W, T = 8, 32, 2, 16
+mesh = make_node_mesh(n_nodes)
+
+# misconfiguration guards (satellite): under-provisioned mesh and
+# non-dividing key space are loud errors, not silent corruption
+try:
+    make_node_mesh(9); raise AssertionError("expected ValueError (9 > 8)")
+except ValueError: pass
+try:
+    shard_store(make_store(100, 4), mesh)
+    raise AssertionError("expected ValueError (100 % 8 != 0)")
+except ValueError: pass
+
+for sched in SCHEDULERS:
+    waves = smallbank_waves(np.random.RandomState(7), W, T, n_nodes, kpn,
+                            dist_frac=0.5, hot_frac=0.5, hot_per_node=4)
+    hs = (np.array([0,1,1,2,0,1,2,0], np.int32) if sched == "clocksi"
+          else None)
+    st1, h1, s1 = run_workload(make_store(n_nodes*kpn, 8), waves,
+                               sched=sched, n_nodes=n_nodes, host_skew=hs,
+                               gc_track=True)
+    st2, h2, s2 = run_workload_dist(
+        shard_store(make_store(n_nodes*kpn, 8), mesh), waves, mesh,
+        sched=sched, n_nodes=n_nodes, host_skew=hs, gc_track=True)
+    st3, h3, s3 = run_workload_fused_dist(
+        shard_store(make_store(n_nodes*kpn, 8), mesh), waves, mesh,
+        sched=sched, n_nodes=n_nodes, host_skew=hs, gc_track=True)
+    assert s1 == s2 == s3, (sched, s1, s2, s3)
+    for (t1, o1), (t2, o2), (t3, o3) in zip(h1, h2, h3):
+        np.testing.assert_array_equal(t1, t2)
+        for name, f1, f2, f3 in zip(o1._fields, o1, o2, o3):
+            np.testing.assert_array_equal(f1, f2,
+                                          err_msg=f"{sched}.perwave.{name}")
+            np.testing.assert_array_equal(f1, f3,
+                                          err_msg=f"{sched}.fused.{name}")
+    for name, f1, f2, f3 in zip(st1._fields, st1, st2, st3):
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
+                                      err_msg=f"{sched}.store.{name}")
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f3),
+                                      err_msg=f"{sched}.store.fused.{name}")
+    print(f"DIST-{sched}-OK commits: {s1.committed} aborts: {s1.aborted}")
+"""))
+
+
+def test_dist_engine_hypothesis_differential():
+    """Property: for random waves (mixed reads / blind writes / RMWs, random
+    contention and distribution), LocalSubstrate and MeshSubstrate commit
+    the same set with identical intervals under every drawn scheduler."""
+    pytest.importorskip("hypothesis")
+    print(_run(r"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from repro.core import SCHEDULERS, make_store, run_workload
+from repro.core.dist_engine import (make_node_mesh, run_workload_dist,
                                     shard_store)
 from repro.core.workloads import micro_waves
 
-n_nodes, kpn = 8, 64
-rng = np.random.RandomState(3)
-waves = micro_waves(rng, 1, 32, n_nodes, kpn, n_ops=4, read_ratio=0.4,
-                    hot_frac=0.5, hot_per_node=4, blind_frac=0.5)
-wave = waves[0]
-
-# single-device reference
-store1 = make_store(n_nodes * kpn, 8)
-store1, out, clock = run_wave(store1, wave, jnp.int32(1), jnp.int32(1),
-                              jnp.int32(n_nodes), sched="postsi")
-
-# distributed
+n_nodes, kpn, T = 4, 16, 12
 mesh = make_node_mesh(n_nodes)
-store2 = shard_store(make_store(n_nodes * kpn, 8), mesh)
-store2, status, s, c = run_wave_postsi_dist(store2, wave, jnp.int32(1),
-                                            mesh, kpn)
-np.testing.assert_array_equal(np.asarray(out.status), np.asarray(status))
-np.testing.assert_array_equal(np.asarray(out.s), np.asarray(s))
-np.testing.assert_array_equal(np.asarray(out.c), np.asarray(c))
-np.testing.assert_array_equal(np.asarray(store1.val), np.asarray(store2.val))
-np.testing.assert_array_equal(np.asarray(store1.cid), np.asarray(store2.cid))
-print("DIST-ENGINE-OK commits:", int((status == 1).sum()),
-      "aborts:", int((status == 2).sum()))
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 2**16), sched=st.sampled_from(SCHEDULERS),
+       read_ratio=st.sampled_from([0.2, 0.6]),
+       blind_frac=st.sampled_from([0.0, 0.8]))
+def check(seed, sched, read_ratio, blind_frac):
+    waves = micro_waves(np.random.RandomState(seed), 1, T, n_nodes, kpn,
+                        n_ops=3, read_ratio=read_ratio, dist_frac=0.5,
+                        hot_frac=0.6, hot_per_node=2, blind_frac=blind_frac)
+    hs = (np.array([0, 1, 0, 2], np.int32) if sched == "clocksi" else None)
+    _, h1, s1 = run_workload(make_store(n_nodes*kpn, 4), waves, sched=sched,
+                             n_nodes=n_nodes, host_skew=hs)
+    _, h2, s2 = run_workload_dist(
+        shard_store(make_store(n_nodes*kpn, 4), mesh), waves, mesh,
+        sched=sched, n_nodes=n_nodes, host_skew=hs)
+    assert s1 == s2, (sched, seed, s1, s2)
+    for (t1, o1), (t2, o2) in zip(h1, h2):
+        for name, f1, f2 in zip(o1._fields, o1, o2):
+            np.testing.assert_array_equal(f1, f2,
+                                          err_msg=f"{sched}/{seed}.{name}")
+
+check()
+print("DIST-HYPOTHESIS-OK")
+"""))
+
+
+def test_mesh_service_matches_single_device():
+    """The sharded closed-loop service (TxnService(mesh=...), GC watermark
+    merged by lax.pmin from per-node reader floors) serves the identical
+    stream to the identical outcome as the single-device service, and the
+    served history verifies."""
+    print(_run(r"""
+import numpy as np
+from repro.core.dist_engine import make_node_mesh, mesh_watermark
+from repro.core.workloads import poisson_arrivals
+from repro.service import RetryPolicy, TxnService, smallbank_txn_gen
+
+n_nodes, kpn, T = 8, 32, 16
+mesh = make_node_mesh(n_nodes)
+reports = []
+for m in (None, mesh):
+    svc = TxnService(n_keys=n_nodes*kpn, n_versions=8, T=T, sched="postsi",
+                     n_nodes=n_nodes, retry=RetryPolicy(max_attempts=6),
+                     seed=0, mesh=m)
+    arr = poisson_arrivals(np.random.RandomState(100), 0.9*T, 8)
+    gen = smallbank_txn_gen(np.random.RandomState(200), n_nodes, kpn,
+                            dist_frac=0.3, hot_frac=0.6, hot_per_node=3)
+    reports.append(svc.run_stream(arr, gen))
+    assert svc.verify() == [], svc.verify()
+    # decentralized watermark: pmin merge over per-node floors == host min
+    h = svc.gc.pin(3, node=5)
+    assert svc.gc.watermark() == mesh_watermark(
+        mesh, svc.gc.node_floors(n_nodes))
+    svc.gc.release(h)
+a, b = reports
+assert (a.committed, a.dropped, a.retries, a.waves, a.rejected) == \
+       (b.committed, b.dropped, b.retries, b.waves, b.rejected), (a, b)
+assert (a.latency_p50, a.latency_p95, a.latency_p99) == \
+       (b.latency_p50, b.latency_p95, b.latency_p99)
+print("MESH-SERVICE-OK committed:", a.committed)
 """))
