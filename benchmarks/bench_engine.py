@@ -22,7 +22,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import (SCHEDULERS, make_store, potential_backend,
+from repro.core import (SCHEDULERS, default_backend, make_store,
                         run_workload, run_workload_fused)
 from repro.core.workloads import smallbank_waves
 
@@ -36,26 +36,37 @@ KEYS_PER_NODE = 200
 REPS = 3
 
 
-def _time(driver, waves, sched, host_skew, reps=REPS):
+def _sweep_backends():
+    """Backends the platform can actually run end-to-end."""
+    import jax
+    from repro.kernels import BACKENDS
+    return tuple(bk for bk in BACKENDS
+                 if bk != "pallas" or jax.default_backend() == "tpu")
+
+
+def _time(driver, waves, sched, host_skew, reps=REPS, kernels=None):
     mk = lambda: make_store(N_NODES * KEYS_PER_NODE, 8)
     out = driver(mk(), waves, sched=sched, n_nodes=N_NODES,
-                 host_skew=host_skew)          # warmup: compile + first run
+                 host_skew=host_skew,
+                 kernels=kernels)              # warmup: compile + first run
     best = float("inf")
     for _ in range(reps):
         store = mk()
         t0 = time.perf_counter()
         out = driver(store, waves, sched=sched, n_nodes=N_NODES,
-                     host_skew=host_skew)
+                     host_skew=host_skew, kernels=kernels)
         best = min(best, time.perf_counter() - t0)
     return best, out
 
 
-def run(scheds=SCHEDULERS) -> Dict:
+def run(scheds=SCHEDULERS, backends=None) -> Dict:
     rng = np.random.RandomState(11)
     waves = smallbank_waves(rng, N_WAVES, WAVE_T, N_NODES, KEYS_PER_NODE,
                             dist_frac=0.2)
     n_txn = N_WAVES * WAVE_T
+    backends = _sweep_backends() if backends is None else backends
     rows = {}
+    backend_rows = {bk: {} for bk in backends}
     for sched in scheds:
         hs = (np.round(np.linspace(0, 2, N_NODES)).astype(np.int32)
               if sched == "clocksi" else None)
@@ -75,14 +86,32 @@ def run(scheds=SCHEDULERS) -> Dict:
             "aborted": st_f.aborted,
             "abort_rate": round(st_f.aborted / n_txn, 4),
         }
+        # backend sweep (fused hot path, explicit KernelConfig per run):
+        # the trajectory datapoint gains the backend dimension, and every
+        # backend's history must stay bit-identical to the default run's
+        for bk in backends:
+            t_bk, (_, h_bk, st_bk) = _time(run_workload_fused, waves, sched,
+                                           hs, kernels=bk)
+            for (t1, o1), (t2, o2) in zip(h_f, h_bk):
+                np.testing.assert_array_equal(t1, t2)
+                for f1, f2 in zip(o1, o2):
+                    np.testing.assert_array_equal(f1, f2)
+            backend_rows[bk][sched] = {
+                "fused_wall_s": round(t_bk, 6),
+                "txns_per_sec": round(n_txn / t_bk, 1),
+                "waves_per_sec": round(N_WAVES / t_bk, 1),
+                "vs_default": round(t_fused / t_bk, 3),
+            }
     return {
         "config": {
             "workload": "smallbank", "n_waves": N_WAVES, "wave_size": WAVE_T,
             "n_nodes": N_NODES, "keys_per_node": KEYS_PER_NODE,
             "dist_frac": 0.2, "reps": REPS,
-            "potential_backend": potential_backend(),
+            "kernel_backend": default_backend(),
+            "backend_sweep": list(backends),
         },
         "schedulers": rows,
+        "backends": backend_rows,
     }
 
 
@@ -101,6 +130,12 @@ def main(write_json: bool = True) -> Dict:
               f"vs per-wave {r['perwave_wall_s']*1e3:.1f}ms "
               f"({r['speedup']:.2f}x)  {r['txns_per_sec']:.0f} txn/s "
               f"{r['waves_per_sec']:.0f} waves/s abort={r['abort_rate']:.2%}")
+    for bk, scheds in report["backends"].items():
+        for sched, r in scheds.items():
+            print(f"bench_engine/{sched}/{bk}: fused "
+                  f"{r['fused_wall_s']*1e3:.1f}ms "
+                  f"{r['txns_per_sec']:.0f} txn/s "
+                  f"(vs default {r['vs_default']:.2f}x)")
     return report
 
 

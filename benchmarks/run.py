@@ -77,6 +77,12 @@ def _engine_executor() -> None:
         _csv(f"engine/fused/{sched}", r["fused_wall_s"] * 1e6 / n_txn,
              f"speedup={r['speedup']:.2f}x waves/s={r['waves_per_sec']:.0f} "
              f"abort={100 * r['abort_rate']:.1f}%")
+        for bk, scheds in report["backends"].items():
+            b = scheds[sched]
+            _csv(f"engine/fused/{sched}/{bk}",
+                 b["fused_wall_s"] * 1e6 / n_txn,
+                 f"waves/s={b['waves_per_sec']:.0f} "
+                 f"vs_default={b['vs_default']:.2f}x")
 
 
 def _service() -> None:
@@ -155,12 +161,28 @@ def _kernel_micro() -> None:
     _csv("kernel/ssd_scan/xla_ref/2k", us,
          f"{BH*Sx*P*N*4/us/1e3:.1f}GFLOPs-class")
 
-    M, V = 65536, 8
-    cids = jnp.asarray(np.sort(rng.randint(0, 1 << 20, (M, V)), 1), jnp.int32)
-    tids = jnp.asarray(rng.randint(-1, 1000, (M, V)), jnp.int32)
-    mc = jnp.asarray(rng.randint(0, 1 << 20, (M,)), jnp.int32)
-    us = bench(lambda *a: ops.version_scan(*a), cids, tids, mc)
-    _csv("kernel/version_scan/xla_ref/64k", us, f"{M*V*8/us/1e3:.2f}GB/s-scan")
+    # version_scan across every backend the platform can run (the engine
+    # read-path hot spot); the label names the backend actually dispatched
+    import jax
+    from repro.kernels import BACKENDS, KernelConfig
+
+    V = 8
+    for bk in BACKENDS:
+        if bk == "pallas" and jax.default_backend() != "tpu":
+            continue                       # Mosaic cannot lower off-TPU
+        # interpret mode pays per-block grid emulation — bench it at the
+        # engine's wave-read size instead of stalling the block for minutes
+        M, tag = (4096, "4k") if bk == "pallas_interpret" else (65536, "64k")
+        cids = jnp.asarray(np.sort(rng.randint(0, 1 << 20, (M, V)), 1),
+                           jnp.int32)
+        tids = jnp.asarray(rng.randint(-1, 1000, (M, V)), jnp.int32)
+        mc = jnp.asarray(rng.randint(0, 1 << 20, (M,)), jnp.int32)
+        cfg = KernelConfig(bk)
+        us = bench(lambda *a: ops.version_scan(
+            *a, use_pallas=cfg.use_pallas, interpret=cfg.interpret),
+            cids, tids, mc)
+        _csv(f"kernel/version_scan/{bk}/{tag}", us,
+             f"{M*V*8/us/1e3:.2f}GB/s-scan")
 
     T, O = 256, 8
     rk = jnp.asarray(rng.randint(-1, 4000, (T, O)), jnp.int32)

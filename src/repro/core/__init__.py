@@ -3,6 +3,8 @@
 Decentralized MVCC: transactions negotiate logical time intervals from
 visibility relationships; no central clock exists anywhere in this package.
 """
+from repro.kernels import (KernelConfig, default_backend, resolve,
+                           set_default_backend)
 from .commit_phase import potential_backend, set_potential_backend
 from .engine import (NOP, READ, RMW, WRITE, RUNNING, COMMITTED, ABORTED,
                      SCHEDULERS, Wave, WaveOut, RunStats, run_wave,
@@ -18,6 +20,7 @@ __all__ = [
     "NOP", "READ", "RMW", "WRITE", "RUNNING", "COMMITTED", "ABORTED",
     "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_wave", "run_wave_on",
     "run_workload", "run_workload_fused", "stack_waves", "step_wave",
+    "KernelConfig", "default_backend", "resolve", "set_default_backend",
     "potential_backend", "set_potential_backend", "MVStore",
     "evicting_visible", "make_store", "read_newest", "read_visible",
     "node_of_key", "LocalSubstrate", "MeshSubstrate", "verify_cv",

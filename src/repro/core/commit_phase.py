@@ -8,61 +8,44 @@ This module is the single home of that replicated arithmetic so the two
 engines cannot drift, and of the ``potential`` anti-dependency matrix build,
 which it routes to the tiled Pallas kernel
 (`repro.kernels.interval_negotiate.potential_matrix_pallas`) or the dense
-jnp reference depending on a process-wide backend config.
+jnp reference per a resolved ``kernels.backend.KernelConfig``.
 
-Backend selection (``set_potential_backend`` / env ``REPRO_POTENTIAL_BACKEND``):
-
-  auto              -> "pallas" on TPU, "pallas_interpret" elsewhere (default)
-  pallas            -> Mosaic-compiled kernel (TPU)
-  pallas_interpret  -> the same kernel body, interpreted on CPU
-  jnp               -> the dense [T,T,O,O] broadcast-compare reference
-                       (escape hatch; bit-identical to the kernel by
-                       tests/test_kernels.py and tests/test_fused_executor.py)
-
-Because the engines jit-compile with the backend baked in at trace time,
-``set_potential_backend`` clears the jit caches registered via
-``register_cache_clear`` so a config change takes effect immediately.
+Backend selection lives in ``repro.kernels.backend`` (env
+``REPRO_KERNEL_BACKEND``, ``set_default_backend``, or a ``KernelConfig``
+threaded through the substrate/engine); ``set_potential_backend`` /
+``potential_backend`` survive as deprecated shims forwarding there.
 """
 from __future__ import annotations
 
-import os
+import warnings
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels import backend as kernel_backend
+from repro.kernels.backend import register_cache_clear  # re-export (compat)
 
 # op kinds (one code per wave-op slot)
 NOP, READ, WRITE, RMW = 0, 1, 2, 3
 # txn status
 RUNNING, COMMITTED, ABORTED = 0, 1, 2
 
-POTENTIAL_BACKENDS = ("auto", "pallas", "pallas_interpret", "jnp")
-
-_backend = os.environ.get("REPRO_POTENTIAL_BACKEND", "auto")
-_clear_hooks = []
-
-
-def register_cache_clear(jitted) -> None:
-    """Engines register their jitted entry points; a backend switch clears
-    them so the new backend is traced in."""
-    _clear_hooks.append(jitted)
+POTENTIAL_BACKENDS = ("auto",) + kernel_backend.BACKENDS
 
 
 def set_potential_backend(name: str) -> None:
-    global _backend
-    assert name in POTENTIAL_BACKENDS, (name, POTENTIAL_BACKENDS)
-    _backend = name
-    for fn in _clear_hooks:
-        try:
-            fn.clear_cache()
-        except Exception:
-            pass
+    """Deprecated: forwards to ``kernels.backend.set_default_backend`` (the
+    per-op global this shimmed is gone; one config now serves every op)."""
+    warnings.warn(
+        "set_potential_backend is deprecated; use "
+        "repro.kernels.set_default_backend (process default) or thread a "
+        "repro.kernels.KernelConfig through the engine/substrate",
+        DeprecationWarning, stacklevel=2)
+    kernel_backend.set_default_backend(name)
 
 
 def potential_backend() -> str:
-    """The resolved (non-auto) backend name."""
-    if _backend != "auto":
-        return _backend
-    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    """Deprecated alias of ``kernels.backend.default_backend``."""
+    return kernel_backend.default_backend()
 
 
 # ---------------------------------------------------------------------------
@@ -79,20 +62,22 @@ def potential_matrix_jnp(read_key, write_key, read_mask, write_mask):
     return pot & ~jnp.eye(T, dtype=bool)
 
 
-def build_potential(keys, is_read, is_write, backend: str | None = None):
+def build_potential(keys, is_read, is_write, backend=None):
     """Anti-dependency candidates for one wave: bool [T, T].
 
     keys: [T, O] int32 op keys (>= 0 where active); is_read / is_write:
-    [T, O] bool op masks. Routed per ``backend`` (None = process config).
+    [T, O] bool op masks.  ``backend`` is anything ``kernels.backend.resolve``
+    accepts — a resolved ``KernelConfig``, a backend name, or ``None`` for
+    the process default.  All routes are bit-identical.
     """
-    backend = backend or potential_backend()
-    if backend == "jnp":
+    cfg = kernel_backend.resolve(backend)
+    if not cfg.use_pallas:
         return potential_matrix_jnp(keys, keys, is_read, is_write)
     from repro.kernels import ops
     rk = jnp.where(is_read, keys, -1)
     wk = jnp.where(is_write, keys, -1)
     out = ops.potential_matrix(rk, wk, use_pallas=True,
-                               interpret=(backend == "pallas_interpret"))
+                               interpret=cfg.interpret)
     return out.astype(bool)
 
 

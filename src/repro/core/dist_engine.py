@@ -44,11 +44,10 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.kernels import KernelConfig
 from .engine import Wave, WaveOut, _stats_of, run_wave_on
 from .store import MVStore
-from .substrate import MeshSubstrate
-
-_SUB = MeshSubstrate("node")
+from .substrate import MeshSubstrate, mesh_kernels
 
 
 def make_node_mesh(n_nodes: int) -> Mesh:
@@ -95,16 +94,23 @@ _N_OUT = len(WaveOut._fields)
 
 @functools.lru_cache(maxsize=None)
 def _wave_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
-             gc_block: bool, jit: bool = True):
+             gc_block: bool, kernels: KernelConfig = KernelConfig("jnp"),
+             jit: bool = True):
     """Single-wave mesh executor: shard_map around ``engine.run_wave_on``
-    over a ``MeshSubstrate``.  Takes/returns flat leaves (store sharded
-    P("node"), everything else replicated)."""
+    over a ``MeshSubstrate`` carrying the resolved kernel config.
+    Takes/returns flat leaves (store sharded P("node"), everything else
+    replicated).  ``kernels`` must already be resolved AND mesh-degraded (it
+    is part of the lru_cache key; the public drivers normalize via
+    ``substrate.mesh_kernels`` so equivalent configs — e.g. ``pallas`` and
+    its mesh degrade ``jnp`` — share one compile, and a process-default
+    switch lands on a fresh cache entry)."""
+    sub = MeshSubstrate("node", kernels)
 
     def node_fn(*args):
         st = MVStore(*args[:_N_STORE])
         wave = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])
         wave_idx, clock, n_nodes, hs, wm = args[_N_STORE + _N_WAVE:]
-        st, out, clk = run_wave_on(_SUB, st, wave, wave_idx, clock, n_nodes,
+        st, out, clk = run_wave_on(sub, st, wave, wave_idx, clock, n_nodes,
                                    sched=sched, skew=skew, host_skew=hs,
                                    watermark=wm, gc_track=gc_track,
                                    gc_block=gc_block)
@@ -121,11 +127,12 @@ def _wave_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
 
 @functools.lru_cache(maxsize=None)
 def _scan_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
-             gc_block: bool):
+             gc_block: bool, kernels: KernelConfig = KernelConfig("jnp")):
     """Fused multi-wave mesh executor: ONE device program for a whole
     workload — lax.scan over the wave axis *inside* the shard_map body, so
     the host is not touched between waves (mesh mirror of
-    ``engine._scan_waves``)."""
+    ``engine._scan_waves``).  ``kernels`` must already be resolved."""
+    sub = MeshSubstrate("node", kernels)
 
     def node_fn(*args):
         st = MVStore(*args[:_N_STORE])
@@ -136,7 +143,7 @@ def _scan_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
         def body(carry, xs):
             st, clk = carry
             wave, w_idx = xs
-            st, out, clk = run_wave_on(_SUB, st, wave, w_idx, clk, n_nodes,
+            st, out, clk = run_wave_on(sub, st, wave, w_idx, clk, n_nodes,
                                        sched=sched, skew=skew, host_skew=hs,
                                        gc_track=gc_track, gc_block=gc_block)
             return (st, clk), out
@@ -164,12 +171,14 @@ def _norm_hs(host_skew) -> jax.Array:
 
 
 def dist_wave_traceable(mesh: Mesh, sched: str = "postsi", skew: int = 0,
-                        gc_track: bool = False, gc_block: bool = False):
+                        gc_track: bool = False, gc_block: bool = False,
+                        kernels=None):
     """Unjitted traceable single-wave mesh executor over the NamedTuples —
     for callers that lower/compile themselves (repro.launch.dryrun_postsi).
     Returns ``f(store, wave, wave_idx, clock, n_nodes, host_skew=None,
     watermark=None) -> (store', WaveOut, clock')``."""
-    fn = _wave_fn(mesh, sched, skew, gc_track, gc_block, jit=False)
+    fn = _wave_fn(mesh, sched, skew, gc_track, gc_block,
+                  mesh_kernels(kernels), jit=False)
 
     def call(store, wave, wave_idx, clock, n_nodes, host_skew=None,
              watermark=None):
@@ -185,7 +194,8 @@ def dist_wave_traceable(mesh: Mesh, sched: str = "postsi", skew: int = 0,
 def run_wave_dist(store: MVStore, wave: Wave, wave_idx, clock, mesh: Mesh,
                   n_nodes=None, sched: str = "postsi", skew: int = 0,
                   host_skew=None, watermark=None, gc_track: bool = False,
-                  gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
+                  gc_block: bool = False,
+                  kernels=None) -> Tuple[MVStore, WaveOut, jax.Array]:
     """One wave on the node mesh, any scheduler; mesh twin of
     ``engine.run_wave`` (same contract: (store', WaveOut, clock')).
 
@@ -193,10 +203,14 @@ def run_wave_dist(store: MVStore, wave: Wave, wave_idx, clock, mesh: Mesh,
     accounting use (dsi locality, clocksi skew, msgs_cross); it defaults to
     the physical node count of ``mesh`` so a resized mesh cannot silently
     run under a stale cluster model — pass it explicitly to decouple the
-    two (e.g. an 8-node logical workload served from 4 physical shards)."""
+    two (e.g. an 8-node logical workload served from 4 physical shards).
+
+    ``kernels`` routes every data-plane hot spot (version scan, potential
+    build) per ``repro.kernels.resolve`` — same knob as ``engine.run_wave``."""
     n_nodes = mesh.devices.size if n_nodes is None else n_nodes
     wm = clock if watermark is None else watermark
-    out = _wave_fn(mesh, sched, skew, gc_track, gc_block)(
+    out = _wave_fn(mesh, sched, skew, gc_track, gc_block,
+                   mesh_kernels(kernels))(
         *store, *wave, jnp.int32(wave_idx), jnp.int32(clock),
         jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
     return (MVStore(*out[:_N_STORE]),
@@ -207,7 +221,7 @@ def step_wave_dist(store: MVStore, wave: Wave, wave_idx: int, clock,
                    mesh: Mesh, *, sched: str = "postsi",
                    n_nodes: int | None = None, skew: int = 0, host_skew=None,
                    watermark=None, gc_track: bool = True,
-                   gc_block: bool = False):
+                   gc_block: bool = False, kernels=None):
     """Closed-loop step API on the mesh (DESIGN.md §8): one wave in, numpy
     per-txn outcomes out, store/clock kept device-resident (sharded)
     between steps — drop-in for ``engine.step_wave`` so ``TxnService``
@@ -215,14 +229,14 @@ def step_wave_dist(store: MVStore, wave: Wave, wave_idx: int, clock,
     store, out, clock = run_wave_dist(
         store, wave, wave_idx, clock, mesh, n_nodes=n_nodes, sched=sched,
         skew=skew, host_skew=host_skew, watermark=watermark,
-        gc_track=gc_track, gc_block=gc_block)
+        gc_track=gc_track, gc_block=gc_block, kernels=kernels)
     return store, jax.tree_util.tree_map(np.asarray, out), clock
 
 
 def run_workload_dist(store: MVStore, waves, mesh: Mesh,
                       sched: str = "postsi", skew: int = 0, host_skew=None,
                       n_nodes: int | None = None, gc_track: bool = False,
-                      gc_block: bool = False):
+                      gc_block: bool = False, kernels=None):
     """Per-wave mesh driver (debug/differential twin of
     ``engine.run_workload``): one dispatch + host sync per wave.
     Returns (store, history, stats)."""
@@ -232,7 +246,7 @@ def run_workload_dist(store: MVStore, waves, mesh: Mesh,
         store, out, clock = run_wave_dist(
             store, wave, w_idx + 1, clock, mesh, n_nodes=n_nodes, sched=sched,
             skew=skew, host_skew=host_skew, gc_track=gc_track,
-            gc_block=gc_block)
+            gc_block=gc_block, kernels=kernels)
         history.append((np.asarray(wave.tid),
                         jax.tree_util.tree_map(np.asarray, out)))
     return store, history, _stats_of(history)
@@ -241,14 +255,16 @@ def run_workload_dist(store: MVStore, waves, mesh: Mesh,
 def run_workload_fused_dist(store: MVStore, waves, mesh: Mesh,
                             sched: str = "postsi", skew: int = 0,
                             host_skew=None, n_nodes: int | None = None,
-                            gc_track: bool = False, gc_block: bool = False):
+                            gc_track: bool = False, gc_block: bool = False,
+                            kernels=None):
     """Fused mesh driver: the whole workload as a single jitted shard_map
     dispatch (scan-over-waves inside).  Same (store, history, stats)
     contract and bit-identical history to every other driver."""
     from .engine import stack_waves
     n_nodes = mesh.devices.size if n_nodes is None else n_nodes
     stacked = stack_waves(waves)
-    out = _scan_fn(mesh, sched, skew, gc_track, gc_block)(
+    out = _scan_fn(mesh, sched, skew, gc_track, gc_block,
+                   mesh_kernels(kernels))(
         *store, *stacked, jnp.int32(1), jnp.int32(n_nodes),
         _norm_hs(host_skew))
     store = MVStore(*out[:_N_STORE])

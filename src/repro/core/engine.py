@@ -51,10 +51,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.kernels import KernelConfig, register_cache_clear, resolve
 from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
                            creator_slots, lost_update, ongoing_readers_of,
                            postsi_bounds, push_bounds, potential_matrix_jnp,
-                           register_cache_clear, rw_edge_to_creator)
+                           rw_edge_to_creator)
 from .store import INF, MVStore, node_of_key
 from .substrate import LocalSubstrate
 
@@ -89,8 +90,6 @@ class WaveOut(NamedTuple):
 # jnp reference build of potential[i, j] = "txn i read a key txn j writes";
 # run_wave routes through commit_phase.build_potential (Pallas by default)
 _potential_antidep = potential_matrix_jnp
-
-_LOCAL = LocalSubstrate()
 
 
 def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
@@ -306,18 +305,38 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sched", "skew", "gc_track", "gc_block"))
+                   static_argnames=("sched", "skew", "gc_track", "gc_block",
+                                    "kernels"))
+def _run_wave_jit(store, wave, wave_idx, clock, n_nodes, sched, skew,
+                  host_skew, watermark, gc_track, gc_block,
+                  kernels: KernelConfig):
+    return run_wave_on(LocalSubstrate(kernels), store, wave, wave_idx, clock,
+                       n_nodes, sched=sched, skew=skew, host_skew=host_skew,
+                       watermark=watermark, gc_track=gc_track,
+                       gc_block=gc_block)
+
+
 def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
              n_nodes: jax.Array = 8, sched: str = "postsi", skew: int = 0,
              host_skew: jax.Array | None = None,
              watermark: jax.Array | None = None, gc_track: bool = False,
-             gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
+             gc_block: bool = False,
+             kernels: KernelConfig | str | None = None,
+             ) -> Tuple[MVStore, WaveOut, jax.Array]:
     """Execute one wave single-device. Returns (store', out, clock').
     ``n_nodes`` is traced, so scaling sweeps don't recompile.
 
-    Thin jit wrapper: ``run_wave_on`` over the ``LocalSubstrate`` — the
+    Thin jit wrapper: ``run_wave_on`` over a ``LocalSubstrate`` — the
     mesh engine wraps the very same function over a ``MeshSubstrate``
     (``dist_engine.run_wave_dist``).
+
+    ``kernels`` picks the kernel backend for every data-plane hot spot — a
+    resolved ``repro.kernels.KernelConfig``, a backend name (``"pallas"`` /
+    ``"pallas_interpret"`` / ``"jnp"``), or ``None`` for the process
+    default (env ``REPRO_KERNEL_BACKEND``).  It is resolved HERE, outside
+    the jit boundary, so equivalent specs (a name, a config, or a matching
+    process default) share one trace; the substrate is then built per
+    trace with the resolved config baked in as a static argument.
 
     ``watermark`` is the GC watermark for version reclamation (DESIGN.md §8):
     the decentralized min over live readers' ``s_lo``.  In the wave model
@@ -332,10 +351,10 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     ``WaveOut.evicted_visible``; with ``gc_block=True`` the writer is
     aborted instead (and the counter stays 0), so the retry pipeline
     re-runs it after the watermark has advanced past the ring."""
-    return run_wave_on(_LOCAL, store, wave, wave_idx, clock, n_nodes,
-                       sched=sched, skew=skew, host_skew=host_skew,
-                       watermark=watermark, gc_track=gc_track,
-                       gc_block=gc_block)
+    return _run_wave_jit(store, wave, wave_idx, clock, n_nodes, sched=sched,
+                         skew=skew, host_skew=host_skew, watermark=watermark,
+                         gc_track=gc_track, gc_block=gc_block,
+                         kernels=resolve(kernels))
 
 
 class RunStats(NamedTuple):
@@ -351,7 +370,8 @@ class RunStats(NamedTuple):
 def step_wave(store: MVStore, wave: Wave, wave_idx: int, clock,
               *, sched: str = "postsi", n_nodes: int = 8, skew: int = 0,
               host_skew: np.ndarray | None = None, watermark=None,
-              gc_track: bool = True, gc_block: bool = False):
+              gc_track: bool = True, gc_block: bool = False,
+              kernels: KernelConfig | str | None = None):
     """Closed-loop step API (DESIGN.md §8): execute ONE wave and sync the
     per-txn outcomes to host so a caller can requeue aborted transactions.
 
@@ -369,13 +389,15 @@ def step_wave(store: MVStore, wave: Wave, wave_idx: int, clock,
     store, out, clock = run_wave(store, wave, jnp.int32(wave_idx), clock,
                                  jnp.int32(n_nodes), sched=sched, skew=skew,
                                  host_skew=hs, watermark=wm,
-                                 gc_track=gc_track, gc_block=gc_block)
+                                 gc_track=gc_track, gc_block=gc_block,
+                                 kernels=kernels)
     return store, jax.tree_util.tree_map(np.asarray, out), clock
 
 
 def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
                  host_skew: np.ndarray | None = None, n_nodes: int = 8,
-                 gc_track: bool = False, gc_block: bool = False):
+                 gc_track: bool = False, gc_block: bool = False,
+                 kernels: KernelConfig | str | None = None):
     """Per-wave debug driver: one jitted dispatch + host sync per wave.
 
     Returns (store, history, stats); history is a list of numpy-ified
@@ -390,7 +412,8 @@ def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
         store, out, clock = run_wave(store, wave, jnp.int32(w_idx + 1), clock,
                                      jnp.int32(n_nodes), sched=sched,
                                      skew=skew, host_skew=hs,
-                                     gc_track=gc_track, gc_block=gc_block)
+                                     gc_track=gc_track, gc_block=gc_block,
+                                     kernels=kernels)
         history.append((np.asarray(wave.tid),
                         jax.tree_util.tree_map(np.asarray, out)))
     return store, history, _stats_of(history)
@@ -421,13 +444,16 @@ def stack_waves(waves) -> Wave:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("sched", "skew", "gc_track", "gc_block"))
+                   static_argnames=("sched", "skew", "gc_track", "gc_block",
+                                    "kernels"))
 def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
                 n_nodes: jax.Array, sched: str = "postsi", skew: int = 0,
                 host_skew: jax.Array | None = None, gc_track: bool = False,
-                gc_block: bool = False):
+                gc_block: bool = False,
+                kernels: KernelConfig | str | None = None):
     """One device program for a whole workload: lax.scan over the wave axis
     carrying (store, clock); each step is the run_wave computation inlined.
+    ``run_workload_fused`` resolves ``kernels`` before this jit boundary.
     Returns (store', WaveOut with leading [W] axis, clock')."""
     W = stacked.op_kind.shape[0]
 
@@ -436,7 +462,8 @@ def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
         wave, w_idx = xs
         st, out, clk = run_wave(st, wave, w_idx, clk, n_nodes, sched=sched,
                                 skew=skew, host_skew=host_skew,
-                                gc_track=gc_track, gc_block=gc_block)
+                                gc_track=gc_track, gc_block=gc_block,
+                                kernels=kernels)
         return (st, clk), out
 
     (store, clock), outs = lax.scan(
@@ -447,7 +474,8 @@ def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
 def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
                        skew: int = 0, host_skew: np.ndarray | None = None,
                        n_nodes: int = 8, gc_track: bool = False,
-                       gc_block: bool = False):
+                       gc_block: bool = False,
+                       kernels: KernelConfig | str | None = None):
     """Fused driver: the entire workload as a single jitted dispatch.
 
     Same signature and same (store, history, stats) contract as
@@ -459,12 +487,15 @@ def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
     store, outs, _ = _scan_waves(store, stacked, jnp.int32(1),
                                  jnp.int32(n_nodes), sched=sched, skew=skew,
                                  host_skew=hs, gc_track=gc_track,
-                                 gc_block=gc_block)
+                                 gc_block=gc_block, kernels=resolve(kernels))
     outs = jax.tree_util.tree_map(np.asarray, outs)
     history = [(np.asarray(w.tid), WaveOut(*(f[i] for f in outs)))
                for i, w in enumerate(waves)]
     return store, history, _stats_of(history)
 
 
-register_cache_clear(run_wave)
+# stale-trace hygiene: a process-default backend switch drops traces baked
+# with the old default (correctness needs no clearing — the resolved config
+# is part of the static key, so the new default is a fresh entry)
+register_cache_clear(_run_wave_jit)
 register_cache_clear(_scan_waves)

@@ -97,8 +97,13 @@ def evicting_visible(store: MVStore, keys: jax.Array,
 
     Returns a bool mask shaped like ``keys`` (False for empty slots — a ring
     that has not wrapped yet never evicts anything).
+
+    ``keys`` may contain masked/NOP padding, including negative sentinels;
+    they are clamped into range (``jnp.minimum`` alone would let a negative
+    key wrap to the LAST key via negative indexing and report that key's
+    eviction state for a padding row).
     """
-    k = jnp.minimum(keys, store.n_keys - 1)
+    k = jnp.clip(keys, 0, store.n_keys - 1)
     h_new = (store.head[k] + 1) % store.n_versions
     evicted_live = store.tid[k, h_new] != NO_TID
     superseder_cid = store.cid[k, (h_new + 1) % store.n_versions]

@@ -8,8 +8,7 @@ GC watermark consult — goes through the small interface below, so the same
 commit loop runs on any placement:
 
 * ``LocalSubstrate`` — the store is one dense array per field; every access
-  is direct indexing / masked scatter (``store.py`` ops).  This is the
-  single-device engine.
+  is direct indexing / masked scatter.  This is the single-device engine.
 * ``MeshSubstrate`` — the store is block-partitioned over a 1-D mesh axis
   (``node = key // keys_per_node``) and the substrate runs *inside* a
   ``shard_map`` body: reads are answered by the owning node from its local
@@ -18,37 +17,85 @@ commit loop runs on any placement:
   SID bumps are masked local scatters applied only on the owner.  No
   coordinator exists anywhere: every collective is a peer merge.
 
-Both substrates are stateless and cheap to construct; the mesh one derives
-its block base from ``lax.axis_index`` at trace time, so one traced program
-serves every node (SPMD).  ``tests/test_distribution.py`` pins the two
-substrates bit-identical for all six schedulers, per-wave and fused.
+Both substrates carry a resolved :class:`repro.kernels.KernelConfig` and
+dispatch every compute hot spot through the kernel plane (``kernels.ops``):
+the read-phase latest-visible-slot selection via ``ops.version_scan`` (the
+paper's §IV-B CID rule — lane padding handled by the op wrapper), the
+anti-dependency candidate build via ``commit_phase.build_potential``, and
+the batched install / SID-bump scatters via ``ops.masked_install`` /
+``ops.masked_sid_bump``.  ``kernels=None`` resolves the process default
+once at construction; substrates stay stateless and cheap to construct —
+the engines build one per trace with the config baked in.
+
+The mesh one derives its block base from ``lax.axis_index`` at trace time,
+so one traced program serves every node (SPMD).
+``tests/test_distribution.py`` pins the two substrates bit-identical for
+all six schedulers, per-wave and fused; ``tests/test_kernel_backend.py``
+pins every backend route bit-identical on both.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import lax
 
-from .commit_phase import build_potential, potential_matrix_jnp
+from repro.kernels import KernelConfig, ops, resolve
+from .commit_phase import build_potential
 from .store import INF, MVStore
 from . import store as store_ops
+
+
+def mesh_kernels(kernels: KernelConfig | str | None = None) -> KernelConfig:
+    """The config a ``MeshSubstrate`` will actually run: compiled-Mosaic
+    kernels are not assumed to lower inside shard_map bodies, so ``pallas``
+    degrades to the bit-identical ``jnp`` reference on the mesh while
+    ``pallas_interpret``/``jnp`` pass through.  The mesh drivers normalize
+    through this BEFORE using the config as a jit/lru cache key, so
+    ``pallas`` and ``jnp`` requests share one trace instead of compiling
+    identical programs twice."""
+    cfg = resolve(kernels)
+    return KernelConfig("jnp") if cfg.backend == "pallas" else cfg
 
 
 class LocalSubstrate:
     """Direct-indexing data plane: the whole key space lives in one store."""
 
+    def __init__(self, kernels: KernelConfig | str | None = None):
+        self.kernels = resolve(kernels)
+
     def read_visible(self, store: MVStore, keys, max_cid):
         """Latest version with CID <= max_cid per key (paper §IV-B read rule).
-        Returns (val, tid, cid, sid, slot), shaped like ``keys``."""
-        return store_ops.read_visible(store, keys, max_cid)
+        Returns (val, tid, cid, sid, slot), shaped like ``keys``.
+
+        The ring gather stays here (data movement); slot *selection* — the
+        per-request scan the paper's read rule pays on every access — is
+        dispatched through ``ops.version_scan`` on the configured backend.
+        Masked/NOP keys (possibly negative padding) are clamped so they can
+        never wrap to the last key.
+        """
+        k = jnp.clip(keys, 0, store.n_keys - 1)
+        cids = store.cid[k]                          # [..., V]
+        tids = store.tid[k]
+        V = store.n_versions
+        mc = jnp.broadcast_to(max_cid, k.shape)
+        slot, _ = ops.version_scan(
+            cids.reshape(-1, V), tids.reshape(-1, V), mc.reshape(-1),
+            use_pallas=self.kernels.use_pallas,
+            interpret=self.kernels.interpret)
+        slot = slot.reshape(k.shape)
+        take = lambda a: jnp.take_along_axis(a[k], slot[..., None],
+                                             axis=-1)[..., 0]
+        return take(store.val), take(store.tid), take(store.cid), \
+            take(store.sid), slot
 
     def read_newest(self, store: MVStore, keys):
         """Newest committed version (PostSI reads start with s_hi = +inf)."""
-        return store_ops.read_newest(store, keys)
+        return self.read_visible(store, keys,
+                                 jnp.broadcast_to(INF, keys.shape))
 
     def read_sid(self, store: MVStore, keys, slots):
         """Re-gather SIDs of previously read (key, slot) pairs — peers may
         have bumped them since the read phase (rule 4(a) input)."""
-        return store.sid[keys, slots]
+        return ops.sid_regather(store.sid, keys, slots)
 
     def key_staleness(self, store: MVStore, keys):
         """Per-key (last-commit wave tag, head CID) — the clocksi stale-read
@@ -65,34 +112,27 @@ class LocalSubstrate:
 
     def install(self, store: MVStore, mask, keys, values, tid, cid, wave_idx):
         """Masked version install: push a new ring version for every key with
-        ``mask`` set (rule 4(c) CID stamping).  OOB sentinel drops the rest."""
-        k_install = jnp.where(mask, keys, store.n_keys)
-        h_new = (store.head[jnp.minimum(keys, store.n_keys - 1)] + 1
-                 ) % store.n_versions
-        return store._replace(
-            val=store.val.at[k_install, h_new].set(values, mode="drop"),
-            tid=store.tid.at[k_install, h_new].set(tid, mode="drop"),
-            cid=store.cid.at[k_install, h_new].set(cid, mode="drop"),
-            sid=store.sid.at[k_install, h_new].set(0, mode="drop"),
-            head=store.head.at[k_install].set(h_new, mode="drop"),
-            wave=store.wave.at[k_install].set(wave_idx, mode="drop"),
-        )
+        ``mask`` set (rule 4(c) CID stamping).  OOB sentinel drops the rest
+        (``ops.masked_install``)."""
+        val, tid_, cid_, sid, head, wave = ops.masked_install(
+            store.val, store.tid, store.cid, store.sid, store.head,
+            store.wave, mask=mask, keys=keys, values=values, new_tid=tid,
+            new_cid=cid, wave_idx=wave_idx)
+        return store._replace(val=val, tid=tid_, cid=cid_, sid=sid,
+                              head=head, wave=wave)
 
     def bump_sid(self, store: MVStore, mask, keys, slots, expect_tid, s_val):
         """Rule 4(c) SID bump: raise SID of read versions to the reader's
-        start time, guarded against ring slots recycled since the read."""
-        ok = mask & (store.tid[keys, slots] == expect_tid)
-        k_sid = jnp.where(ok, keys, store.n_keys)
-        return store._replace(
-            sid=store.sid.at[k_sid, slots].max(s_val, mode="drop"))
+        start time, guarded against ring slots recycled since the read
+        (``ops.masked_sid_bump``)."""
+        return store._replace(sid=ops.masked_sid_bump(
+            store.sid, store.tid, mask=mask, keys=keys, slots=slots,
+            expect_tid=expect_tid, s_val=s_val))
 
     def build_potential(self, keys, is_read, is_write):
         """Anti-dependency candidate matrix [T, T] — routed through the
         configured backend (Pallas kernel / interpret / jnp)."""
-        return build_potential(keys, is_read, is_write)
-
-
-_LOCAL = LocalSubstrate()
+        return build_potential(keys, is_read, is_write, backend=self.kernels)
 
 
 class MeshSubstrate:
@@ -105,16 +145,21 @@ class MeshSubstrate:
 
     There is deliberately no second copy of the data-plane logic here:
     every method translates global keys to local block indices and then
-    *delegates* to the LocalSubstrate / ``store.py`` body on the local
-    block (the per-node ``MVStore`` is itself a complete store with
-    ``n_keys == n_local``), masking non-owned answers to zero before the
-    psum merge and masking non-owned writes off entirely.  A rule or
-    GC-formula fix in ``store.py`` therefore reaches both placements by
-    construction.
+    *delegates* to a ``LocalSubstrate`` carrying the same
+    :class:`KernelConfig` on the local block (the per-node ``MVStore`` is
+    itself a complete store with ``n_keys == n_local``), masking non-owned
+    answers to zero before the psum merge and masking non-owned writes off
+    entirely.  A rule or kernel-route fix in the local plane therefore
+    reaches both placements by construction — including the
+    ``ops.version_scan`` dispatch, which runs on each node's local block
+    before the merge.
     """
 
-    def __init__(self, axis: str = "node"):
+    def __init__(self, axis: str = "node",
+                 kernels: KernelConfig | str | None = None):
         self.axis = axis
+        self.kernels = mesh_kernels(kernels)
+        self._local_sub = LocalSubstrate(self.kernels)
 
     # ------------------------------------------------------------ helpers
     def _local(self, store: MVStore, keys):
@@ -133,7 +178,8 @@ class MeshSubstrate:
     # -------------------------------------------------------------- reads
     def read_visible(self, store: MVStore, keys, max_cid):
         lk, mine, _ = self._local(store, keys)
-        return self._merge(mine, *_LOCAL.read_visible(store, lk, max_cid))
+        return self._merge(mine,
+                           *self._local_sub.read_visible(store, lk, max_cid))
 
     def read_newest(self, store: MVStore, keys):
         return self.read_visible(store, keys,
@@ -141,31 +187,32 @@ class MeshSubstrate:
 
     def read_sid(self, store: MVStore, keys, slots):
         lk, mine, _ = self._local(store, keys)
-        (sid,) = self._merge(mine, _LOCAL.read_sid(store, lk, slots))
+        (sid,) = self._merge(mine, self._local_sub.read_sid(store, lk, slots))
         return sid
 
     def key_staleness(self, store: MVStore, keys):
         lk, mine, _ = self._local(store, keys)
-        return self._merge(mine, *_LOCAL.key_staleness(store, lk))
+        return self._merge(mine, *self._local_sub.key_staleness(store, lk))
 
     def evicting_visible(self, store: MVStore, keys, watermark):
         lk, mine, _ = self._local(store, keys)
-        ev = _LOCAL.evicting_visible(store, lk, watermark).astype(jnp.int32)
+        ev = self._local_sub.evicting_visible(store, lk,
+                                              watermark).astype(jnp.int32)
         (ev,) = self._merge(mine, ev)
         return ev.astype(bool)
 
     # ------------------------------------------------------------- writes
     def install(self, store: MVStore, mask, keys, values, tid, cid, wave_idx):
         lk, mine, _ = self._local(store, keys)
-        return _LOCAL.install(store, mask & mine, lk, values, tid, cid,
-                              wave_idx)
+        return self._local_sub.install(store, mask & mine, lk, values, tid,
+                                       cid, wave_idx)
 
     def bump_sid(self, store: MVStore, mask, keys, slots, expect_tid, s_val):
         lk, mine, _ = self._local(store, keys)
-        return _LOCAL.bump_sid(store, mask & mine, lk, slots, expect_tid,
-                               s_val)
+        return self._local_sub.bump_sid(store, mask & mine, lk, slots,
+                                        expect_tid, s_val)
 
     def build_potential(self, keys, is_read, is_write):
-        # replicated dense build: the Pallas kernel is not used inside
-        # shard_map — every node computes the same [T, T] matrix
-        return potential_matrix_jnp(keys, keys, is_read, is_write)
+        # replicated build: every node computes the same [T, T] matrix,
+        # routed through the (mesh-degraded) config
+        return build_potential(keys, is_read, is_write, backend=self.kernels)

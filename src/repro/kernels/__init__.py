@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel plane: Pallas TPU kernels, their jnp oracles, and the unified
+backend registry that routes every data-plane hot spot (version scan,
+anti-dependency build) through one resolved :class:`KernelConfig`.
+"""
+from .backend import (BACKENDS, KernelConfig, default_backend,
+                      register_cache_clear, resolve, set_default_backend)
+
+__all__ = [
+    "BACKENDS", "KernelConfig", "default_backend", "register_cache_clear",
+    "resolve", "set_default_backend",
+]

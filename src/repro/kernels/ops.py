@@ -97,6 +97,52 @@ def version_scan(cids, tids, max_cid, *, use_pallas=False, interpret=False,
 
 
 # ---------------------------------------------------------------------------
+# batched commit-phase data movement (jnp scatter/gather: no Pallas variant —
+# XLA already emits single fused scatters; they live here so the substrate's
+# whole data plane is kernel-plane ops and the engine body stays pure rule
+# arithmetic over op outputs)
+# ---------------------------------------------------------------------------
+
+def sid_regather(sid, keys, slots):
+    """Rule-4(a) input: re-gather the SIDs of previously read (key, slot)
+    pairs — peers may have bumped them since the read phase.
+    sid: [n_keys, V]; keys/slots: [...] -> [...]."""
+    return sid[keys, slots]
+
+
+def masked_install(val, tid, cid, sid, head, wave, *, mask, keys, values,
+                   new_tid, new_cid, wave_idx):
+    """Masked version install over a key batch (rule 4(c) CID stamping).
+
+    Pushes a new ring version for every key with ``mask`` set: the slot after
+    ``head`` is overwritten, SID resets to 0, ``head``/``wave`` advance.
+    Masked-off rows are routed to an OOB sentinel and dropped by the scatter;
+    masked/NOP keys (which may be negative padding) are clamped before the
+    ``head`` gather so they can never wrap to a real key.  Returns the six
+    updated ring arrays.
+    """
+    n_keys, n_versions = val.shape
+    k_install = jnp.where(mask, keys, n_keys)
+    h_new = (head[jnp.clip(keys, 0, n_keys - 1)] + 1) % n_versions
+    return (val.at[k_install, h_new].set(values, mode="drop"),
+            tid.at[k_install, h_new].set(new_tid, mode="drop"),
+            cid.at[k_install, h_new].set(new_cid, mode="drop"),
+            sid.at[k_install, h_new].set(0, mode="drop"),
+            head.at[k_install].set(h_new, mode="drop"),
+            wave.at[k_install].set(wave_idx, mode="drop"))
+
+
+def masked_sid_bump(sid, tid, *, mask, keys, slots, expect_tid, s_val):
+    """Rule-4(c) SID bump over a key batch: raise the SID of read versions to
+    the reader's start time, guarded against ring slots recycled since the
+    read (creator TID must still match).  Returns the updated sid array."""
+    n_keys = sid.shape[0]
+    ok = mask & (tid[keys, slots] == expect_tid)
+    k_sid = jnp.where(ok, keys, n_keys)
+    return sid.at[k_sid, slots].max(s_val, mode="drop")
+
+
+# ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
                                              "block_t"))
 def potential_matrix(read_key, write_key, *, use_pallas=False, interpret=False,

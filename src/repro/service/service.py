@@ -90,12 +90,19 @@ class TxnService:
                  n_nodes: int = 8, retry: Optional[RetryPolicy] = None,
                  gc_block: bool = False, max_queue: Optional[int] = None,
                  host_skew: Optional[np.ndarray] = None, seed: int = 0,
-                 mesh=None):
+                 mesh=None, kernels=None):
+        from repro.core.substrate import mesh_kernels
+        from repro.kernels import resolve
         self.sched = sched
         self.n_nodes = n_nodes
         self.host_skew = host_skew
         self.T, self.O = T, O
         self.mesh = mesh
+        # kernel-backend plane knob (DESIGN.md §7): resolved once, threaded
+        # into every engine step; on the mesh placement it is normalized
+        # through the shard_map degrade so it reports what actually runs
+        self.kernels = resolve(kernels) if mesh is None else \
+            mesh_kernels(kernels)
         if mesh is None:
             self.store = make_store(n_keys, n_versions)
         else:
@@ -174,7 +181,8 @@ class TxnService:
             return step_wave(
                 self.store, wave, self.wave_idx, self.clock, sched=self.sched,
                 n_nodes=self.n_nodes, host_skew=self.host_skew,
-                watermark=self.gc.watermark(), gc_block=self.gc.block)
+                watermark=self.gc.watermark(), gc_block=self.gc.block,
+                kernels=self.kernels)
         from repro.core.dist_engine import mesh_watermark, step_wave_dist
         # decentralized GC watermark: per-node live-reader floors merged by
         # a pmin collective on the mesh, never a host-side reduction; with
@@ -186,7 +194,7 @@ class TxnService:
         return step_wave_dist(
             self.store, wave, self.wave_idx, self.clock, self.mesh,
             sched=self.sched, n_nodes=self.n_nodes, host_skew=self.host_skew,
-            watermark=wm, gc_block=self.gc.block)
+            watermark=wm, gc_block=self.gc.block, kernels=self.kernels)
 
     def drain(self, max_ticks: Optional[int] = None) -> int:
         """Run ticks until no request is pending (or the safety cap).

@@ -249,6 +249,50 @@ print("DIST-HYPOTHESIS-OK")
 """))
 
 
+def test_dist_engine_kernel_backends_bit_identical():
+    """The kernel-backend plane on the mesh: all six schedulers produce
+    bit-identical WaveOut under ``jnp`` vs ``pallas_interpret`` on the
+    MeshSubstrate, per-wave AND fused — and both match the LocalSubstrate
+    under either backend (acceptance gate of the backend refactor; the
+    version_scan kernel runs on each node's local block inside shard_map)."""
+    print(_run(r"""
+import numpy as np
+from repro.core import SCHEDULERS, make_store, run_workload
+from repro.core.dist_engine import (make_node_mesh, run_workload_dist,
+                                    run_workload_fused_dist, shard_store)
+from repro.core.workloads import smallbank_waves
+
+n_nodes, kpn, W, T = 4, 16, 2, 12
+mesh = make_node_mesh(n_nodes)
+BACKENDS = ("jnp", "pallas_interpret")
+
+for sched in SCHEDULERS:
+    waves = smallbank_waves(np.random.RandomState(13), W, T, n_nodes, kpn,
+                            dist_frac=0.5, hot_frac=0.5, hot_per_node=4)
+    hs = (np.array([0,1,1,2], np.int32) if sched == "clocksi" else None)
+    ref = run_workload(make_store(n_nodes*kpn, 8), waves, sched=sched,
+                       n_nodes=n_nodes, host_skew=hs, gc_track=True,
+                       kernels="jnp")
+    for bk in BACKENDS:
+        for drv, runner in (("perwave", run_workload_dist),
+                            ("fused", run_workload_fused_dist)):
+            st, h, s = runner(shard_store(make_store(n_nodes*kpn, 8), mesh),
+                              waves, mesh, sched=sched, n_nodes=n_nodes,
+                              host_skew=hs, gc_track=True, kernels=bk)
+            assert s == ref[2], (sched, bk, drv, s, ref[2])
+            for (t1, o1), (t2, o2) in zip(ref[1], h):
+                np.testing.assert_array_equal(t1, t2)
+                for name, f1, f2 in zip(o1._fields, o1, o2):
+                    np.testing.assert_array_equal(
+                        f1, f2, err_msg=f"{sched}.{bk}.{drv}.{name}")
+            for name, f1, f2 in zip(ref[0]._fields, ref[0], st):
+                np.testing.assert_array_equal(
+                    np.asarray(f1), np.asarray(f2),
+                    err_msg=f"{sched}.{bk}.{drv}.store.{name}")
+    print(f"DIST-BACKEND-{sched}-OK")
+"""))
+
+
 def test_mesh_service_matches_single_device():
     """The sharded closed-loop service (TxnService(mesh=...), GC watermark
     merged by lax.pmin from per-node reader floors) serves the identical
