@@ -10,26 +10,34 @@ aborts and retries actually happen.  Records, per (scheduler, load):
   * end-to-end latency percentiles p50/p95/p99 (ticks, admission -> commit)
   * the GC watermark's ``evicted_visible`` counter (0 == V is large enough)
 
-plus a GC ring-depth section: a blind-write-heavy replay swept over V shows
+plus a GC ring-depth section (a blind-write-heavy replay swept over V shows
 the still-visible-eviction counter rising as the ring shrinks, and
-``gc_block=True`` trading those corruptions for aborts (counter pinned to 0).
+``gc_block=True`` trading those corruptions for aborts) and the **streaming
+sweep**: the pipelined plane (``run_streaming``) against the per-wave step
+loop at equal offered load on the zipfian YCSB stream, over pipeline depth
+K × block size B × skew θ, with goodput speedups reported honestly (both
+sides pay host-side wave forming; what the pipeline removes is the
+per-wave dispatch + host sync, so the speedup is the dispatch-overhead
+share — largest for small waves on CPU, not a device-compute win).
 
 Writes ``BENCH_service.json`` at the repo root.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_service [--smoke]
+      PYTHONPATH=src python -m benchmarks.bench_service --streaming-only
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core import SCHEDULERS, make_store, run_workload_fused
 from repro.core.workloads import micro_waves, poisson_arrivals
-from repro.service import RetryPolicy, TxnService, smallbank_txn_gen
+from repro.service import (AdaptiveWaveSizer, RetryPolicy, TxnService,
+                           smallbank_txn_gen, ycsb_txn_gen)
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_service.json")
@@ -44,6 +52,19 @@ HOT_PER_NODE = 4
 
 SMOKE = dict(n_ticks=6, T=16, n_nodes=4, keys_per_node=40,
              load_factors=(0.9,), scheds=("postsi", "si"))
+
+# streaming sweep: pipeline shapes (B waves/block, K blocks in flight) ×
+# zipf skew; each theta is measured against the step loop on the SAME
+# arrival stream (the acceptance bar is >= 1.3x goodput at equal load).
+# Offered load is ABOVE the step loop's hard service ceiling of one wave
+# per tick (STREAM_LOAD * T arrivals/tick): the step loop sheds the excess
+# at admission while the pipeline serves up to B waves per tick — which is
+# precisely the claim under test, that per-wave dispatch, not the CC
+# rules, bounds the step loop's goodput.
+STREAM_SHAPES = ((1, 1), (2, 2), (4, 2), (8, 3))
+STREAM_THETAS = (0.0, 0.9, 1.2)
+STREAM_LOAD = 2.0
+STREAM_SMOKE = dict(shapes=((2, 2),), thetas=(0.9,), n_ticks=10)
 
 
 def _host_skew(sched: str, n_nodes: int):
@@ -97,6 +118,103 @@ def _gc_ring_sweep(n_ticks: int, T: int, n_nodes: int,
     return {"ring_sweep": sweep, "gc_block": blocked}
 
 
+def _stream_one(theta: float, shape: Optional[Tuple[int, int]], n_ticks: int,
+                T: int, n_nodes: int, keys_per_node: int, sched: str,
+                sizer=None, seed: int = 0, read_frac: float = 0.5) -> Dict:
+    """One served session on the zipfian YCSB stream: ``shape=None`` is the
+    per-wave step loop baseline, ``shape=(B, K)`` the streaming plane.
+    Arrival and request RNGs depend only on (theta, seed): every shape at a
+    given skew serves the identical offered stream."""
+    svc = TxnService(n_keys=n_nodes * keys_per_node, n_versions=8, T=T,
+                     sched=sched, n_nodes=n_nodes,
+                     retry=RetryPolicy(max_attempts=8), seed=seed)
+    arr = poisson_arrivals(np.random.RandomState(300 + seed),
+                           STREAM_LOAD * T, n_ticks)
+    gen = ycsb_txn_gen(np.random.RandomState(400 + seed), n_nodes,
+                       keys_per_node, theta=theta, read_frac=read_frac,
+                       dist_frac=0.2)
+    if shape is None:
+        report = svc.run_stream(arr, gen)
+    else:
+        report = svc.run_streaming(arr, gen, B=shape[0], K=shape[1],
+                                   sizer=sizer)
+    row = report.as_dict()
+    row["theta"] = theta
+    row["mode"] = "step" if shape is None else f"B{shape[0]}K{shape[1]}"
+    row["verify_errors"] = len(svc.verify())
+    return row
+
+
+def _warm_block_shapes(n_keys: int, sized_shapes, sched: str = "postsi"):
+    """Compile every [b, T', O] block program the sweep sessions can
+    dispatch — ``sized_shapes`` maps wave size T' to its largest block
+    size, and each gets its power-of-two chunk ladder — so the timed runs
+    never absorb jit compilation (and nothing compiles shapes no session
+    dispatches)."""
+    import jax.numpy as jnp
+    from repro.core import Wave, make_store, run_block
+    store = make_store(n_keys, 8)
+    for T_, b_max in sorted(sized_shapes.items()):
+        b = 1
+        while b <= b_max:
+            wv = Wave(op_kind=jnp.zeros((b, T_, 4), jnp.int32),
+                      op_key=jnp.zeros((b, T_, 4), jnp.int32),
+                      op_val=jnp.zeros((b, T_, 4), jnp.int32),
+                      host=jnp.zeros((b, T_), jnp.int32),
+                      tid=jnp.broadcast_to(
+                          1 + jnp.arange(T_, dtype=jnp.int32), (b, T_)))
+            run_block(store, wv, 1, jnp.int32(1), sched=sched, n_nodes=8)
+            b *= 2
+
+
+def _stream_sweep(n_ticks: int, T: int, n_nodes: int, keys_per_node: int,
+                  shapes=STREAM_SHAPES, thetas=STREAM_THETAS,
+                  sched: str = "postsi", adaptive: bool = True) -> Dict:
+    """Streaming-vs-step at equal offered load, over B × K × θ, plus (with
+    ``adaptive=True``) one contention-adaptive session at the heaviest
+    skew — skipping it also skips the warm compile of its T ladder."""
+    ladder = [max(T * i // 4, 4) for i in (1, 2, 3, 4)]  # adaptive T rungs
+    # grid sessions dispatch only wave size T (up to the largest B); the
+    # adaptive session dispatches the ladder rungs at B=4 chunks
+    sized = {T: max(B for B, _ in shapes)}
+    if adaptive:
+        sized[T] = max(sized[T], 4)
+        for rung in ladder:
+            sized[rung] = max(sized.get(rung, 1), 4)
+    _warm_block_shapes(n_nodes * keys_per_node, sized, sched)
+    _stream_one(0.9, None, 2, T, n_nodes, keys_per_node, sched)  # step warm
+    rows = []
+    for theta in thetas:
+        base = _stream_one(theta, None, n_ticks, T, n_nodes, keys_per_node,
+                           sched)
+        base["speedup_vs_step"] = 1.0
+        rows.append(base)
+        for shape in shapes:
+            r = _stream_one(theta, shape, n_ticks, T, n_nodes,
+                            keys_per_node, sched)
+            r["speedup_vs_step"] = round(
+                r["goodput_tps"] / max(base["goodput_tps"], 1e-9), 3)
+            rows.append(r)
+    if not adaptive:
+        return {"sched": sched, "load": STREAM_LOAD, "read_frac": 0.5,
+                "sweep": rows, "adaptive": None}
+    # §V-D contention regulation: bounded-AIMD wave sizing on the most
+    # skewed, write-heavy stream (its own row, not part of the B×K grid).
+    # The T ladder is the pre-warmed quarter-rung one; B stays fixed so the
+    # compiled-shape set is exactly ladder × pow2-chunks.
+    sizer = AdaptiveWaveSizer(T0=T, B0=4, t_min=ladder[0],
+                              quantum=ladder[0], window=2 * T)
+    a_row = _stream_one(max(thetas), (4, 2), n_ticks, T, n_nodes,
+                        keys_per_node, sched, sizer=sizer, seed=1,
+                        read_frac=0.1)   # write-heavy on purpose; the B×K
+                                         # grid runs at the section's 0.5
+    a_row.update(mode="adaptive-B4K2", read_frac=0.1,
+                 wave_T_final=sizer.T, wave_B_final=sizer.B,
+                 md_events=sizer.decreases, ai_events=sizer.increases)
+    return {"sched": sched, "load": STREAM_LOAD, "read_frac": 0.5,
+            "sweep": rows, "adaptive": a_row}
+
+
 def run(smoke: bool = False) -> Dict:
     if smoke:
         n_ticks, T = SMOKE["n_ticks"], SMOKE["T"]
@@ -114,6 +232,9 @@ def run(smoke: bool = False) -> Dict:
             [T], smallbank_txn_gen(np.random.RandomState(0), n_nodes, kpn))
         sweep[sched] = [_run_one(sched, load, n_ticks, T, n_nodes, kpn)
                         for load in loads]
+    s_kw = STREAM_SMOKE if smoke else dict(shapes=STREAM_SHAPES,
+                                           thetas=STREAM_THETAS,
+                                           n_ticks=n_ticks)
     return {
         "config": {
             "workload": "smallbank-poisson", "n_ticks": n_ticks,
@@ -123,6 +244,9 @@ def run(smoke: bool = False) -> Dict:
         },
         "sweep": sweep,
         "gc": _gc_ring_sweep(max(n_ticks // 4, 4), T, n_nodes, kpn),
+        "streaming": _stream_sweep(s_kw["n_ticks"], T, n_nodes, kpn,
+                                   shapes=s_kw["shapes"],
+                                   thetas=s_kw["thetas"]),
     }
 
 
@@ -132,7 +256,39 @@ def write_report(report: Dict) -> None:
         f.write("\n")
 
 
-def main(write_json: bool = True, smoke: bool = False) -> Dict:
+def _print_streaming(streaming: Dict) -> None:
+    for r in streaming["sweep"]:
+        print(f"bench_service/streaming/{r['mode']}/theta{r['theta']}: "
+              f"goodput {r['goodput_tps']:.0f}/s "
+              f"({r['speedup_vs_step']:.2f}x vs step) "
+              f"retry {r['retry_rate']:.2f} waves {r['waves']} "
+              f"blocks {r['blocks']} p99 {r['latency_p99']:.0f} ticks "
+              f"verify_errors {r['verify_errors']}")
+    a = streaming["adaptive"]
+    if a is not None:
+        print(f"bench_service/streaming/{a['mode']}/theta{a['theta']}: "
+              f"goodput {a['goodput_tps']:.0f}/s retry {a['retry_rate']:.2f} "
+              f"T {a['wave_T_final']} B {a['wave_B_final']} "
+              f"md/ai {a['md_events']}/{a['ai_events']} "
+              f"verify_errors {a['verify_errors']}")
+
+
+def main(write_json: bool = True, smoke: bool = False,
+         streaming_only: bool = False) -> Dict:
+    if streaming_only:
+        # CI streaming smoke (both kernel backends): the pipelined plane at
+        # B=2, theta=0.9 against its step baseline — no adaptive session,
+        # no T-ladder warm compile, no JSON write (the full run owns those)
+        s_kw = STREAM_SMOKE
+        streaming = _stream_sweep(
+            s_kw["n_ticks"], SMOKE["T"], SMOKE["n_nodes"],
+            SMOKE["keys_per_node"], shapes=s_kw["shapes"],
+            thetas=s_kw["thetas"], adaptive=False)
+        _print_streaming(streaming)
+        bad = [r for r in streaming["sweep"] if r["verify_errors"]]
+        if bad:
+            raise SystemExit(f"streaming smoke: verify errors in {bad}")
+        return {"streaming": streaming}
     report = run(smoke=smoke)
     if write_json:
         write_report(report)
@@ -154,8 +310,10 @@ def main(write_json: bool = True, smoke: bool = False) -> Dict:
     b = report["gc"]["gc_block"]
     print(f"bench_service/gc/V{b['n_versions']}+block: "
           f"evicted_visible={b['evicted_visible']} aborted={b['aborted']}")
+    _print_streaming(report["streaming"])
     return report
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv[1:])
+    main(smoke="--smoke" in sys.argv[1:],
+         streaming_only="--streaming-only" in sys.argv[1:])

@@ -101,6 +101,16 @@ def _service() -> None:
     for row in report["gc"]["ring_sweep"]:
         _csv(f"service/gc/V{row['n_versions']}", 0.0,
              f"evicted_visible={row['evicted_visible']}")
+    for r in report["streaming"]["sweep"]:
+        _csv(f"service/streaming/{r['mode']}/theta{r['theta']}",
+             r["wall_s"] * 1e6 / max(r["executions"], 1),
+             f"goodput={r['goodput_tps']:.0f}tps "
+             f"speedup={r['speedup_vs_step']:.2f}x retry={r['retry_rate']:.2f}")
+    a = report["streaming"]["adaptive"]
+    _csv(f"service/streaming/{a['mode']}/theta{a['theta']}",
+         a["wall_s"] * 1e6 / max(a["executions"], 1),
+         f"goodput={a['goodput_tps']:.0f}tps T={a['wave_T_final']} "
+         f"md={a['md_events']} ai={a['ai_events']}")
 
 
 def _dist() -> None:

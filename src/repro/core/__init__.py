@@ -7,9 +7,9 @@ from repro.kernels import (KernelConfig, default_backend, resolve,
                            set_default_backend)
 from .commit_phase import potential_backend, set_potential_backend
 from .engine import (NOP, READ, RMW, WRITE, RUNNING, COMMITTED, ABORTED,
-                     SCHEDULERS, Wave, WaveOut, RunStats, run_wave,
-                     run_wave_on, run_workload, run_workload_fused,
-                     stack_waves, step_wave)
+                     SCHEDULERS, Wave, WaveOut, RunStats, run_block,
+                     run_wave, run_wave_on, run_workload,
+                     run_workload_fused, stack_waves, step_block, step_wave)
 from .store import (MVStore, evicting_visible, make_store, read_newest,
                     read_visible, node_of_key)
 from .substrate import LocalSubstrate, MeshSubstrate
@@ -18,8 +18,9 @@ from . import workloads
 
 __all__ = [
     "NOP", "READ", "RMW", "WRITE", "RUNNING", "COMMITTED", "ABORTED",
-    "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_wave", "run_wave_on",
-    "run_workload", "run_workload_fused", "stack_waves", "step_wave",
+    "SCHEDULERS", "Wave", "WaveOut", "RunStats", "run_block", "run_wave",
+    "run_wave_on", "run_workload", "run_workload_fused", "stack_waves",
+    "step_block", "step_wave",
     "KernelConfig", "default_backend", "resolve", "set_default_backend",
     "potential_backend", "set_potential_backend", "MVStore",
     "evicting_visible", "make_store", "read_newest", "read_visible",

@@ -162,6 +162,49 @@ def _scan_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
     return jax.jit(mapped)
 
 
+@functools.lru_cache(maxsize=None)
+def _block_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
+              gc_block: bool, kernels: KernelConfig = KernelConfig("jnp")):
+    """Fused block executor on the mesh: lax.scan over a [B]-stacked wave
+    block *inside* the shard_map body, resumable (caller-owned wave-index
+    origin + GC watermark) — the mesh twin of ``engine._scan_block`` and
+    the device program behind the streaming service's sharded data plane.
+    ``kernels`` must already be resolved and mesh-degraded."""
+    sub = MeshSubstrate("node", kernels)
+
+    def node_fn(*args):
+        st = MVStore(*args[:_N_STORE])
+        stacked = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])   # [B, ...] leaves
+        wave_idx0, clock, n_nodes, hs, wm = args[_N_STORE + _N_WAVE:]
+        B = stacked.op_kind.shape[0]
+
+        def body(carry, xs):
+            st, clk = carry
+            wave, w_idx = xs
+            # wm < 0 is the "no external pin" sentinel (None cannot cross the
+            # shard_map leaf boundary): collapse to the wave-entry clock, the
+            # same per-wave default the local scan gets from watermark=None
+            wm_i = jnp.where(wm < 0, clk, wm)
+            st, out, clk = run_wave_on(sub, st, wave, w_idx, clk, n_nodes,
+                                       sched=sched, skew=skew, host_skew=hs,
+                                       watermark=wm_i, gc_track=gc_track,
+                                       gc_block=gc_block)
+            return (st, clk), out
+
+        (st, clock), outs = lax.scan(
+            body, (st, clock),
+            (stacked, wave_idx0 + jnp.arange(B, dtype=jnp.int32)))
+        return (*st, *outs, clock)
+
+    mapped = shard_map(
+        node_fn, mesh=mesh,
+        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 5),
+        out_specs=(P("node"),) * _N_STORE + (P(),) * (_N_OUT + 1),
+        check_rep=False,
+    )
+    return jax.jit(mapped)
+
+
 def _norm_hs(host_skew) -> jax.Array:
     """None -> zeros: the engine's clocksi path clamp-gathers, so a length-1
     zero vector means 'no skew anywhere' (same as the local default)."""
@@ -231,6 +274,34 @@ def step_wave_dist(store: MVStore, wave: Wave, wave_idx: int, clock,
         skew=skew, host_skew=host_skew, watermark=watermark,
         gc_track=gc_track, gc_block=gc_block, kernels=kernels)
     return store, jax.tree_util.tree_map(np.asarray, out), clock
+
+
+def run_block_dist(store: MVStore, stacked: Wave, wave_idx0: int, clock,
+                   mesh: Mesh, *, sched: str = "postsi",
+                   n_nodes: int | None = None, skew: int = 0, host_skew=None,
+                   watermark=None, gc_track: bool = True,
+                   gc_block: bool = False, kernels=None):
+    """Dispatch a [B]-stacked wave block as one shard_map device program;
+    mesh twin of ``engine.run_block`` (same contract: device-resident
+    ``(store', outs[B], clock')``, nothing blocks on the device — the
+    streaming driver materializes outcomes when it retires the block)."""
+    n_nodes = mesh.devices.size if n_nodes is None else n_nodes
+    wm = -1 if watermark is None else watermark
+    out = _block_fn(mesh, sched, skew, gc_track, gc_block,
+                    mesh_kernels(kernels))(
+        *store, *stacked, jnp.int32(wave_idx0), jnp.int32(clock),
+        jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
+    return (MVStore(*out[:_N_STORE]),
+            WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]), out[-1])
+
+
+def step_block_dist(store: MVStore, stacked: Wave, wave_idx0: int, clock,
+                    mesh: Mesh, **kw):
+    """Synchronous mesh block step: ``run_block_dist`` + host sync of the
+    per-wave outcomes (mesh mirror of ``engine.step_block``)."""
+    store, outs, clock = run_block_dist(store, stacked, wave_idx0, clock,
+                                        mesh, **kw)
+    return store, jax.tree_util.tree_map(np.asarray, outs), clock
 
 
 def run_workload_dist(store: MVStore, waves, mesh: Mesh,

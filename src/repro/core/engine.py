@@ -494,8 +494,79 @@ def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
     return store, history, _stats_of(history)
 
 
+# ---------------------------------------------------------------------------
+# fused block dispatch for the streaming service plane (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("sched", "skew", "gc_track", "gc_block",
+                                    "kernels"))
+def _scan_block(store: MVStore, stacked: Wave, wave_idx0: jax.Array,
+                clock: jax.Array, n_nodes: jax.Array, host_skew, watermark,
+                sched: str = "postsi", skew: int = 0, gc_track: bool = False,
+                gc_block: bool = False,
+                kernels: KernelConfig = KernelConfig("jnp")):
+    """One device program for a block of B pre-formed waves: lax.scan over
+    the leading wave axis carrying (store, clock), exactly ``_scan_waves``
+    but resumable — the caller owns the wave-index origin and the GC
+    watermark, so consecutive blocks stitch into one continuous closed-loop
+    history.  ``watermark`` (or None for the engine's own wave-boundary
+    collapse) applies to every wave of the block: it is computed by the
+    service at dispatch time from the *retired* prefix of the stream, which
+    can only under-estimate the true floor — safe, never unsafe."""
+    B = stacked.op_kind.shape[0]
+    sub = LocalSubstrate(kernels)
+
+    def body(carry, xs):
+        st, clk = carry
+        wave, w_idx = xs
+        st, out, clk = run_wave_on(sub, st, wave, w_idx, clk, n_nodes,
+                                   sched=sched, skew=skew,
+                                   host_skew=host_skew, watermark=watermark,
+                                   gc_track=gc_track, gc_block=gc_block)
+        return (st, clk), out
+
+    (store, clock), outs = lax.scan(
+        body, (store, clock),
+        (stacked, wave_idx0 + jnp.arange(B, dtype=jnp.int32)))
+    return store, outs, clock
+
+
+def run_block(store: MVStore, stacked: Wave, wave_idx0: int, clock,
+              *, sched: str = "postsi", n_nodes: int = 8, skew: int = 0,
+              host_skew: np.ndarray | None = None, watermark=None,
+              gc_track: bool = True, gc_block: bool = False,
+              kernels: KernelConfig | str | None = None):
+    """Dispatch a block of B formed waves (``stacked`` has leading [B] axis,
+    from ``stack_waves``) as ONE device program and return device-resident
+    results: ``(store', outs, clock')`` where ``outs`` is a ``WaveOut``
+    whose every leaf carries the leading [B] wave axis.
+
+    Nothing here blocks on the device: under JAX async dispatch the returned
+    arrays are futures, so a pipelined caller (``service.stream``) can keep
+    forming the next block on the host — and even dispatch it, chaining on
+    the returned store/clock — while this one executes.  Materializing the
+    outcomes (``np.asarray``) is the caller's explicit synchronization
+    point; ``step_block`` below does exactly that for step-style callers."""
+    hs = None if host_skew is None else jnp.asarray(host_skew, jnp.int32)
+    wm = None if watermark is None else jnp.int32(watermark)
+    return _scan_block(store, stacked, jnp.int32(wave_idx0), clock,
+                       jnp.int32(n_nodes), hs, wm, sched=sched, skew=skew,
+                       gc_track=gc_track, gc_block=gc_block,
+                       kernels=resolve(kernels))
+
+
+def step_block(store: MVStore, stacked: Wave, wave_idx0: int, clock, **kw):
+    """Synchronous block step: ``run_block`` + host sync of the per-wave
+    outcomes (mirror of ``step_wave`` for a [B]-stacked wave block).
+    Returns ``(store', outs_np, clock')``."""
+    store, outs, clock = run_block(store, stacked, wave_idx0, clock, **kw)
+    return store, jax.tree_util.tree_map(np.asarray, outs), clock
+
+
 # stale-trace hygiene: a process-default backend switch drops traces baked
 # with the old default (correctness needs no clearing — the resolved config
 # is part of the static key, so the new default is a fresh entry)
 register_cache_clear(_run_wave_jit)
 register_cache_clear(_scan_waves)
+register_cache_clear(_scan_block)

@@ -86,13 +86,17 @@ def smallbank_txn(rng: np.random.RandomState, host: int, n_nodes: int,
         op_key[0] = draw(nodes[0])
         op_key[1] = draw(nodes[-1])
         op_val[1] = -rng.randint(1, 50)
-    # de-dup keys inside a txn (engine assumes distinct write keys)
+    # de-dup keys inside a txn (engine assumes distinct write keys); a
+    # NOP-ed slot drops its payload too, so padding is canonical
     seen = {}
     for o in range(O):
         if op_kind[o] != NOP:
             k = op_key[o]
             if k in seen:
                 op_kind[o] = NOP
+                op_key[o] = 0
+                op_val[o] = 0
+                continue
             seen[k] = True
     return op_kind, op_key, op_val
 
@@ -167,6 +171,9 @@ def tpcc_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
                     k = op_key[t, o]
                     if k in seen:
                         op_kind[t, o] = NOP
+                        op_key[t, o] = 0
+                        op_val[t, o] = 0
+                        continue
                     seen[k] = True
         waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
     return waves
@@ -208,6 +215,92 @@ def micro_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
                     op_kind[t, o] = RMW
                     op_val[t, o] = rng.randint(1, 10)
                 op_key[t, o] = k
+        waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
+    return waves
+
+
+# ---------------------------------------------------------------------------
+# YCSB-style zipfian transactions (paper §V-D skew/contention regime)
+# ---------------------------------------------------------------------------
+
+YCSB_O = 4
+
+_zipf_cdf_cache: dict = {}
+
+
+def zipf_cdf(n: int, theta: float) -> np.ndarray:
+    """CDF of the bounded zipfian over ranks ``0..n-1``:
+    ``P(rank=k) ∝ 1/(k+1)^theta`` — rank 0 is the hottest key, YCSB's key
+    popularity model.  ``theta=0`` degenerates to uniform.  Cached per
+    ``(n, theta)``: the zeta normalization is O(n) and the open-stream
+    generator draws one rank per op."""
+    key = (n, round(float(theta), 6))
+    cdf = _zipf_cdf_cache.get(key)
+    if cdf is None:
+        w = 1.0 / np.power(np.arange(1, n + 1, dtype=np.float64), theta)
+        cdf = np.cumsum(w / w.sum())
+        cdf[-1] = 1.0                      # guard fp drift at the top rank
+        _zipf_cdf_cache[key] = cdf
+    return cdf
+
+
+def zipf_rank(rng: np.random.RandomState, cdf: np.ndarray) -> int:
+    """Draw one zipfian rank by inverting the cached CDF."""
+    return int(np.searchsorted(cdf, rng.rand(), side="right"))
+
+
+def ycsb_txn(rng: np.random.RandomState, host: int, n_nodes: int,
+             keys_per_node: int, theta: float = 0.9, read_frac: float = 0.8,
+             dist_frac: float = 0.1, n_ops: int = YCSB_O):
+    """One YCSB-style transaction on ``host``: ``n_ops`` ops, each a READ
+    with probability ``read_frac`` else an RMW, over zipfian-skewed keys
+    (skew ``theta``; every node's partition shares the popularity curve, so
+    rank 0 of each node is hot).  With probability ``dist_frac`` the txn is
+    distributed and ops spread over 2-3 nodes, else all ops stay on
+    ``host`` — the open-stream analogue of ``micro_waves`` with the §V-D
+    skew knob the uniform SmallBank stream cannot reach.
+
+    Returns ``(op_kind, op_key, op_val)`` as ``[n_ops]`` int32 arrays;
+    duplicate keys inside the txn are NOP-ed out like every generator here
+    (the engine assumes distinct write keys per txn)."""
+    O = n_ops
+    op_kind = np.zeros(O, np.int32)
+    op_key = np.zeros(O, np.int32)
+    op_val = np.zeros(O, np.int32)
+    nodes = _pick_nodes(rng, host, n_nodes, rng.rand() < dist_frac)
+    cdf = zipf_cdf(keys_per_node, theta)
+    seen = set()
+    for o in range(O):
+        node = nodes[rng.randint(0, len(nodes))]
+        k = _key(zipf_rank(rng, cdf), node, n_nodes)
+        if k in seen:
+            continue                       # leave the slot as NOP padding
+        seen.add(k)
+        op_key[o] = k
+        if rng.rand() < read_frac:
+            op_kind[o] = READ
+        else:
+            op_kind[o] = RMW
+            op_val[o] = rng.randint(1, 100)
+    return op_kind, op_key, op_val
+
+
+def ycsb_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
+               keys_per_node: int, theta: float = 0.9, read_frac: float = 0.8,
+               dist_frac: float = 0.1, n_ops: int = YCSB_O,
+               tid0: int = 1) -> List[Wave]:
+    """YCSB in closed batches (the replay-driver twin of the open-stream
+    generator ``repro.service.ycsb_txn_gen``)."""
+    waves = []
+    for w in range(n_waves):
+        op_kind = np.zeros((T, n_ops), np.int32)
+        op_key = np.zeros((T, n_ops), np.int32)
+        op_val = np.zeros((T, n_ops), np.int32)
+        host = rng.randint(0, n_nodes, T)
+        for t in range(T):
+            op_kind[t], op_key[t], op_val[t] = ycsb_txn(
+                rng, host[t], n_nodes, keys_per_node, theta, read_frac,
+                dist_frac, n_ops)
         waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
     return waves
 

@@ -1,17 +1,22 @@
 """Closed-loop transaction service on the decentralized wave engine.
 
-Three cooperating parts (DESIGN.md §8): the open-stream **wave former**
+Four cooperating parts (DESIGN.md §8): the open-stream **wave former**
 (admission control + fixed-shape packing), the **abort-retry pipeline**
-(fresh TIDs, bounded exponential backoff, end-to-end latency tracking) and
+(fresh TIDs, bounded exponential backoff, end-to-end latency tracking),
 the **visibility-based GC watermark** (decentralized min over live readers'
-``s_lo``, consulted by the store's ring-slot reuse).
+``s_lo``, consulted by the store's ring-slot reuse) and the **pipelined
+streaming plane** (K-blocks-in-flight fused dispatch with bounded-AIMD
+contention-adaptive wave sizing).
 """
 from .former import TxnRequest, WaveFormer
 from .gc import VisibilityGC, seq_watermark
 from .retry import RetryPolicy
-from .service import ServiceReport, TxnService, smallbank_txn_gen
+from .service import (ServiceReport, TxnService, smallbank_txn_gen,
+                      ycsb_txn_gen)
+from .stream import AdaptiveWaveSizer, StreamingDriver
 
 __all__ = [
     "TxnRequest", "WaveFormer", "VisibilityGC", "RetryPolicy",
     "ServiceReport", "TxnService", "seq_watermark", "smallbank_txn_gen",
+    "ycsb_txn_gen", "AdaptiveWaveSizer", "StreamingDriver",
 ]

@@ -21,8 +21,8 @@ import dataclasses
 import heapq
 from collections import deque
 from typing import List, Optional, Tuple
+from dataclasses import field
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import Wave
@@ -40,6 +40,7 @@ class TxnRequest:
     arrive_tick: int = -1        # set at admission
     attempts: int = 0            # executions so far
     tid: int = -1                # TID of the latest execution
+    tids: List[int] = field(default_factory=list)  # TID of every execution
     status: str = "new"          # new|queued|inflight|committed|dropped|rejected
     commit_tick: int = -1
     s: int = -1                  # induced interval of the committed run
@@ -98,21 +99,27 @@ class WaveFormer:
         """All transactions still inside the former, due or not."""
         return len(self.ready) + len(self._retry)
 
-    def form(self, tick: int) -> Optional[Tuple[Wave, List[TxnRequest]]]:
+    def form(self, tick: int,
+             T: Optional[int] = None) -> Optional[Tuple[Wave, List[TxnRequest]]]:
         """Pack one wave for ``tick``; ``None`` when nothing is eligible.
 
         Returns ``(wave, slots)``: ``slots[i]`` is the request in wave row
         ``i`` (the NOP padding rows have no request and always commit
-        vacuously — the service skips them when reading outcomes)."""
+        vacuously — the service skips them when reading outcomes).
+
+        ``T`` overrides the wave size for this call — the contention-adaptive
+        streaming driver resizes waves on a bounded ladder (DESIGN.md §8);
+        every distinct T is a distinct jitted engine shape."""
+        T = self.T if T is None else T
         slots: List[TxnRequest] = []
-        while len(slots) < self.T and self._retry and self._retry[0][0] <= tick:
+        while len(slots) < T and self._retry and self._retry[0][0] <= tick:
             slots.append(heapq.heappop(self._retry)[2])
-        while len(slots) < self.T and self.ready:
+        while len(slots) < T and self.ready:
             slots.append(self.ready.popleft())
         if not slots:
             return None
 
-        T, O = self.T, self.O
+        O = self.O
         op_kind = np.full((T, O), NOP, np.int32)
         op_key = np.zeros((T, O), np.int32)
         op_val = np.zeros((T, O), np.int32)
@@ -125,9 +132,13 @@ class WaveFormer:
             op_val[i] = req.op_val
             host[i] = req.host
             req.tid = tid0 + i
+            req.tids.append(req.tid)
             req.attempts += 1
             req.status = "inflight"
-        wave = Wave(op_kind=jnp.asarray(op_kind), op_key=jnp.asarray(op_key),
-                    op_val=jnp.asarray(op_val), host=jnp.asarray(host),
-                    tid=jnp.asarray(tid0 + np.arange(T), jnp.int32))
+        # numpy leaves on purpose: the wave crosses to the device exactly
+        # once — at the jit boundary of the step dispatch, or in one
+        # [B,T,O] block transfer by the streaming driver's stacker; eager
+        # per-wave device_puts were the service plane's biggest host cost
+        wave = Wave(op_kind=op_kind, op_key=op_key, op_val=op_val, host=host,
+                    tid=(tid0 + np.arange(T)).astype(np.int32))
         return wave, slots

@@ -32,9 +32,9 @@ from typing import Callable, Dict, Iterable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COMMITTED, make_store, step_wave
+from repro.core import COMMITTED, make_store, run_block, step_wave
 from repro.core.verify import final_values_ok, verify_cv, verify_si
-from repro.core.workloads import SMALLBANK_O, smallbank_txn
+from repro.core.workloads import SMALLBANK_O, smallbank_txn, ycsb_txn
 
 from .former import TxnRequest, WaveFormer
 from .gc import VisibilityGC
@@ -67,6 +67,8 @@ class ServiceReport:
     latency_p99: float
     evicted_visible: int   # GC watermark violations observed
     gc: Dict[str, int]
+    # streaming plane (DESIGN.md §8): 0 under the per-wave step loop
+    blocks: int = 0        # fused block dispatches (>= waves / B)
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -118,6 +120,7 @@ class TxnService:
         self.rng = np.random.RandomState(seed)       # backoff jitter only
         self.tick = 0
         self.wave_idx = 0
+        self.blocks = 0                              # streaming plane only
         self.history: List = []                      # (tids, WaveOut) numpy
         self.requests: List[TxnRequest] = []         # every offered request
         self.committed = 0
@@ -128,6 +131,7 @@ class TxnService:
         self.latencies: List[int] = []
         self._req_ids = itertools.count(1)
         self._wall_s = 0.0
+        self.stream = None                   # StreamingDriver, when serving
 
     # ------------------------------------------------------------ intake
     def submit(self, op_kind: np.ndarray, op_key: np.ndarray,
@@ -156,6 +160,15 @@ class TxnService:
         self.store, out, self.clock = self._step_wave(wave)
         self.gc.observe(out, int(self.clock))
         self.history.append((np.asarray(wave.tid), out))
+        self._route(out, slots)
+        self._wall_s += time.perf_counter() - t0
+        return out
+
+    def _route(self, out, slots):
+        """Route one synced wave's per-txn outcomes: commits record latency,
+        aborts re-enter the retry calendar or drop.  Shared by the per-wave
+        step loop and the streaming driver's block retirement (which calls
+        it once per wave of a retired block)."""
         self.executions += len(slots)
         for i, req in enumerate(slots):
             if out.status[i] == COMMITTED:
@@ -172,8 +185,23 @@ class TxnService:
                 else:
                     self.retries += 1
                     self.former.requeue(req, self.tick + delay)
-        self._wall_s += time.perf_counter() - t0
-        return out
+
+    def _watermark(self):
+        """The GC watermark for the next dispatch.  Single-device: the
+        tracker's min over pins (or None for the engine's wave-boundary
+        collapse).  Mesh: per-node live-reader floors merged by a pmin
+        collective — never a host-side reduction; with no pins the engine's
+        own collapse applies (None).  Under pipelined streaming the
+        tracker's clock is the clock of the *retired* prefix, which can only
+        under-estimate the true floor — a lower watermark is conservative,
+        never unsafe."""
+        if self.mesh is None:
+            return self.gc.watermark()
+        if not self.gc.pinned:
+            return None
+        from repro.core.dist_engine import mesh_watermark
+        return mesh_watermark(self.mesh,
+                              self.gc.node_floors(self.mesh.devices.size))
 
     def _step_wave(self, wave):
         """Dispatch one formed wave to the configured data plane."""
@@ -181,20 +209,37 @@ class TxnService:
             return step_wave(
                 self.store, wave, self.wave_idx, self.clock, sched=self.sched,
                 n_nodes=self.n_nodes, host_skew=self.host_skew,
-                watermark=self.gc.watermark(), gc_block=self.gc.block,
+                watermark=self._watermark(), gc_block=self.gc.block,
                 kernels=self.kernels)
-        from repro.core.dist_engine import mesh_watermark, step_wave_dist
-        # decentralized GC watermark: per-node live-reader floors merged by
-        # a pmin collective on the mesh, never a host-side reduction; with
-        # no pins the engine's own wave-boundary collapse applies (None)
-        wm = None
-        if self.gc.pinned:
-            wm = mesh_watermark(self.mesh,
-                                self.gc.node_floors(self.mesh.devices.size))
+        from repro.core.dist_engine import step_wave_dist
         return step_wave_dist(
             self.store, wave, self.wave_idx, self.clock, self.mesh,
             sched=self.sched, n_nodes=self.n_nodes, host_skew=self.host_skew,
-            watermark=wm, gc_block=self.gc.block, kernels=self.kernels)
+            watermark=self._watermark(), gc_block=self.gc.block,
+            kernels=self.kernels)
+
+    def _run_block(self, stacked):
+        """Dispatch a [B]-stacked wave block to the configured data plane
+        WITHOUT syncing the host (the streaming driver's dispatch half:
+        store/clock advance as device futures, outcomes are materialized
+        only when the driver retires the block).  Returns (outs, clock)."""
+        B = stacked.op_kind.shape[0]
+        wave_idx0 = self.wave_idx + 1
+        self.wave_idx += B
+        if self.mesh is None:
+            self.store, outs, self.clock = run_block(
+                self.store, stacked, wave_idx0, self.clock, sched=self.sched,
+                n_nodes=self.n_nodes, host_skew=self.host_skew,
+                watermark=self._watermark(), gc_block=self.gc.block,
+                kernels=self.kernels)
+        else:
+            from repro.core.dist_engine import run_block_dist
+            self.store, outs, self.clock = run_block_dist(
+                self.store, stacked, wave_idx0, self.clock, self.mesh,
+                sched=self.sched, n_nodes=self.n_nodes,
+                host_skew=self.host_skew, watermark=self._watermark(),
+                gc_block=self.gc.block, kernels=self.kernels)
+        return outs, self.clock
 
     def drain(self, max_ticks: Optional[int] = None) -> int:
         """Run ticks until no request is pending (or the safety cap).
@@ -221,6 +266,39 @@ class TxnService:
             self.drain()
         return self.report()
 
+    def run_streaming(self, arrivals: Iterable[int],
+                      txn_gen: Callable[[], tuple], B: int = 4, K: int = 2,
+                      sizer=None, drain: bool = True):
+        """Serve the same open stream through the pipelined streaming plane
+        (DESIGN.md §8): waves are batched into blocks of ``B`` and executed
+        as ONE fused device program each (``engine.run_block``), with up to
+        ``K`` dispatched blocks in flight — the host forms the next block(s)
+        while the device runs, and a block's outcomes are synced (and its
+        aborts routed to retry) only when it retires.
+
+        ``B=1, K=1`` degenerates to the synchronous ``run_stream`` loop and
+        is bit-identical to it; larger B/K trade retry-routing latency for
+        dispatch amortization.  ``sizer`` — an
+        ``stream.AdaptiveWaveSizer`` (or ``"auto"``) — additionally
+        regulates the wave size T (and optionally B) from the trailing
+        abort rate, the paper's §V-D contention regulation in open-stream
+        form.  Returns the end-of-run ``ServiceReport``."""
+        from .stream import AdaptiveWaveSizer, StreamingDriver
+        if sizer == "auto":
+            sizer = AdaptiveWaveSizer(T0=self.T, B0=B,
+                                      t_min=min(8, self.T), adapt_B=True)
+        driver = StreamingDriver(self, B=B, K=K, sizer=sizer)
+        self.stream = driver                 # expose pipeline state/stats
+        for n_arr in arrivals:
+            for _ in range(int(n_arr)):
+                self.submit(*txn_gen())
+            driver.tick()
+        if drain:
+            driver.drain()
+        else:
+            driver.flush()
+        return self.report()
+
     # ------------------------------------------------------------ output
     def report(self) -> ServiceReport:
         wall = max(self._wall_s, 1e-9)
@@ -245,6 +323,7 @@ class TxnService:
             latency_p99=_pct(self.latencies, 99),
             evicted_visible=self.gc.evicted_visible,
             gc=self.gc.report(),
+            blocks=self.blocks,
         )
 
     def verify(self) -> List[str]:
@@ -266,5 +345,23 @@ def smallbank_txn_gen(rng: np.random.RandomState, n_nodes: int,
         op_kind, op_key, op_val = smallbank_txn(
             rng, host, n_nodes, keys_per_node, dist_frac, hot_frac,
             hot_per_node)
+        return op_kind, op_key, op_val, host
+    return gen
+
+
+def ycsb_txn_gen(rng: np.random.RandomState, n_nodes: int,
+                 keys_per_node: int, theta: float = 0.9,
+                 read_frac: float = 0.8, dist_frac: float = 0.1,
+                 n_ops: int = 4):
+    """Request factory for the streaming plane: YCSB-style transactions with
+    zipfian key skew ``theta`` on random host nodes (paper §V-D's
+    skew/contention regime as an open stream — ``theta=0`` is uniform,
+    ``theta>=0.9`` concentrates traffic on each node's rank-0 hot keys).
+    ``read_frac``/``dist_frac``/``n_ops`` mirror ``workloads.ycsb_txn``."""
+    def gen():
+        host = int(rng.randint(0, n_nodes))
+        op_kind, op_key, op_val = ycsb_txn(
+            rng, host, n_nodes, keys_per_node, theta, read_frac, dist_frac,
+            n_ops)
         return op_kind, op_key, op_val, host
     return gen

@@ -1,0 +1,287 @@
+"""Pipelined streaming service plane (DESIGN.md §8).
+
+``TxnService.step`` syncs the host after every single wave: form → dispatch
+→ block on the device → route outcomes.  At service wave sizes the dispatch
+plus host round-trip dominates the wave's own device time, so the step loop
+measures coordination overhead, not the concurrency-control rules — the
+exact failure mode the paper's decentralization argument is about.  This
+module amortizes it the BOHM way: batch waves into *blocks* and pipeline
+block formation against block execution.
+
+    arrivals ─> WaveFormer ─> [wave,wave,..B] ─> run_block (ONE lax.scan
+                   ^            block buffer      device program)
+                   │                                   │  ≤ K-1 blocks
+                   │                                   ▼  dispatched, unsynced
+                   └──── RetryPolicy ◄──── retire: np.asarray(outs) syncs,
+                                           routes per-wave outcomes
+
+Two levers, both bounded so the jitted engine sees a small closed set of
+shapes:
+
+* **B — block size.**  Up to B formed ``[T, O]`` waves are stacked and
+  executed as ONE device program (``engine.run_block``: ``lax.scan`` with
+  (store, clock) carry, the §7 fused executor made resumable).  One
+  dispatch + one host sync per B waves instead of per wave; a partially
+  filled buffer ships as power-of-two-sized blocks (3 waves → [2]+[1]),
+  never as NOP filler, so the engine sees at most log2(B)+1 block shapes
+  and every dispatched wave carries real work.
+* **K — pipeline depth.**  A dispatched block is not synced until K-1
+  further blocks have been dispatched: under JAX async dispatch the
+  returned arrays are futures, so the host forms (and dispatches, chaining
+  on the store/clock futures) the next blocks while the device runs.
+  "K in flight" means exactly that — K dispatched-but-unretired device
+  programs — not K independent executors; the device still runs blocks in
+  order, the overlap is host-side forming/routing against device compute.
+
+With ``B=1, K=1`` the plane degenerates to the synchronous step loop and is
+bit-identical to it (tests/test_streaming.py).  With B>1 retries route at
+block granularity (an abort in wave j of a block re-enters only after the
+whole block retires), so histories are commit-set-equal modulo retry
+timing, and every invariant — commit-or-drop, SI/CV validity, GC watermark
+safety — holds unchanged.
+
+**Contention-adaptive wave sizing** (paper §V-D): ``AdaptiveWaveSizer``
+regulates the wave size T (and optionally B) from the trailing abort rate
+with bounded AIMD — additive increase by one ``quantum`` rung when the
+stream is calm, multiplicative (halving) decrease when aborts exceed the
+high-water threshold.  All sizes live on the ladder of quantum multiples in
+``[t_min, t_max]``, so recompiles are bounded by the ladder length, not the
+stream length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import ABORTED, Wave, WaveOut
+
+
+def _stack_np(waves: List[Wave]) -> Wave:
+    """Stack numpy-leaved formed waves into one [B, T, O] block on the
+    host: a single contiguous copy per field, crossing to the device in one
+    transfer at the block dispatch's jit boundary (``engine.stack_waves``
+    is its on-device twin for already-transferred replay workloads)."""
+    return Wave(*(np.stack([getattr(w, f) for w in waves])
+                  for f in Wave._fields))
+
+
+def _ladder_snap(T: int, quantum: int, t_min: int, t_max: int) -> int:
+    """Snap T to the bounded ladder {multiples of quantum} ∩ [t_min, t_max],
+    with t_max itself always a rung — an off-quantum ceiling (e.g. T0=12 on
+    a quantum-8 ladder) must stay reachable or additive increase could
+    never restore the configured wave size."""
+    T = max(t_min, min(t_max, T))
+    if T == t_max:
+        return t_max
+    return max(t_min, (T // quantum) * quantum)
+
+
+class AdaptiveWaveSizer:
+    """Bounded-AIMD wave sizing from the trailing abort rate.
+
+    Observes per-wave (executed, aborted) counts; once ``window`` executions
+    accumulate it compares the trailing abort rate against two thresholds:
+
+    * rate > ``high``  →  multiplicative decrease: T ← max(t_min, T/2),
+      snapped to the quantum ladder — smaller waves put fewer concurrent
+      writers on the hot keys, which is the §V-D contention regulation
+      (fewer conflicts per wave ⇒ fewer aborts ⇒ less retry re-traffic);
+    * rate < ``low``   →  additive increase: T ← min(t_max, T + quantum) —
+      probe back toward full parallelism one rung at a time.
+
+    The trailing window resets after every adjustment so decisions are made
+    on post-change evidence only.  With ``adapt_B=True`` the block size
+    rides the same signal on a halving ladder in [b_min, B0]: high abort
+    rates shorten the pipeline's feedback delay (retries see fresher store
+    state), calm streams restore full fusion.
+    """
+
+    def __init__(self, T0: int, B0: int = 1, t_min: int = 8,
+                 t_max: Optional[int] = None, high: float = 0.35,
+                 low: float = 0.10, window: int = 128,
+                 quantum: Optional[int] = None, adapt_B: bool = False,
+                 b_min: int = 1):
+        if not 0.0 <= low < high <= 1.0:
+            raise ValueError(f"need 0 <= low < high <= 1, got {low}/{high}")
+        self.t_min = t_min
+        self.t_max = T0 if t_max is None else t_max
+        if self.t_max < self.t_min:
+            raise ValueError(f"empty ladder: t_max={self.t_max} < "
+                             f"t_min={self.t_min}")
+        self.quantum = t_min if quantum is None else quantum
+        self.high, self.low, self.window = high, low, window
+        self.adapt_B, self.b_min = adapt_B, b_min
+        self.B0 = B0
+        self.T = _ladder_snap(T0, self.quantum, self.t_min, self.t_max)
+        self.B = B0
+        self._exec = 0
+        self._abort = 0
+        self.decreases = 0     # MD events (contention reactions)
+        self.increases = 0     # AI events (recovery probes)
+
+    def observe(self, executed: int, aborted: int) -> None:
+        """Fold one retired wave's counts in; adjust at window boundaries."""
+        self._exec += executed
+        self._abort += aborted
+        if self._exec < self.window:
+            return
+        rate = self._abort / self._exec
+        if rate > self.high:
+            self.T = _ladder_snap(self.T // 2, self.quantum, self.t_min,
+                                  self.t_max)
+            if self.adapt_B:
+                self.B = max(self.b_min, self.B // 2)
+            self.decreases += 1
+        elif rate < self.low:
+            self.T = _ladder_snap(self.T + self.quantum, self.quantum,
+                                  self.t_min, self.t_max)
+            if self.adapt_B:
+                self.B = min(self.B0, max(self.b_min, self.B * 2))
+            self.increases += 1
+        else:
+            # deadband: stay put, but shrink the counters back to one
+            # window's worth so the rate stays *trailing* — an unbounded
+            # cumulative average would react to a later contention spike
+            # thousands of executions late instead of within ~one window
+            scale = self.window / self._exec
+            self._abort = int(round(self._abort * scale))
+            self._exec = self.window
+            return
+        self._exec = self._abort = 0    # decide on post-adjustment data only
+
+    def abort_rate(self) -> float:
+        """Trailing abort rate of the (possibly partial) current window."""
+        return self._abort / self._exec if self._exec else 0.0
+
+
+@dataclasses.dataclass
+class _Block:
+    """One dispatched-but-unretired block: device futures + host metadata."""
+    outs: WaveOut                               # device, leading [B] axis
+    clock: jax.Array                            # device scalar after block
+    waves: List[Tuple[np.ndarray, list]]        # per wave: (tids, slots)
+
+
+class StreamingDriver:
+    """K-blocks-in-flight pump between a ``TxnService`` and the fused block
+    engine.  One instance per ``run_streaming`` session; the service owns
+    all request/GC/latency state, the driver owns only the pipeline."""
+
+    def __init__(self, svc, B: int = 4, K: int = 2,
+                 sizer: Optional[AdaptiveWaveSizer] = None):
+        if B < 1 or K < 1:
+            raise ValueError(f"need B >= 1 and K >= 1, got B={B} K={K}")
+        self.svc = svc
+        self.B, self.K = B, K
+        self.sizer = sizer
+        self._buf: List[Tuple[Wave, list]] = []   # block under formation
+        self._buf_T: Optional[int] = None         # its wave size (fixed/blk)
+        self._buf_B: Optional[int] = None         # its block size (fixed/blk)
+        self._inflight: Deque[_Block] = deque()
+
+    # ---------------------------------------------------------------- pump
+    def tick(self) -> None:
+        """One scheduler tick: form up to B waves into the open block (the
+        step loop forms exactly one per tick; the pipeline may catch up on
+        backlog), dispatch when it reaches B.  On an arrival gap the partial
+        block is held while the device is busy (retiring one finished block
+        instead, which feeds retries back to the former) and shipped only
+        when the pipeline is empty — the device never idles behind a
+        hoarded buffer, and no tick ships NOP filler."""
+        svc = self.svc
+        svc.tick += 1
+        t0 = time.perf_counter()
+        if self._buf_T is None:            # block boundary: propose sizes
+            self._buf_T = self.sizer.T if self.sizer else svc.T
+            self._buf_B = (self.sizer.B if self.sizer and self.sizer.adapt_B
+                           else self.B)    # sizer owns B only when adapting
+        formed_n = 0
+        while len(self._buf) < self._buf_B:
+            if formed_n and svc.former.backlog(svc.tick) < self._buf_T:
+                break              # catch-up waves beyond the first must be
+                                   # full-T: thin waves waste device slots
+            formed = svc.former.form(svc.tick, T=self._buf_T)
+            if formed is None:
+                break
+            self._buf.append(formed)
+            formed_n += 1
+        if len(self._buf) == self._buf_B:
+            self._dispatch()               # full block: ship it
+        elif self._buf:
+            if self._inflight:
+                self._retire_one()         # hold the partial; feed retries
+            else:
+                self._dispatch()           # device idle: ship what we have
+        else:
+            self._buf_T = self._buf_B = None   # no open block: re-propose
+            svc.idle_ticks += 1
+            if self._inflight:             # nothing to form: drain the pipe
+                self._retire_one()
+        svc._wall_s += time.perf_counter() - t0
+
+    def flush(self) -> None:
+        """Ship the partial block and sync every in-flight block."""
+        t0 = time.perf_counter()
+        if self._buf:
+            self._dispatch(retire_to=0)
+        while self._inflight:
+            self._retire_one()
+        self.svc._wall_s += time.perf_counter() - t0
+
+    def drain(self, max_ticks: Optional[int] = None) -> int:
+        """Tick until no request is pending anywhere (former, open block,
+        pipeline) or the safety cap; returns ticks consumed."""
+        svc = self.svc
+        if max_ticks is None:
+            max_ticks = (svc.retry.worst_case_ticks()
+                         + svc.former.pending() // max(svc.T, 1)
+                         + self.K * self.B + 16)
+        n = 0
+        while (svc.former.pending() or self._buf or self._inflight) \
+                and n < max_ticks:
+            self.tick()
+            n += 1
+        self.flush()
+        return n
+
+    # ------------------------------------------------------------ internals
+    def _dispatch(self, retire_to: Optional[int] = None) -> None:
+        """Ship the buffered waves as power-of-two-sized blocks, largest
+        first (a full buffer with power-of-two B is exactly one [B,T,O]
+        program; a partial one splits, e.g. 3 waves → [2]+[1]) — every
+        dispatched wave carries real work and the engine sees a closed set
+        of at most log2(B)+1 shapes per T.  Then retire until at most
+        ``retire_to`` (default K-1) blocks remain unsynced."""
+        svc = self.svc
+        while self._buf:
+            b = 1 << (len(self._buf).bit_length() - 1)   # max pow2 <= len
+            chunk, self._buf = self._buf[:b], self._buf[b:]
+            meta = [(np.asarray(w.tid), slots) for w, slots in chunk]
+            outs, clock = svc._run_block(_stack_np([w for w, _ in chunk]))
+            self._inflight.append(_Block(outs, clock, meta))
+            svc.blocks += 1
+        self._buf_T = self._buf_B = None
+        limit = (self.K - 1) if retire_to is None else retire_to
+        while len(self._inflight) > limit:
+            self._retire_one()
+
+    def _retire_one(self) -> None:
+        """Sync the oldest in-flight block (the pipeline's only blocking
+        point) and route its per-wave outcomes through the service."""
+        svc = self.svc
+        blk = self._inflight.popleft()
+        outs = jax.tree_util.tree_map(np.asarray, blk.outs)   # device sync
+        clock = int(blk.clock)
+        for j, (tids, slots) in enumerate(blk.waves):
+            out_j = WaveOut(*(leaf[j] for leaf in outs))
+            svc.gc.observe(out_j, clock)
+            svc.history.append((tids, out_j))
+            svc._route(out_j, slots)
+            if self.sizer is not None:
+                n_abort = int((out_j.status[:len(slots)] == ABORTED).sum())
+                self.sizer.observe(len(slots), n_abort)

@@ -1,0 +1,369 @@
+"""Differential conformance suite for the pipelined streaming service plane
+(DESIGN.md §8).
+
+The streaming driver (``TxnService.run_streaming``: K-blocks-in-flight fused
+dispatch over ``engine.run_block``) is locked to the per-wave step loop:
+
+* ``B=1, K=1`` is **bit-identical** to ``run_stream`` — every wave's full
+  ``WaveOut`` history (commits, induced intervals, CIDs), every request's
+  fate/TID/latency, for all six schedulers, on the single device here and
+  on the mesh in ``test_streaming_mesh_*`` (child process, 8 virtual
+  devices, like every mesh test).
+* ``B ∈ {2, 4}`` is **commit-set-equal modulo retry timing**: with a retry
+  budget generous enough that nothing drops, the exact set of committed
+  requests matches the step loop and the history still verifies.
+* **Oracle coverage**: the post-hoc verifiers (``core/verify.py``) run over
+  *streaming* histories for every scheduler — si/dsi/clocksi/postsi pass
+  ``verify_si``, cv passes ``verify_cv`` (optimal is excluded by design:
+  the paper's upper bound is not guaranteed correct).
+
+Plus units for the bounded-AIMD ``AdaptiveWaveSizer`` and a hypothesis
+property (marked ``slow``, run by the CI slow leg) over random arrival
+processes × zipf skew: every enqueued transaction commits exactly once or
+is reported dropped, and the GC watermark handed to every dispatch never
+passes a pinned reader's snapshot floor.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ABORTED, COMMITTED, SCHEDULERS
+from repro.core.verify import verify_cv, verify_si
+from repro.core.workloads import bursty_arrivals, poisson_arrivals
+from repro.service import (AdaptiveWaveSizer, RetryPolicy, StreamingDriver,
+                           TxnService, ycsb_txn_gen)
+
+T = 16
+N_NODES, KPN = 4, 40
+
+
+def _host_skew(sched):
+    return (np.round(np.linspace(0, 2, N_NODES)).astype(np.int32)
+            if sched == "clocksi" else None)
+
+
+def _session(mode, sched, B=1, K=1, sizer=None, theta=0.9, read_frac=0.5,
+             max_attempts=6, n_ticks=10, rate=12.0, seed=3, skew=True,
+             bursty=False):
+    """One served session; ``mode`` picks the step loop or the streaming
+    plane over the identical request stream (same seeds everywhere)."""
+    svc = TxnService(n_keys=N_NODES * KPN, T=T, sched=sched, n_nodes=N_NODES,
+                     retry=RetryPolicy(max_attempts=max_attempts),
+                     host_skew=_host_skew(sched) if skew else None, seed=seed)
+    gen = ycsb_txn_gen(np.random.RandomState(seed + 100), N_NODES, KPN,
+                       theta=theta, read_frac=read_frac, dist_frac=0.3)
+    arr_rng = np.random.RandomState(seed + 200)
+    arr = (bursty_arrivals(arr_rng, rate, n_ticks) if bursty
+           else poisson_arrivals(arr_rng, rate, n_ticks))
+    if mode == "step":
+        rep = svc.run_stream(arr, gen)
+    else:
+        rep = svc.run_streaming(arr, gen, B=B, K=K, sizer=sizer)
+    return svc, rep
+
+
+def _assert_history_bit_identical(a, b):
+    assert len(a.history) == len(b.history)
+    for (ta, oa), (tb, ob) in zip(a.history, b.history):
+        np.testing.assert_array_equal(ta, tb)
+        for fa, fb, name in zip(oa, ob, oa._fields):
+            np.testing.assert_array_equal(fa, fb, err_msg=name)
+
+
+# ------------------------------------------------------- B=1 K=1 identity
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_streaming_b1k1_bit_identical_to_step(sched):
+    """The degenerate pipeline IS the step loop: full WaveOut history and
+    every request's fate/TID/interval/latency, per scheduler."""
+    a, ra = _session("step", sched)
+    b, rb = _session("stream", sched, B=1, K=1)
+    _assert_history_bit_identical(a, b)
+    for qa, qb in zip(a.requests, b.requests):
+        assert (qa.status, qa.tid, qa.tids, qa.attempts, qa.commit_tick,
+                qa.s, qa.c) == (qb.status, qb.tid, qb.tids, qb.attempts,
+                                qb.commit_tick, qb.s, qb.c)
+    assert (ra.committed, ra.dropped, ra.retries, ra.waves, ra.rejected,
+            ra.idle_ticks) == (rb.committed, rb.dropped, rb.retries,
+                               rb.waves, rb.rejected, rb.idle_ticks)
+    assert (ra.latency_p50, ra.latency_p95, ra.latency_p99) == \
+           (rb.latency_p50, rb.latency_p95, rb.latency_p99)
+
+
+# --------------------------------------------------- B>1 commit-set equal
+@pytest.mark.parametrize("B,K", [(2, 2), (4, 2)])
+def test_streaming_blocks_commit_set_equal(B, K):
+    """Block pipelining only re-times retries: with a retry budget generous
+    enough that nothing drops, the committed request set matches the step
+    loop exactly and the streamed history verifies."""
+    a, ra = _session("step", "postsi", max_attempts=12)
+    b, rb = _session("stream", "postsi", B=B, K=K, max_attempts=12)
+    assert ra.dropped == 0 and rb.dropped == 0
+    assert ra.admitted == rb.admitted
+    commits = lambda svc: {r.req_id for r in svc.requests
+                           if r.status == "committed"}
+    assert commits(a) == commits(b)
+    assert rb.blocks > 0
+    assert b.verify() == []
+
+
+# ------------------------------------------------------------ oracle pass
+@pytest.mark.parametrize("sched", ["postsi", "si", "dsi", "clocksi", "cv"])
+def test_streaming_history_passes_oracle(sched):
+    """core/verify.py over *streaming* histories: SI validity (snapshot
+    reads + disjoint writer intervals) for the SI family, CV validity for
+    cv — plus final-store-matches-serial-replay via ``svc.verify``.
+    clocksi runs with zero skew here: skewed hosts read stale snapshots by
+    design (the paper's §II anomaly), which is measured, not verified."""
+    svc, rep = _session("stream", sched, B=2, K=2, skew=False,
+                        max_attempts=8)
+    assert rep.committed > 0
+    check = verify_cv if sched == "cv" else verify_si
+    assert check(svc.history) == []
+    assert svc.verify() == []
+
+
+def test_streaming_bursty_zipf_serves_and_verifies():
+    """Bursty MMPP arrivals × heavy zipf skew through the full pipeline:
+    load is shed at admission, retries happen, invariants hold."""
+    svc, rep = _session("stream", "postsi", B=4, K=2, theta=1.2,
+                        read_frac=0.2, bursty=True, n_ticks=12)
+    assert rep.offered == rep.admitted + rep.rejected
+    assert rep.committed + rep.dropped == rep.admitted
+    assert rep.committed > 0 and rep.retries > 0
+    assert svc.verify() == []
+
+
+# -------------------------------------------------------- adaptive sizing
+def test_adaptive_sizer_aimd_ladder():
+    s = AdaptiveWaveSizer(T0=64, t_min=8, window=10)
+    assert s.T == 64
+    s.observe(10, 8)                     # 80% aborts: halve
+    assert s.T == 32 and s.decreases == 1
+    s.observe(10, 9)
+    assert s.T == 16
+    s.observe(10, 10)
+    s.observe(10, 10)
+    assert s.T == 8                      # floor: never below t_min
+    s.observe(10, 10)
+    assert s.T == 8
+    for _ in range(40):                  # calm: climb one quantum per window
+        s.observe(10, 0)
+    assert s.T == 64 and s.increases >= 7   # ceiling: never above t_max
+    s.observe(10, 2)                     # 20% is inside the deadband
+    assert s.T == 64
+    assert s.abort_rate() > 0            # deadband keeps a trailing window
+    # the deadband must not accumulate an unbounded average: after a long
+    # calm-ish plateau, a contention spike still reacts within ~one window
+    for _ in range(50):
+        s.observe(10, 2)                 # 500 deadband executions
+    s.observe(10, 10)                    # spike
+    assert s.T == 32                     # reacted immediately, not 100s later
+
+
+def test_driver_honors_caller_block_size_with_non_adapting_sizer():
+    """A sizer that only adapts T (adapt_B=False, the default) must not
+    silently replace run_streaming's B with its own B0: blocks still
+    batch multiple waves."""
+    sizer = AdaptiveWaveSizer(T0=T)      # B0 defaults to 1, adapt_B=False
+    svc, rep = _session("stream", "postsi", B=4, K=2, sizer=sizer,
+                        max_attempts=8)
+    assert rep.blocks < rep.waves        # real multi-wave blocks shipped
+    assert svc.verify() == []
+
+
+def test_adaptive_sizer_adapts_block_size():
+    s = AdaptiveWaveSizer(T0=32, B0=4, t_min=8, window=4, adapt_B=True)
+    s.observe(4, 4)
+    assert s.B == 2                      # shorter pipeline under contention
+    s.observe(4, 4)
+    s.observe(4, 4)
+    assert s.B == 1                      # floor at b_min
+    for _ in range(3):
+        s.observe(4, 0)
+    assert s.B == 4                      # restored to B0 when calm
+
+
+def test_adaptive_sizer_and_driver_validate_args():
+    with pytest.raises(ValueError):
+        AdaptiveWaveSizer(T0=32, high=0.1, low=0.5)
+    with pytest.raises(ValueError):
+        AdaptiveWaveSizer(T0=4, t_min=8)     # empty ladder: t_max < t_min
+
+
+def test_adaptive_sizer_off_quantum_ceiling_reachable():
+    """t_max is always a rung: a T0 that is not a multiple of the quantum
+    must be honored at construction and restorable by additive increase."""
+    s = AdaptiveWaveSizer(T0=12, t_min=8, window=10)
+    assert s.T == 12                         # not floored to 8
+    s.observe(10, 8)
+    assert s.T == 8                          # MD onto the quantum rung
+    s.observe(10, 0)
+    assert s.T == 12                         # AI reaches the ceiling again
+    svc = TxnService(n_keys=N_NODES * KPN, T=T, n_nodes=N_NODES)
+    with pytest.raises(ValueError):
+        StreamingDriver(svc, B=0, K=1)
+    with pytest.raises(ValueError):
+        StreamingDriver(svc, B=2, K=0)
+
+
+def test_adaptive_streaming_regulates_contention():
+    """§V-D in open-stream form: a write-heavy, heavily-skewed stream drives
+    the trailing abort rate over the threshold and the sizer shrinks T;
+    every invariant still holds and the history verifies."""
+    sizer = AdaptiveWaveSizer(T0=T, B0=2, t_min=4, window=24, adapt_B=True)
+    svc, rep = _session("stream", "postsi", B=2, K=2, sizer=sizer,
+                        theta=1.2, read_frac=0.1, max_attempts=8,
+                        n_ticks=12, rate=14.0)
+    assert sizer.decreases >= 1          # contention actually regulated
+    assert sizer.T < T
+    assert rep.committed + rep.dropped == rep.admitted
+    assert svc.verify() == []
+
+
+# ----------------------------------------------------------- block step API
+def test_step_block_is_run_block_plus_sync():
+    """``engine.step_block`` is exactly ``run_block`` + numpy
+    materialization — the synchronous block-step entry point external
+    callers get (the streaming driver syncs lazily via run_block)."""
+    import jax.numpy as jnp
+    from repro.core import make_store, run_block, step_block, stack_waves
+    from repro.core.workloads import ycsb_waves
+    store = make_store(32, 4)
+    stacked = stack_waves(ycsb_waves(np.random.RandomState(0), 3, 4, 4, 8,
+                                     theta=0.9, read_frac=0.3))
+    s1, o1, c1 = run_block(store, stacked, 1, jnp.int32(1), sched="postsi",
+                           n_nodes=4)
+    s2, o2, c2 = step_block(store, stacked, 1, jnp.int32(1), sched="postsi",
+                            n_nodes=4)
+    assert all(isinstance(leaf, np.ndarray) for leaf in o2)
+    for a, b, name in zip(o1, o2, o2._fields):
+        np.testing.assert_array_equal(np.asarray(a), b, err_msg=name)
+    for a, b in zip(s1, s2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(c1) == int(c2)
+
+
+# ------------------------------------------------------------- mesh twin
+def test_streaming_mesh_b1k1_and_blocks():
+    """Mesh conformance (child process, 8 virtual devices): per scheduler,
+    mesh streaming B=1,K=1 is bit-identical to the mesh step loop; and for
+    postsi, mesh streaming B=2,K=2 is bit-identical to *local* streaming
+    B=2,K=2 (the substrates agree wave for wave)."""
+    import test_distribution as td
+    print(td._run(r"""
+import numpy as np
+from repro.core import SCHEDULERS
+from repro.core.dist_engine import make_node_mesh
+from repro.core.workloads import poisson_arrivals
+from repro.service import RetryPolicy, TxnService, ycsb_txn_gen
+
+n_nodes, kpn, T = 8, 32, 8
+mesh = make_node_mesh(n_nodes)
+
+def session(mesh_, mode, sched, B=1, K=1):
+    hs = (np.round(np.linspace(0, 2, n_nodes)).astype(np.int32)
+          if sched == "clocksi" else None)
+    svc = TxnService(n_keys=n_nodes*kpn, T=T, sched=sched, n_nodes=n_nodes,
+                     retry=RetryPolicy(max_attempts=6), host_skew=hs,
+                     seed=0, mesh=mesh_)
+    arr = poisson_arrivals(np.random.RandomState(100), 0.8*T, 5)
+    gen = ycsb_txn_gen(np.random.RandomState(200), n_nodes, kpn, theta=0.9,
+                       read_frac=0.5, dist_frac=0.3)
+    rep = (svc.run_stream(arr, gen) if mode == "step"
+           else svc.run_streaming(arr, gen, B=B, K=K))
+    return svc, rep
+
+def same(a, b):
+    assert len(a.history) == len(b.history)
+    for (ta, oa), (tb, ob) in zip(a.history, b.history):
+        np.testing.assert_array_equal(ta, tb)
+        for fa, fb, name in zip(oa, ob, oa._fields):
+            np.testing.assert_array_equal(fa, fb, err_msg=name)
+
+for sched in SCHEDULERS:
+    a, ra = session(mesh, "step", sched)
+    b, rb = session(mesh, "stream", sched, B=1, K=1)
+    same(a, b)
+    assert (ra.committed, ra.dropped, ra.retries) == \
+           (rb.committed, rb.dropped, rb.retries), sched
+    print("MESH-B1K1-OK", sched, ra.committed)
+
+c, _ = session(mesh, "stream", "postsi", B=2, K=2)
+d, _ = session(None, "stream", "postsi", B=2, K=2)
+same(c, d)
+assert c.verify() == []
+print("MESH-BLOCK-OK")
+
+# step_block_dist == run_block_dist + numpy materialization
+from repro.core import make_store, stack_waves
+from repro.core.dist_engine import run_block_dist, shard_store, step_block_dist
+from repro.core.workloads import ycsb_waves
+st = shard_store(make_store(n_nodes*kpn, 4), mesh)
+stk = stack_waves(ycsb_waves(np.random.RandomState(3), 2, T, n_nodes, kpn))
+_, o1, c1 = run_block_dist(st, stk, 1, 1, mesh)
+_, o2, c2 = step_block_dist(st, stk, 1, 1, mesh)
+for a, b, name in zip(o1, o2, o2._fields):
+    np.testing.assert_array_equal(np.asarray(a), b, err_msg=name)
+assert int(c1) == int(c2)
+print("STEP-BLOCK-DIST-OK")
+"""))
+
+
+# ------------------------------------------------- hypothesis (slow leg)
+@pytest.mark.slow
+def test_streaming_property_commit_once_and_watermark_pins():
+    """Random arrival processes (Poisson + bursty) × random zipf θ × random
+    pipeline shape: every enqueued transaction commits exactly once or is
+    reported dropped (counted over its full TID history against the served
+    WaveOut record), and the GC watermark handed to every block dispatch
+    never passes a pinned reader's snapshot floor."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, 10_000), st.booleans(),
+           st.floats(0.0, 1.3), st.sampled_from([(1, 1), (2, 2), (4, 3)]),
+           st.integers(2, 8))
+    def run(seed, bursty, theta, shape, max_attempts):
+        B, K = shape
+        svc = TxnService(n_keys=N_NODES * KPN, T=8, sched="postsi",
+                         n_nodes=N_NODES, max_queue=16,
+                         retry=RetryPolicy(max_attempts=max_attempts),
+                         seed=seed)
+        floor = 1
+        svc.gc.pin(floor)                      # long-lived external reader
+        seen_wm = []
+        orig = svc._watermark
+        svc._watermark = lambda: seen_wm.append(orig()) or seen_wm[-1]
+        rng = np.random.RandomState(seed)
+        arr = (bursty_arrivals(rng, 6.0, 8) if bursty
+               else poisson_arrivals(rng, 6.0, 8))
+        gen = ycsb_txn_gen(np.random.RandomState(seed + 1), N_NODES, KPN,
+                           theta=theta, read_frac=0.3, dist_frac=0.3)
+        rep = svc.run_streaming(arr, gen, B=B, K=K)
+
+        assert svc.former.pending() == 0
+        assert rep.committed + rep.dropped == rep.admitted
+        assert rep.offered == rep.admitted + rep.rejected
+        fate = {}                              # tid -> status, from history
+        for tids, out in svc.history:
+            for i, t in enumerate(tids):
+                fate[int(t)] = int(out.status[i])
+        for r in svc.requests:
+            assert r.status in ("committed", "dropped", "rejected")
+            if r.status == "rejected":
+                assert not r.tids
+                continue
+            assert r.attempts == len(r.tids)
+            n_committed = sum(fate[t] == COMMITTED for t in r.tids)
+            if r.status == "committed":
+                assert n_committed == 1        # exactly once, ever
+                assert all(fate[t] == ABORTED for t in r.tids[:-1])
+            else:
+                assert n_committed == 0
+                assert r.attempts == max_attempts
+        # the dispatch-time watermark respects the pinned floor, always
+        assert seen_wm and all(w is not None and w <= floor
+                               for w in seen_wm)
+        assert svc.verify() == []
+
+    run()

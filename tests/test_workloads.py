@@ -1,0 +1,200 @@
+"""Workload-generator unit tests (core/workloads.py).
+
+Direct coverage for the batch generators the benchmarks lean on — until now
+``tpcc_waves`` and ``micro_waves`` were only ever exercised through whole
+engine runs, so a generator regression (keys off-partition, op-count
+overflow, malformed NOP padding, seed drift) would surface as a mysterious
+benchmark shift instead of a failing unit.  Checks per generator:
+
+* key-partition invariant: every emitted key belongs to the node the txn
+  meant to touch (``node = key % n_nodes``, ``store.node_of_key``) and
+  stays inside ``[0, n_nodes * keys_per_node)``;
+* op-count bounds and NOP-padding well-formedness (non-NOP ops carry the
+  declared kinds, padded slots are exactly ``op_kind == NOP``, duplicate
+  keys inside a txn are NOP-ed out);
+* TID layout: contiguous ``arange`` per wave, waves non-overlapping;
+* reproducibility: same seed → bit-identical waves, fresh seed → different.
+
+Plus the zipfian YCSB generator added for the streaming plane: CDF sanity,
+skew actually skews, knobs (read_frac / dist_frac) act.
+"""
+import numpy as np
+import pytest
+
+from repro.core import NOP, READ, RMW, WRITE
+from repro.core.workloads import (micro_waves, smallbank_waves, tpcc_waves,
+                                  ycsb_txn, ycsb_waves, zipf_cdf, zipf_rank)
+
+N_NODES, KPN = 4, 50
+N_KEYS = N_NODES * KPN
+KINDS = {NOP, READ, WRITE, RMW}
+
+
+def _np_wave(w):
+    return (np.asarray(w.op_kind), np.asarray(w.op_key),
+            np.asarray(w.op_val), np.asarray(w.host), np.asarray(w.tid))
+
+
+def _check_common(waves, T, O, max_ops, tid0=1):
+    """Shape/kind/key/TID/padding invariants shared by every generator."""
+    next_tid = tid0
+    for w in waves:
+        op_kind, op_key, op_val, host, tid = _np_wave(w)
+        assert op_kind.shape == (T, O) and op_key.shape == (T, O)
+        assert host.shape == (T,) and tid.shape == (T,)
+        assert set(np.unique(op_kind)) <= KINDS
+        assert ((host >= 0) & (host < N_NODES)).all()
+        active = op_kind != NOP
+        # key-partition invariant: active keys live inside the key space
+        assert ((op_key[active] >= 0) & (op_key[active] < N_KEYS)).all()
+        # op-count bounds: every txn fits its declared budget
+        assert (active.sum(axis=1) <= max_ops).all()
+        # NOP padding well-formed: padded slots carry no value payload
+        assert (op_val[op_kind == NOP] == 0).all()
+        assert (op_val[op_kind == READ] == 0).all()
+        # engine precondition: distinct non-NOP keys inside each txn
+        for t in range(T):
+            ks = op_key[t][active[t]]
+            assert len(ks) == len(set(ks.tolist())), f"dup keys in txn {t}"
+        # TIDs: contiguous arange per wave, consecutive across waves
+        np.testing.assert_array_equal(tid, next_tid + np.arange(T))
+        next_tid += T
+
+
+def _assert_reproducible(gen_fn):
+    a = gen_fn(np.random.RandomState(7))
+    b = gen_fn(np.random.RandomState(7))
+    c = gen_fn(np.random.RandomState(8))
+    for wa, wb in zip(a, b):
+        for fa, fb in zip(_np_wave(wa), _np_wave(wb)):
+            np.testing.assert_array_equal(fa, fb)
+    assert any((fa != fc).any()
+               for wa, wc in zip(a, c)
+               for fa, fc in zip(_np_wave(wa), _np_wave(wc)))
+
+
+# ------------------------------------------------------------------ tpcc
+def test_tpcc_waves_invariants():
+    rng = np.random.RandomState(0)
+    waves = tpcc_waves(rng, 4, 16, N_NODES, KPN, dist_frac=0.4,
+                       districts_per_node=20, tid0=1)
+    _check_common(waves, 16, 12, max_ops=9)   # new-order: 1+5+3 ops max
+    for w in waves:
+        op_kind, op_key, _, host, _ = _np_wave(w)
+        for t in range(16):
+            active = op_kind[t] != NOP
+            assert 2 <= active.sum() <= 9     # payment=2 .. new-order=9
+            # op 0 (district / warehouse row) is host-local by construction
+            assert op_kind[t, 0] == RMW
+            assert op_key[t, 0] % N_NODES == host[t]
+
+
+def test_tpcc_waves_reproducible():
+    _assert_reproducible(
+        lambda rng: tpcc_waves(rng, 3, 8, N_NODES, KPN, dist_frac=0.3,
+                               districts_per_node=20))
+
+
+# ----------------------------------------------------------------- micro
+def test_micro_waves_invariants_and_locality():
+    rng = np.random.RandomState(1)
+    waves = micro_waves(rng, 4, 16, N_NODES, KPN, n_ops=6, read_ratio=0.5,
+                        dist_frac=0.0, blind_frac=0.5)
+    _check_common(waves, 16, 6, max_ops=6)
+    for w in waves:
+        op_kind, op_key, _, host, _ = _np_wave(w)
+        # dist_frac=0: the key-partition invariant in its sharpest form —
+        # every active key resolves to the issuing host (node = key % n)
+        active = op_kind != NOP
+        node = op_key % N_NODES
+        assert (node[active] == np.broadcast_to(host[:, None],
+                                                op_key.shape)[active]).all()
+
+
+def test_micro_waves_knobs():
+    rng = np.random.RandomState(2)
+    all_reads = micro_waves(rng, 2, 16, N_NODES, KPN, n_ops=4,
+                            read_ratio=1.0)
+    for w in all_reads:
+        op_kind = np.asarray(w.op_kind)
+        assert set(np.unique(op_kind)) <= {NOP, READ}
+    blind = micro_waves(np.random.RandomState(3), 2, 16, N_NODES, KPN,
+                        n_ops=4, read_ratio=0.0, blind_frac=1.0)
+    kinds = np.unique(np.concatenate(
+        [np.asarray(w.op_kind).ravel() for w in blind]))
+    assert WRITE in kinds and RMW not in kinds
+
+
+def test_micro_waves_reproducible():
+    _assert_reproducible(
+        lambda rng: micro_waves(rng, 3, 8, N_NODES, KPN, n_ops=4,
+                                hot_frac=0.5, hot_per_node=3))
+
+
+# ------------------------------------------------------------- smallbank
+def test_smallbank_waves_invariants():
+    rng = np.random.RandomState(4)
+    waves = smallbank_waves(rng, 4, 16, N_NODES, KPN, dist_frac=0.3)
+    _check_common(waves, 16, 4, max_ops=2)    # every SmallBank txn has <= 2
+    _assert_reproducible(
+        lambda r: smallbank_waves(r, 3, 8, N_NODES, KPN))
+
+
+# ------------------------------------------------------------------ ycsb
+def test_zipf_cdf_sane():
+    cdf = zipf_cdf(100, 0.9)
+    assert cdf.shape == (100,)
+    assert (np.diff(cdf) > 0).all() and cdf[-1] == 1.0
+    uniform = zipf_cdf(100, 0.0)
+    np.testing.assert_allclose(np.diff(uniform), 1 / 100, atol=1e-12)
+    # rank 0 is the hottest and skew concentrates it
+    assert zipf_cdf(100, 1.2)[0] > cdf[0] > uniform[0]
+    rng = np.random.RandomState(0)
+    ranks = [zipf_rank(rng, cdf) for _ in range(500)]
+    assert min(ranks) >= 0 and max(ranks) < 100
+
+
+def test_ycsb_txn_knobs_and_partition():
+    rng = np.random.RandomState(5)
+    for _ in range(50):
+        host = int(rng.randint(0, N_NODES))
+        op_kind, op_key, op_val = ycsb_txn(rng, host, N_NODES, KPN,
+                                           theta=0.9, read_frac=1.0,
+                                           dist_frac=0.0)
+        active = op_kind != NOP
+        assert set(np.unique(op_kind)) <= {NOP, READ}
+        assert (op_key[active] % N_NODES == host).all()   # local txn
+        assert (op_val == 0).all()
+        ks = op_key[active]
+        assert len(ks) == len(set(ks.tolist()))
+    # write-heavy: RMWs appear and carry values
+    op_kind, op_key, op_val = ycsb_txn(np.random.RandomState(6), 0, N_NODES,
+                                       KPN, theta=0.0, read_frac=0.0,
+                                       dist_frac=0.0)
+    assert (op_kind[op_kind != NOP] == RMW).all()
+    assert (op_val[op_kind == RMW] > 0).all()
+
+
+def test_ycsb_skew_concentrates_traffic():
+    """theta=1.2 must hit each node's rank-0 key far more often than the
+    uniform stream does — the §V-D contention knob actually turns."""
+    def hot_share(theta):
+        rng = np.random.RandomState(7)
+        hot = total = 0
+        for _ in range(300):
+            host = int(rng.randint(0, N_NODES))
+            op_kind, op_key, _ = ycsb_txn(rng, host, N_NODES, KPN,
+                                          theta=theta, read_frac=0.5)
+            active = op_kind != NOP
+            hot += int((op_key[active] // N_NODES == 0).sum())
+            total += int(active.sum())
+        return hot / total
+    assert hot_share(1.2) > 0.2 > 5 / KPN > hot_share(0.0)
+
+
+def test_ycsb_waves_invariants_and_reproducible():
+    rng = np.random.RandomState(8)
+    waves = ycsb_waves(rng, 4, 16, N_NODES, KPN, theta=0.9, n_ops=4)
+    _check_common(waves, 16, 4, max_ops=4)
+    _assert_reproducible(
+        lambda r: ycsb_waves(r, 3, 8, N_NODES, KPN, theta=1.1))
