@@ -20,10 +20,18 @@ sides pay host-side wave forming; what the pipeline removes is the
 per-wave dispatch + host sync, so the speedup is the dispatch-overhead
 share — largest for small waves on CPU, not a device-compute win).
 
+plus the **durability sweep**: the same zipfian streaming session served
+with the WAL off, durable-before-ack (``fsync_every=1``), group commit
+(``fsync_every=8``), and two snapshot cadences — the §9 durability tax at
+the block-retire point, reported relative to the wal-off row of the same
+served stream (an honest host-side overhead share: fsync + pickling on
+this host's filesystem, CPU backend — not a paper absolute).
+
 Writes ``BENCH_service.json`` at the repo root.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_service [--smoke]
       PYTHONPATH=src python -m benchmarks.bench_service --streaming-only
+      PYTHONPATH=src python -m benchmarks.bench_service --durability-only
 """
 from __future__ import annotations
 
@@ -65,6 +73,16 @@ STREAM_SHAPES = ((1, 1), (2, 2), (4, 2), (8, 3))
 STREAM_THETAS = (0.0, 0.9, 1.2)
 STREAM_LOAD = 2.0
 STREAM_SMOKE = dict(shapes=((2, 2),), thetas=(0.9,), n_ticks=10)
+
+# durability sweep (DESIGN.md §9): WAL off vs durable-before-ack vs group
+# commit vs snapshot cadences, all serving the identical zipfian stream
+DUR_VARIANTS = (("wal-off", None, None),
+                ("wal-fsync1", 1, None),
+                ("wal-fsync8", 8, None),
+                ("wal-fsync1-snap2", 1, 2),
+                ("wal-fsync1-snap8", 1, 8))
+ART_DIR = os.path.join(os.path.dirname(OUT_PATH),
+                       "artifacts", "durability_smoke")
 
 
 def _host_skew(sched: str, n_nodes: int):
@@ -215,6 +233,90 @@ def _stream_sweep(n_ticks: int, T: int, n_nodes: int, keys_per_node: int,
             "sweep": rows, "adaptive": a_row}
 
 
+def _durability_one(label: str, fsync_every: Optional[int],
+                    snapshot_every: Optional[int], directory: Optional[str],
+                    theta: float, shape: Tuple[int, int], n_ticks: int,
+                    T: int, n_nodes: int, keys_per_node: int,
+                    check_recovery: bool = False, seed: int = 0) -> Dict:
+    """One streaming session with (or without) the §9 durability plane
+    attached at the retire point.  ``check_recovery=True`` additionally
+    replays the WAL it just wrote and demands the recovered store match
+    the live one bit for bit — the smoke's correctness gate."""
+    from repro.durability import DurabilityManager, recover, wal, wal_path
+    mgr = (DurabilityManager(directory, fsync_every=fsync_every,
+                             snapshot_every=snapshot_every)
+           if fsync_every is not None else None)
+    svc = TxnService(n_keys=n_nodes * keys_per_node, n_versions=8, T=T,
+                     sched="postsi", n_nodes=n_nodes,
+                     retry=RetryPolicy(max_attempts=8), seed=seed,
+                     durability=mgr)
+    arr = poisson_arrivals(np.random.RandomState(300 + seed),
+                           STREAM_LOAD * T, n_ticks)
+    gen = ycsb_txn_gen(np.random.RandomState(400 + seed), n_nodes,
+                       keys_per_node, theta=theta, read_frac=0.5,
+                       dist_frac=0.2)
+    report = svc.run_streaming(arr, gen, B=shape[0], K=shape[1])
+    row = report.as_dict()
+    row.update(mode=f"B{shape[0]}K{shape[1]}", durability=label,
+               fsync_every=fsync_every, snapshot_every=snapshot_every,
+               verify_errors=len(svc.verify()))
+    if mgr is not None:
+        mgr.close()
+        scan = wal.scan(wal_path(directory))
+        row.update(wal_records=len(scan.blocks), wal_bytes=scan.valid_bytes,
+                   snapshots=mgr.snapshots_taken)
+        if check_recovery:
+            st = recover(directory)
+            for f in ("val", "tid", "cid", "sid", "head", "wave"):
+                if not np.array_equal(np.asarray(getattr(st.store, f)),
+                                      np.asarray(getattr(svc.store, f))):
+                    raise SystemExit(
+                        f"durability smoke ({label}): recovered store "
+                        f"field {f!r} diverges from the live service")
+            row["recover_matches_live"] = True
+    return row
+
+
+def _durability_sweep(n_ticks: int, T: int, n_nodes: int, keys_per_node: int,
+                      shape: Tuple[int, int] = (4, 2), theta: float = 0.9,
+                      artifacts_dir: Optional[str] = None,
+                      check_recovery: bool = False) -> Dict:
+    """WAL/snapshot tax at the block-retire point over DUR_VARIANTS, all
+    serving the identical stream.  With ``artifacts_dir`` the WAL +
+    snapshot directories are kept (CI uploads them); otherwise tmpdirs."""
+    import shutil
+    import tempfile
+    rows = []
+    for label, fsync_every, snapshot_every in DUR_VARIANTS:
+        d, cleanup = None, False
+        if fsync_every is not None:
+            if artifacts_dir is not None:
+                d = os.path.join(artifacts_dir, label)
+                shutil.rmtree(d, ignore_errors=True)
+                os.makedirs(d, exist_ok=True)
+            else:
+                d, cleanup = tempfile.mkdtemp(), True
+        rows.append(_durability_one(label, fsync_every, snapshot_every, d,
+                                    theta, shape, n_ticks, T, n_nodes,
+                                    keys_per_node,
+                                    check_recovery=check_recovery))
+        if cleanup:
+            shutil.rmtree(d, ignore_errors=True)
+    base = rows[0]["goodput_tps"]
+    for r in rows:
+        r["goodput_vs_wal_off"] = round(r["goodput_tps"] / max(base, 1e-9), 3)
+    return {
+        "sched": "postsi", "theta": theta, "shape": list(shape),
+        "n_ticks": n_ticks, "wave_size": T, "load": STREAM_LOAD,
+        "note": ("durability tax at the block-retire point on THIS host's "
+                 "filesystem (CPU backend, tmpdir/artifacts dir): fsync + "
+                 "pickle cost per retired block, relative to the wal-off "
+                 "row of the SAME served stream — a host-side overhead "
+                 "share, not a paper absolute"),
+        "sweep": rows,
+    }
+
+
 def run(smoke: bool = False) -> Dict:
     if smoke:
         n_ticks, T = SMOKE["n_ticks"], SMOKE["T"]
@@ -247,6 +349,10 @@ def run(smoke: bool = False) -> Dict:
         "streaming": _stream_sweep(s_kw["n_ticks"], T, n_nodes, kpn,
                                    shapes=s_kw["shapes"],
                                    thetas=s_kw["thetas"]),
+        # after the streaming sweep on purpose: its warm compile covers the
+        # durability shape, so these rows time the WAL, not the jit cache
+        "durability": _durability_sweep(s_kw["n_ticks"], T, n_nodes, kpn,
+                                        shape=(2, 2) if smoke else (4, 2)),
     }
 
 
@@ -273,8 +379,34 @@ def _print_streaming(streaming: Dict) -> None:
               f"verify_errors {a['verify_errors']}")
 
 
+def _print_durability(dur: Dict) -> None:
+    for r in dur["sweep"]:
+        extra = ("" if r["durability"] == "wal-off" else
+                 f" wal_records {r['wal_records']} "
+                 f"wal_kb {r['wal_bytes'] // 1024} snaps {r['snapshots']}")
+        print(f"bench_service/durability/{r['durability']}: "
+              f"goodput {r['goodput_tps']:.0f}/s "
+              f"({r['goodput_vs_wal_off']:.2f}x vs wal-off){extra} "
+              f"verify_errors {r['verify_errors']}")
+
+
 def main(write_json: bool = True, smoke: bool = False,
-         streaming_only: bool = False) -> Dict:
+         streaming_only: bool = False, durability_only: bool = False) -> Dict:
+    if durability_only:
+        # CI durability smoke: the sweep at smoke size with WAL + snapshot
+        # directories kept under artifacts/ (CI uploads them) and every
+        # WAL-backed row's recovery cross-checked against the live store
+        _warm_block_shapes(SMOKE["n_nodes"] * SMOKE["keys_per_node"],
+                           {SMOKE["T"]: 2})
+        dur = _durability_sweep(STREAM_SMOKE["n_ticks"], SMOKE["T"],
+                                SMOKE["n_nodes"], SMOKE["keys_per_node"],
+                                shape=(2, 2), artifacts_dir=ART_DIR,
+                                check_recovery=True)
+        _print_durability(dur)
+        bad = [r for r in dur["sweep"] if r["verify_errors"]]
+        if bad:
+            raise SystemExit(f"durability smoke: verify errors in {bad}")
+        return {"durability": dur}
     if streaming_only:
         # CI streaming smoke (both kernel backends): the pipelined plane at
         # B=2, theta=0.9 against its step baseline — no adaptive session,
@@ -311,9 +443,11 @@ def main(write_json: bool = True, smoke: bool = False,
     print(f"bench_service/gc/V{b['n_versions']}+block: "
           f"evicted_visible={b['evicted_visible']} aborted={b['aborted']}")
     _print_streaming(report["streaming"])
+    _print_durability(report["durability"])
     return report
 
 
 if __name__ == "__main__":
     main(smoke="--smoke" in sys.argv[1:],
-         streaming_only="--streaming-only" in sys.argv[1:])
+         streaming_only="--streaming-only" in sys.argv[1:],
+         durability_only="--durability-only" in sys.argv[1:])

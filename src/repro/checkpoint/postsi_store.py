@@ -31,6 +31,20 @@ def _leaf_paths(tree) -> List[str]:
     return [jax.tree_util.keystr(p) for p, _ in leaves]
 
 
+def _path_mismatch(saved: List[str], given: List[str]) -> str:
+    """Human-readable diff of two leaf-path lists for the errors below."""
+    missing = [p for p in saved if p not in given]
+    unexpected = [p for p in given if p not in saved]
+    parts = []
+    if missing:
+        parts.append(f"missing from tree_example: {missing[:4]}")
+    if unexpected:
+        parts.append(f"not in checkpoint: {unexpected[:4]}")
+    if not parts:          # same set, different order
+        parts.append("leaf order differs")
+    return "; ".join(parts)
+
+
 class PostSICheckpointer:
     """Directory layout: <dir>/<key_id>_<file_id>.npy + postsi_meta.pkl.
 
@@ -46,14 +60,33 @@ class PostSICheckpointer:
         self.dir = directory
         self.paths = _leaf_paths(tree_example)
         self.key_of = {p: i for i, p in enumerate(self.paths)}
+        self.meta_corrupt = False      # True when a damaged meta was ignored
         # +1 key: the step counter rides the same transaction
         meta = os.path.join(directory, self.META)
+        saved = None
         if os.path.exists(meta):
-            with open(meta, "rb") as f:
-                saved = pickle.load(f)
+            try:
+                with open(meta, "rb") as f:
+                    saved = pickle.load(f)
+                if not isinstance(saved, dict) or \
+                        {"sched", "next_file", "paths"} - saved.keys():
+                    raise ValueError("meta missing required keys")
+            except Exception:
+                # a torn/bit-rotted meta must degrade, not kill: treat the
+                # directory as holding no committed checkpoint (restore then
+                # returns (None, None) and durable recovery falls back to a
+                # full WAL replay — DESIGN.md §9); the next successful save
+                # rewrites a clean meta
+                saved = None
+                self.meta_corrupt = True
+        if saved is not None:
+            if saved["paths"] != self.paths:
+                raise ValueError(
+                    "PostSICheckpointer: checkpointed tree structure does "
+                    "not match tree_example; "
+                    + _path_mismatch(saved["paths"], self.paths))
             self.sched: SeqScheduler = saved["sched"]
             self._next_file = saved["next_file"]
-            assert saved["paths"] == self.paths, "tree structure changed"
         else:
             self.sched = SeqScheduler(len(self.paths) + 1, mode="postsi")
             self._next_file = 1
@@ -85,7 +118,18 @@ class PostSICheckpointer:
     def restore(self, tree_example, shardings=None) -> Tuple[Optional[int], Any]:
         """One reader transaction over all leaves: PostSI guarantees the file
         handles form one atomic checkpoint. Returns (step, tree) or (None,
-        None) when no committed checkpoint exists."""
+        None) when no committed checkpoint exists.
+
+        ``tree_example`` must have the same leaf paths as the checkpointed
+        tree — a mismatch is rejected HERE with a readable error instead of
+        failing deep inside ``tree_unflatten`` (or, worse, silently loading
+        leaves under the wrong paths when only the order changed)."""
+        paths = _leaf_paths(tree_example)
+        if paths != self.paths:
+            raise ValueError(
+                "PostSICheckpointer.restore: tree_example leaf paths do not "
+                "match the checkpointed tree; "
+                + _path_mismatch(self.paths, paths))
         tid = self.sched.begin()
         step = self.sched.read(tid, len(self.paths))
         if step is None or step == 0:

@@ -23,8 +23,17 @@ import numpy as np
 COMMITTED = 1
 
 
-def _collect(history):
-    """Flatten wave outputs into per-txn records and per-key version lists."""
+def _collect(history, base_store=None):
+    """Flatten wave outputs into per-txn records and per-key version lists.
+
+    ``base_store`` seeds the version lists from a store's version rings —
+    the committed-version set at a recovery snapshot boundary (DESIGN.md
+    §9).  A post-restart history is a *suffix*: its reads may legally
+    return versions committed before the snapshot, which the suffix alone
+    cannot name.  The ring retains exactly the versions still readable at
+    the boundary (anything evicted is below the GC watermark, which no
+    later snapshot may take), so seeding makes the snapshot-read check
+    sound on suffix histories."""
     txns = []        # (tid, s, c, reads[(k,cid)], writes[(k,cid)])
     versions = defaultdict(list)   # key -> [(cid, tid)]
     for tids, out in history:
@@ -38,15 +47,24 @@ def _collect(history):
             txns.append((int(tids[i]), int(out.s[i]), int(out.c[i]), reads, writes))
             for k, c in writes:
                 versions[k].append((c, int(tids[i])))
+    if base_store is not None:
+        get = (base_store.get if isinstance(base_store, dict)
+               else lambda f: getattr(base_store, f))
+        cid = np.asarray(get("cid"))
+        tid = np.asarray(get("tid"))
+        for k, v in zip(*np.nonzero(cid > 0)):
+            versions[int(k)].append((int(cid[k, v]), int(tid[k, v])))
     for k in versions:
         versions[k].sort()
         versions[k].insert(0, (0, 0))      # bootstrap version
     return txns, versions
 
 
-def verify_si(history) -> List[str]:
-    """Return a list of SI violations (empty == the schedule is SI)."""
-    txns, versions = _collect(history)
+def verify_si(history, base_store=None) -> List[str]:
+    """Return a list of SI violations (empty == the schedule is SI).
+    ``base_store`` makes suffix histories (post-recovery) checkable — see
+    ``_collect``."""
+    txns, versions = _collect(history, base_store)
     errors = []
 
     # (1) writers of the same key: pairwise-disjoint intervals
@@ -75,9 +93,12 @@ def verify_si(history) -> List[str]:
     return errors
 
 
-def verify_cv(history) -> List[str]:
-    """Consistent Visibility: atomic visibility + no lost updates."""
-    txns, versions = _collect(history)
+def verify_cv(history, base_store=None) -> List[str]:
+    """Consistent Visibility: atomic visibility + no lost updates.
+    ``base_store`` seeds pre-snapshot versions for suffix histories (the
+    atomic-visibility pairing still only spans suffix writers — ring
+    entries carry no write-sets)."""
+    txns, versions = _collect(history, base_store)
     errors = []
 
     # no lost updates: a committed RMW must have read the version directly

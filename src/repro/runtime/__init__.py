@@ -1,2 +1,3 @@
+from .faults import Fault, FaultSchedule, InjectedCrash
 from .runner import TrainRunner, FailureInjector
 from .straggler import StragglerPolicy

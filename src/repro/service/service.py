@@ -32,7 +32,8 @@ from typing import Callable, Dict, Iterable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COMMITTED, make_store, run_block, step_wave
+from repro.core import COMMITTED, Wave, WaveOut, make_store, run_block, \
+    step_wave
 from repro.core.verify import final_values_ok, verify_cv, verify_si
 from repro.core.workloads import SMALLBANK_O, smallbank_txn, ycsb_txn
 
@@ -92,7 +93,7 @@ class TxnService:
                  n_nodes: int = 8, retry: Optional[RetryPolicy] = None,
                  gc_block: bool = False, max_queue: Optional[int] = None,
                  host_skew: Optional[np.ndarray] = None, seed: int = 0,
-                 mesh=None, kernels=None):
+                 mesh=None, kernels=None, durability=None, faults=None):
         from repro.core.substrate import mesh_kernels
         from repro.kernels import resolve
         self.sched = sched
@@ -132,6 +133,16 @@ class TxnService:
         self._req_ids = itertools.count(1)
         self._wall_s = 0.0
         self.stream = None                   # StreamingDriver, when serving
+        self._last_dispatch = (0, None)      # (wave_idx0, wm) of last block
+        self.base_store = None    # snapshot rings when history is a suffix
+        # durability & fault-injection planes (DESIGN.md §9): the manager
+        # WAL-logs every retired block durable-before-ack and auto-recovers
+        # an existing log into this fresh service; the schedule fires at
+        # the dispatch/retire/post-log seams
+        self.faults = faults
+        self.durability = durability
+        if durability is not None:
+            durability.attach(self)
 
     # ------------------------------------------------------------ intake
     def submit(self, op_kind: np.ndarray, op_key: np.ndarray,
@@ -157,10 +168,28 @@ class TxnService:
             return None
         wave, slots = formed
         self.wave_idx += 1
-        self.store, out, self.clock = self._step_wave(wave)
+        wm = self._watermark()
+        if self.faults is not None:
+            self.faults.at_dispatch(self)
+        self.store, out, self.clock = self._step_wave(wave, wm)
+        if self.faults is not None:
+            self.faults.at_retire(self)
         self.gc.observe(out, int(self.clock))
         self.history.append((np.asarray(wave.tid), out))
+        if self.durability is not None:
+            # the step loop retires every wave synchronously: log it as a
+            # B=1 block, durable BEFORE its outcomes are acked below
+            self.durability.log_block(
+                Wave(*(np.asarray(getattr(wave, f))[None]
+                       for f in Wave._fields)),
+                self.wave_idx, wm, WaveOut(*(np.asarray(x)[None]
+                                             for x in out)),
+                int(self.clock), self.gc.clock)
+            if self.faults is not None:
+                self.faults.post_log(self)
         self._route(out, slots)
+        if self.durability is not None:
+            self.durability.maybe_snapshot(self, pipeline_empty=True)
         self._wall_s += time.perf_counter() - t0
         return out
 
@@ -203,41 +232,47 @@ class TxnService:
         return mesh_watermark(self.mesh,
                               self.gc.node_floors(self.mesh.devices.size))
 
-    def _step_wave(self, wave):
-        """Dispatch one formed wave to the configured data plane."""
+    def _step_wave(self, wave, wm):
+        """Dispatch one formed wave to the configured data plane under the
+        given GC watermark (``_watermark()`` at dispatch time — the caller
+        computes it once so the WAL can log exactly what ran)."""
         if self.mesh is None:
             return step_wave(
                 self.store, wave, self.wave_idx, self.clock, sched=self.sched,
                 n_nodes=self.n_nodes, host_skew=self.host_skew,
-                watermark=self._watermark(), gc_block=self.gc.block,
+                watermark=wm, gc_block=self.gc.block,
                 kernels=self.kernels)
         from repro.core.dist_engine import step_wave_dist
         return step_wave_dist(
             self.store, wave, self.wave_idx, self.clock, self.mesh,
             sched=self.sched, n_nodes=self.n_nodes, host_skew=self.host_skew,
-            watermark=self._watermark(), gc_block=self.gc.block,
+            watermark=wm, gc_block=self.gc.block,
             kernels=self.kernels)
 
     def _run_block(self, stacked):
         """Dispatch a [B]-stacked wave block to the configured data plane
         WITHOUT syncing the host (the streaming driver's dispatch half:
         store/clock advance as device futures, outcomes are materialized
-        only when the driver retires the block).  Returns (outs, clock)."""
+        only when the driver retires the block).  Returns (outs, clock);
+        ``_last_dispatch`` records the (wave_idx0, watermark) this dispatch
+        consumed, so the retirement path can WAL-log a replayable record."""
         B = stacked.op_kind.shape[0]
         wave_idx0 = self.wave_idx + 1
         self.wave_idx += B
+        wm = self._watermark()
+        self._last_dispatch = (wave_idx0, wm)
         if self.mesh is None:
             self.store, outs, self.clock = run_block(
                 self.store, stacked, wave_idx0, self.clock, sched=self.sched,
                 n_nodes=self.n_nodes, host_skew=self.host_skew,
-                watermark=self._watermark(), gc_block=self.gc.block,
+                watermark=wm, gc_block=self.gc.block,
                 kernels=self.kernels)
         else:
             from repro.core.dist_engine import run_block_dist
             self.store, outs, self.clock = run_block_dist(
                 self.store, stacked, wave_idx0, self.clock, self.mesh,
                 sched=self.sched, n_nodes=self.n_nodes,
-                host_skew=self.host_skew, watermark=self._watermark(),
+                host_skew=self.host_skew, watermark=wm,
                 gc_block=self.gc.block, kernels=self.kernels)
         return outs, self.clock
 
@@ -330,7 +365,7 @@ class TxnService:
         """Post-hoc correctness of the served history: SI (or CV) validity
         plus final-store-matches-serial-replay, via ``repro.core.verify``."""
         check = verify_cv if self.sched == "cv" else verify_si
-        errors = check(self.history)
+        errors = check(self.history, base_store=self.base_store)
         errors += final_values_ok(self.store, self.history, self.n_keys)
         return errors
 

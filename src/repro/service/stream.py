@@ -165,6 +165,9 @@ class _Block:
     outs: WaveOut                               # device, leading [B] axis
     clock: jax.Array                            # device scalar after block
     waves: List[Tuple[np.ndarray, list]]        # per wave: (tids, slots)
+    stacked: Wave                               # numpy [B,T,O] block input
+    wave_idx0: int                              # wave-index origin at dispatch
+    wm: object = None                           # GC watermark at dispatch
 
 
 class StreamingDriver:
@@ -214,14 +217,16 @@ class StreamingDriver:
             self._dispatch()               # full block: ship it
         elif self._buf:
             if self._inflight:
-                self._retire_one()         # hold the partial; feed retries
+                # hold the partial; feed retries (tick-level retire: the
+                # one place an injected delay_retire may stall)
+                self._retire_one(allow_delay=True)
             else:
                 self._dispatch()           # device idle: ship what we have
         else:
             self._buf_T = self._buf_B = None   # no open block: re-propose
             svc.idle_ticks += 1
             if self._inflight:             # nothing to form: drain the pipe
-                self._retire_one()
+                self._retire_one(allow_delay=True)
         svc._wall_s += time.perf_counter() - t0
 
     def flush(self) -> None:
@@ -262,26 +267,54 @@ class StreamingDriver:
             b = 1 << (len(self._buf).bit_length() - 1)   # max pow2 <= len
             chunk, self._buf = self._buf[:b], self._buf[b:]
             meta = [(np.asarray(w.tid), slots) for w, slots in chunk]
-            outs, clock = svc._run_block(_stack_np([w for w, _ in chunk]))
-            self._inflight.append(_Block(outs, clock, meta))
+            stacked = _stack_np([w for w, _ in chunk])
+            outs, clock = svc._run_block(stacked)
+            wave_idx0, wm = svc._last_dispatch
+            if svc.faults is not None:
+                svc.faults.at_dispatch(svc)   # kill: launched, not durable
+            self._inflight.append(
+                _Block(outs, clock, meta, stacked, wave_idx0, wm))
             svc.blocks += 1
         self._buf_T = self._buf_B = None
         limit = (self.K - 1) if retire_to is None else retire_to
         while len(self._inflight) > limit:
             self._retire_one()
 
-    def _retire_one(self) -> None:
+    def _retire_one(self, allow_delay: bool = False) -> None:
         """Sync the oldest in-flight block (the pipeline's only blocking
-        point) and route its per-wave outcomes through the service."""
+        point), WAL-log it when a durability manager is attached
+        (durable-before-ack), then route its per-wave outcomes through the
+        service.  ``allow_delay`` marks tick-level calls — the only ones a
+        ``delay_retire`` fault may skip; the dispatch loop's K-limit drain
+        always completes, so an armed delay stalls the pipeline but can
+        never deadlock it."""
         svc = self.svc
+        if allow_delay and svc.faults is not None \
+                and svc.faults.delay_retire(svc):
+            return                       # injected straggler: hold the block
+        if svc.faults is not None:
+            svc.faults.at_retire(svc)    # kill: computed, never logged/acked
         blk = self._inflight.popleft()
         outs = jax.tree_util.tree_map(np.asarray, blk.outs)   # device sync
         clock = int(blk.clock)
+        per_wave = []
         for j, (tids, slots) in enumerate(blk.waves):
             out_j = WaveOut(*(leaf[j] for leaf in outs))
             svc.gc.observe(out_j, clock)
             svc.history.append((tids, out_j))
+            per_wave.append((out_j, slots))
+        if svc.durability is not None:
+            # retire point = durability boundary (DESIGN.md §9): one record
+            # per retired block, appended before any outcome is acked
+            svc.durability.log_block(blk.stacked, blk.wave_idx0, blk.wm,
+                                     outs, clock, svc.gc.clock)
+            if svc.faults is not None:
+                svc.faults.post_log(svc)   # kill: durable-but-unacked window
+        for out_j, slots in per_wave:
             svc._route(out_j, slots)
             if self.sizer is not None:
                 n_abort = int((out_j.status[:len(slots)] == ABORTED).sum())
                 self.sizer.observe(len(slots), n_abort)
+        if svc.durability is not None:
+            svc.durability.maybe_snapshot(
+                svc, pipeline_empty=not self._inflight and not self._buf)

@@ -1,0 +1,118 @@
+"""Unit tests for the PostSI-committed checkpointer
+(checkpoint/postsi_store.py) — shipped in the seed with zero coverage,
+now the foundation of the durability plane's snapshots (DESIGN.md §9).
+"""
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import PostSICheckpointer
+
+
+def _tree(seed: int = 0):
+    rng = np.random.RandomState(seed)
+    return {"layer": {"w": rng.randint(0, 100, (4, 3)).astype(np.int32),
+                      "b": rng.randint(0, 100, (3,)).astype(np.int32)},
+            "step_scale": np.float32(seed + 0.5)}
+
+
+def _assert_tree_equal(a, b):
+    assert set(a) == set(b)
+    np.testing.assert_array_equal(a["layer"]["w"], b["layer"]["w"])
+    np.testing.assert_array_equal(a["layer"]["b"], b["layer"]["b"])
+    np.testing.assert_allclose(a["step_scale"], b["step_scale"])
+
+
+def test_save_restore_round_trip(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck.save(7, _tree(1))
+    step, got = ck.restore(_tree())
+    assert step == 7
+    _assert_tree_equal(got, _tree(1))
+
+
+def test_restore_empty_dir_is_none(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck.restore(_tree()) == (None, None)
+
+
+def test_latest_snapshot_wins_and_reopen_sees_it(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    for step in (1, 2, 3):
+        assert ck.save(step, _tree(step))
+    step, got = ck.restore(_tree())
+    assert step == 3
+    _assert_tree_equal(got, _tree(3))
+    # a fresh checkpointer over the same directory (restart) agrees
+    ck2 = PostSICheckpointer(str(tmp_path), _tree())
+    step2, got2 = ck2.restore(_tree())
+    assert step2 == 3
+    _assert_tree_equal(got2, _tree(3))
+
+
+def test_gc_keep_latest_prunes_unreachable_files(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    n_leaves = len(ck.paths)
+    for step in range(1, 6):
+        assert ck.save(step, _tree(step))
+    n_files = lambda: sum(f.endswith(".npy") for f in os.listdir(tmp_path))
+    assert n_files() == 5 * n_leaves
+    removed = ck.gc(keep_latest=2)
+    assert removed == 3 * n_leaves
+    assert n_files() == 2 * n_leaves
+    # both retained checkpoints still restore
+    step, got = ck.restore(_tree())
+    assert step == 5
+    _assert_tree_equal(got, _tree(5))
+    assert ck.gc(keep_latest=2) == 0          # idempotent
+
+
+def test_corrupted_meta_degrades_to_empty(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck.save(1, _tree(1))
+    meta = tmp_path / PostSICheckpointer.META
+    meta.write_bytes(b"\x80garbage not a pickle")
+    ck2 = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck2.meta_corrupt
+    assert ck2.restore(_tree()) == (None, None)   # degraded, not dead
+    # the next save rewrites a clean meta and the store works again
+    assert ck2.save(2, _tree(2))
+    assert not PostSICheckpointer(str(tmp_path), _tree()).meta_corrupt
+
+
+def test_meta_missing_required_keys_degrades(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck.save(1, _tree(1))
+    with open(os.path.join(str(tmp_path), PostSICheckpointer.META), "wb") as f:
+        pickle.dump({"sched": None}, f)       # valid pickle, wrong schema
+    ck2 = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck2.meta_corrupt
+    assert ck2.restore(_tree()) == (None, None)
+
+
+def test_restore_rejects_mismatched_tree_with_clear_error(tmp_path):
+    """Regression (ISSUE 6 satellite): a leaf-path mismatch must be
+    rejected with a readable error naming the offending paths, not fail
+    deep inside tree_unflatten."""
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck.save(1, _tree(1))
+    wrong = {"layer": {"w": np.zeros((4, 3), np.int32),
+                       "extra": np.zeros(2, np.int32)},
+             "step_scale": np.float32(0)}
+    with pytest.raises(ValueError, match="leaf paths do not match"):
+        ck.restore(wrong)
+    # the error names what is missing and what is unexpected
+    with pytest.raises(ValueError, match=r"\['b'\]"):
+        ck.restore(wrong)
+    with pytest.raises(ValueError, match=r"\['extra'\]"):
+        ck.restore(wrong)
+
+
+def test_init_rejects_mismatched_tree_against_saved_meta(tmp_path):
+    ck = PostSICheckpointer(str(tmp_path), _tree())
+    assert ck.save(1, _tree(1))
+    wrong = {"other": np.zeros(3, np.int32)}
+    with pytest.raises(ValueError, match="does not match tree_example"):
+        PostSICheckpointer(str(tmp_path), wrong)

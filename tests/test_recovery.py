@@ -1,0 +1,682 @@
+"""Crash-restart differential conformance suite for the durability plane
+(DESIGN.md §9), extending the tests/test_streaming.py style.
+
+The claims under test:
+
+* **Recovery is exact**: after a clean shutdown, ``recover()`` (snapshot +
+  WAL-suffix replay, and equally full-WAL replay) reconstructs the store,
+  version rings, clock, wave index, GC watermark and TID counter
+  bit-identically to the live service — for all six schedulers.
+* **The retire point is the durability boundary**: an injected mid-stream
+  kill leaves a WAL that is a bit-identical *prefix* of the uninterrupted
+  run's WAL (pure-kill schedules), and replay through ``engine.run_block``
+  reproduces the logged outcomes exactly (``recover`` refuses to serve a
+  forked history otherwise).  Blocks in flight at the kill are absent from
+  the log: they replay (client resubmission) or drop — never double-commit.
+  With ``fsync_every=1`` every *acked* commit is durable (log-before-ack),
+  and a kill between log and ack (the durable-but-unacked window) is
+  resolved by the resubmission rule: resubmit only what is neither acked
+  nor committed in the recovered WAL.
+* **Substrate/backend freedom**: the same WAL recovers bit-identically
+  through the local engine, the mesh engine (child process, 8 virtual
+  devices), and either kernel backend (jnp / pallas_interpret).
+* **Watermark rules survive recovery** (paper §IV-B): per WAL record the
+  GC clock is monotone non-decreasing and the engine clock strictly
+  increases; the recovered watermark equals the live one.
+
+Plus a pinned-seed chaos test (CI runs seeds 11/23/47 via
+``REPRO_FAULT_SEED``) and a hypothesis property (slow leg) asserting
+commit-exactly-once-or-dropped and watermark monotonicity across random
+failure schedules.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import COMMITTED, SCHEDULERS
+from repro.core.workloads import poisson_arrivals
+from repro.durability import (DurabilityManager, RecoveryError, WalError,
+                              recover, wal, wal_path)
+from repro.durability.snapshot import SnapshotStore
+from repro.runtime.faults import Fault, FaultSchedule, InjectedCrash
+from repro.service import RetryPolicy, TxnService, ycsb_txn_gen
+
+T, N_NODES, KPN = 8, 4, 16
+N_KEYS = N_NODES * KPN
+STORE_FIELDS = ("val", "tid", "cid", "sid", "head", "wave")
+
+
+def _host_skew(sched):
+    return (np.round(np.linspace(0, 2, N_NODES)).astype(np.int32)
+            if sched == "clocksi" else None)
+
+
+def _service(d, sched="postsi", fsync_every=1, snapshot_every=None,
+             faults=None, kernels=None, seed=0, max_attempts=6,
+             max_queue=None):
+    mgr = (DurabilityManager(str(d), fsync_every=fsync_every,
+                             snapshot_every=snapshot_every)
+           if d is not None else None)
+    svc = TxnService(n_keys=N_KEYS, T=T, sched=sched, n_nodes=N_NODES,
+                     retry=RetryPolicy(max_attempts=max_attempts),
+                     host_skew=_host_skew(sched), seed=seed,
+                     max_queue=max_queue, kernels=kernels, durability=mgr,
+                     faults=faults)
+    return svc, mgr
+
+
+def _serve(svc, mgr, n_ticks=10, rate=6.0, seed=3, B=2, K=2):
+    """Serve one YCSB stream; on an injected crash, model the kill (drop
+    the unsynced group-commit tail, apply scheduled WAL tears) and report
+    it.  Returns True when the session crashed."""
+    gen = ycsb_txn_gen(np.random.RandomState(seed + 100), N_NODES, KPN,
+                       theta=0.6, read_frac=0.5, dist_frac=0.3)
+    arr = poisson_arrivals(np.random.RandomState(seed + 200), rate, n_ticks)
+    try:
+        svc.run_streaming(arr, gen, B=B, K=K)
+    except InjectedCrash:
+        mgr.crash()
+        svc.faults.mutilate_wal(mgr.wal_path, mgr.crash_synced_bytes)
+        return True
+    mgr.close()
+    return False
+
+
+def _assert_store_equal(a, b, msg=""):
+    for f in STORE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}store.{f}")
+
+
+def _assert_state_matches_live(st, svc):
+    """Recovered state ≡ the live service: store bits + every meta scalar
+    the engine resumes from (incl. the GC watermark clock)."""
+    _assert_store_equal(st.store, svc.store)
+    assert st.clock == int(np.asarray(svc.clock))
+    assert st.wave_idx == svc.wave_idx
+    assert st.gc_clock == svc.gc.clock
+    assert st.next_tid == svc.former.next_tid
+
+
+def _assert_wal_invariants(blocks):
+    """Per-record §IV-B survivals: GC watermark monotone non-decreasing,
+    engine clock monotone non-decreasing (the clock is the high-water
+    mark of commit timestamps: an all-abort block leaves it unchanged,
+    and PostSI's decentralized interval commits may land at c_i <= clk,
+    so even a committing block need not advance it), wave indices
+    contiguous."""
+    prev_gc, prev_clock, next_wave = -1, 0, 1
+    for rec in blocks:
+        assert rec["gc_clock"] >= prev_gc, "GC watermark went backwards"
+        assert rec["clock"] >= prev_clock, "engine clock went backwards"
+        assert rec["wave_idx0"] == next_wave, "wave origin not contiguous"
+        next_wave = rec["wave_idx0"] + rec["tid"].shape[0]
+        prev_gc, prev_clock = rec["gc_clock"], rec["clock"]
+
+
+def _committed_tids(blocks):
+    C = set()
+    for rec in blocks:
+        C.update(int(t) for t, s in zip(rec["tid"].ravel(),
+                                        rec["status"].ravel())
+                 if s == COMMITTED)
+    return C
+
+
+_PREFIX_KEYS = ("op_kind", "op_key", "op_val", "host", "tid",
+                "status", "s", "c")
+
+
+def _assert_wal_prefix(crashed_blocks, ref_blocks):
+    """Pure-kill conformance: the crashed WAL is a bit-identical prefix of
+    the uninterrupted run's WAL — inputs, outcomes, clocks, watermarks."""
+    assert len(crashed_blocks) <= len(ref_blocks)
+    for i, (a, b) in enumerate(zip(crashed_blocks, ref_blocks)):
+        for k in _PREFIX_KEYS:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"block {i} field {k}")
+        assert (a["wave_idx0"], a["wm"], a["clock"], a["gc_clock"]) == \
+               (b["wave_idx0"], b["wm"], b["clock"], b["gc_clock"]), i
+
+
+def _restart_exactly_once(d, crashed, sched="postsi", seed=0):
+    """The resubmission harness: restart on the recovered directory,
+    resubmit exactly the requests that are neither acked nor committed in
+    the durable log, drain, and assert every offered request committed
+    exactly once across the crash — or ended dropped/rejected."""
+    C = _committed_tids(wal.scan(wal_path(str(d))).blocks)
+    for r in crashed.requests:
+        if r.status == "committed":       # durable-before-ack (fsync=1)
+            assert r.tid in C, f"acked commit req {r.req_id} not durable"
+    # a burst of resubmissions arrives at once: admission must take it all
+    svc2, mgr2 = _service(d, sched, seed=seed, max_queue=10_000)
+    resub = {}
+    for r in crashed.requests:
+        if r.status in ("committed", "dropped", "rejected"):
+            continue
+        if any(t in C for t in r.tids):
+            continue                      # durable-but-unacked: no resubmit
+        resub[r.req_id] = svc2.submit(r.op_kind, r.op_key, r.op_val, r.host)
+    svc2.drain()
+    for r in crashed.requests:
+        pre = any(t in C for t in r.tids)
+        r2 = resub.get(r.req_id)
+        post = r2 is not None and r2.status == "committed"
+        assert not (pre and post), f"req {r.req_id} double-committed"
+        if r2 is not None:
+            assert r2.status in ("committed", "dropped")
+        if r.status == "committed":
+            assert pre
+        if r.status not in ("dropped", "rejected") and r2 is None:
+            assert pre                    # skipped resubmit ⇒ already durable
+    assert svc2.verify() == []
+    mgr2.close()
+    return svc2
+
+
+# ----------------------------------------------- clean-shutdown conformance
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_recover_reconstructs_live_state(sched, tmp_path):
+    """All six schedulers: snapshot+suffix replay AND full-WAL replay both
+    reconstruct the live store/rings/watermark bit-identically."""
+    svc, mgr = _service(tmp_path, sched, snapshot_every=3)
+    assert not _serve(svc, mgr)
+    assert svc.committed > 0 and mgr.seq > 0
+    st = recover(str(tmp_path))
+    assert st.snapshot_seq is not None          # the snapshot was exercised
+    assert st.n_replayed < st.n_blocks
+    _assert_state_matches_live(st, svc)
+    full = recover(str(tmp_path), use_snapshot=False)
+    assert full.n_replayed == full.n_blocks
+    _assert_state_matches_live(full, svc)
+    assert len(full.history) == len(svc.history)
+    _assert_wal_invariants(wal.scan(wal_path(str(tmp_path))).blocks)
+
+
+def test_reattach_resumes_and_verifies_across_restart(tmp_path):
+    """A fresh service attached to an existing log comes back as the old
+    one (store, TID counter, history) and keeps serving verifiably."""
+    svc, mgr = _service(tmp_path, "postsi", snapshot_every=4)
+    assert not _serve(svc, mgr)
+    svc2, mgr2 = _service(tmp_path, "postsi")
+    _assert_store_equal(svc.store, svc2.store)
+    assert svc2.former.next_tid == svc.former.next_tid
+    assert mgr2.last_recovery is not None
+    assert not _serve(svc2, mgr2, seed=9)
+    assert svc2.committed > 0
+    assert svc2.verify() == []          # suffix history + snapshot rings
+
+
+# ------------------------------------------------- crash-restart conformance
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_crash_restart_prefix_conformance(sched, tmp_path):
+    """All six schedulers: a mid-stream kill leaves a WAL that is a
+    bit-identical prefix of the uninterrupted run's, replay reproduces the
+    logged outcomes (recover's internal determinism check), and the
+    watermark rules hold on every surviving record."""
+    ref_d, c_d = tmp_path / "ref", tmp_path / "crashed"
+    ref, ref_mgr = _service(ref_d, sched)
+    assert not _serve(ref, ref_mgr, n_ticks=12)
+    faults = FaultSchedule([Fault("kill", "dispatch", 3)])
+    svc, mgr = _service(c_d, sched, faults=faults)
+    assert _serve(svc, mgr, n_ticks=12)
+    st = recover(str(c_d))                       # verify_outcomes=True
+    ref_blocks = wal.scan(wal_path(str(ref_d))).blocks
+    assert 0 < st.n_blocks < len(ref_blocks)     # genuinely mid-stream
+    crashed_blocks = wal.scan(wal_path(str(c_d))).blocks
+    _assert_wal_prefix(crashed_blocks, ref_blocks)
+    _assert_wal_invariants(crashed_blocks)
+    _assert_wal_invariants(ref_blocks)
+
+
+def test_k_gt_1_inflight_blocks_replay_or_drop(tmp_path):
+    """K=3 pipeline killed at a retire: only retired blocks are durable
+    (dispatched > durable), and the in-flight blocks' transactions commit
+    exactly once via resubmission — never twice, never silently."""
+    faults = FaultSchedule([Fault("kill", "retire", 2)])
+    svc, mgr = _service(tmp_path, "postsi", faults=faults)
+    assert _serve(svc, mgr, n_ticks=12, rate=10.0, K=3)
+    n_durable = len(wal.scan(wal_path(str(tmp_path))).blocks)
+    assert svc.blocks > n_durable        # blocks were in flight at the kill
+    st = recover(str(tmp_path))
+    assert st.n_blocks == n_durable
+    _restart_exactly_once(tmp_path, svc)
+
+
+def test_post_log_kill_durable_but_unacked_window(tmp_path):
+    """A kill between WAL append and ack: the block's commits are durable
+    but its clients never heard — the resubmission rule must skip them
+    (their tids are in the recovered log) and nothing double-commits."""
+    faults = FaultSchedule([Fault("kill", "post_log", 1)])
+    svc, mgr = _service(tmp_path, "postsi", faults=faults)
+    assert _serve(svc, mgr, n_ticks=12)
+    C = _committed_tids(wal.scan(wal_path(str(tmp_path))).blocks)
+    windowed = [r for r in svc.requests
+                if r.status not in ("committed", "dropped", "rejected")
+                and any(t in C for t in r.tids)]
+    assert windowed                      # the window actually opened
+    _restart_exactly_once(tmp_path, svc)
+
+
+def test_torn_wal_tail_absorbed_and_resumed(tmp_path):
+    """A partial final write (torn tail) costs at most the at-risk suffix
+    behind the last fsync barrier: scan stops at the intact prefix,
+    recovery replays it, and a restarted writer truncates the tear so the
+    resumed log is clean again.  Group commit (fsync_every>1) is what puts
+    appended-but-unfsynced records at risk; at fsync_every=1 the barrier
+    trails every append and a crash tear clamps to zero bytes — so this
+    test runs the honest acked-but-lost window, and deliberately does NOT
+    claim exactly-once (that guarantee belongs to fsync_every=1)."""
+    faults = FaultSchedule([Fault("kill", "retire", 3),
+                            Fault("torn_tail", "wal", 0, arg=10)])
+    svc, mgr = _service(tmp_path, "postsi", fsync_every=4, faults=faults)
+    assert _serve(svc, mgr, n_ticks=12)
+    p = wal_path(str(tmp_path))
+    damaged = wal.scan(p)
+    assert damaged.torn_bytes > 0
+    # fsync is a barrier: the tear never reaches behind the last fsync
+    assert damaged.valid_bytes >= mgr.crash_synced_bytes
+    st = recover(str(tmp_path))
+    assert st.torn_bytes == damaged.torn_bytes
+    assert st.n_blocks == len(damaged.blocks)
+    # restart: the writer drops the tear, service resumes, log ends clean
+    svc2, mgr2 = _service(tmp_path, "postsi")
+    assert not _serve(svc2, mgr2, seed=9)
+    final = wal.scan(p)
+    assert final.torn_bytes == 0
+    assert len(final.blocks) > len(damaged.blocks)
+    _assert_wal_invariants(final.blocks)
+
+
+def test_delayed_retirement_stalls_but_preserves_invariants(tmp_path):
+    """The injected straggler (delay_retire) may hold blocks for ticks but
+    every invariant — commit-or-drop, durable log shape, verification —
+    still holds; the schedule is not pure-kill so no prefix claim."""
+    faults = FaultSchedule([Fault("delay_retire", "retire", 0, arg=3)])
+    svc, mgr = _service(tmp_path, "postsi", faults=faults)
+    assert not _serve(svc, mgr, n_ticks=12)
+    assert faults.delays_taken > 0
+    assert not faults.pure_kill
+    rep = svc.report()
+    assert rep.committed + rep.dropped == rep.admitted
+    assert svc.verify() == []
+    st = recover(str(tmp_path))
+    _assert_state_matches_live(st, svc)
+
+
+# --------------------------------------------------- config & backend planes
+def test_config_mismatch_rejected_with_clear_error(tmp_path):
+    svc, mgr = _service(tmp_path, "postsi")
+    assert not _serve(svc, mgr, n_ticks=4)
+    with pytest.raises(WalError, match="sched='postsi' logged vs 'si'"):
+        _service(tmp_path, "si")
+    with pytest.raises(WalError, match="host_skew"):
+        mgr2 = DurabilityManager(str(tmp_path))
+        TxnService(n_keys=N_KEYS, T=T, sched="postsi", n_nodes=N_NODES,
+                   host_skew=np.arange(N_NODES, dtype=np.int32),
+                   durability=mgr2)
+
+
+def test_wal_replay_equivalent_across_kernel_backends(tmp_path):
+    """Satellite: a WAL written under one kernel backend recovers
+    bit-identically through the other — replay determinism spans
+    REPRO_KERNEL_BACKEND={jnp,pallas_interpret} (PR 4's equivalence,
+    now load-bearing for durability)."""
+    svc, mgr = _service(tmp_path, "postsi", kernels="jnp")
+    assert not _serve(svc, mgr)
+    st_jnp = recover(str(tmp_path), kernels="jnp")
+    st_pal = recover(str(tmp_path), kernels="pallas_interpret")
+    _assert_store_equal(st_jnp.store, st_pal.store, "jnp-vs-pallas ")
+    _assert_state_matches_live(st_pal, svc)      # both checked vs logged
+    _assert_state_matches_live(st_jnp, svc)
+
+
+def test_step_loop_sessions_are_durable_too(tmp_path):
+    """The per-wave step loop logs B=1 blocks at the same boundary; the
+    same recover() covers it."""
+    svc, mgr = _service(tmp_path, "si", snapshot_every=5)
+    gen = ycsb_txn_gen(np.random.RandomState(7), N_NODES, KPN, theta=0.6)
+    svc.run_stream(poisson_arrivals(np.random.RandomState(8), 5.0, 8), gen)
+    mgr.close()
+    st = recover(str(tmp_path))
+    _assert_state_matches_live(st, svc)
+    assert all(rec["tid"].shape[0] == 1
+               for rec in wal.scan(wal_path(str(tmp_path))).blocks)
+
+
+# ------------------------------------------------------------ wal unit tests
+class TestWal:
+    def _fill(self, p, n=4):
+        w = wal.WalWriter(str(p))
+        w.append(wal.REC_CONFIG, {"format": 1, "sched": "postsi"})
+        for i in range(n):
+            w.append(wal.REC_BLOCK, {"seq": i,
+                                     "x": np.arange(6, dtype=np.int32) + i})
+        w.close()
+
+    def test_round_trip(self, tmp_path):
+        p = tmp_path / "wal.log"
+        self._fill(p)
+        s = wal.scan(str(p))
+        assert s.config["sched"] == "postsi" and len(s.blocks) == 4
+        assert s.torn_bytes == 0 and s.valid_bytes == p.stat().st_size
+        np.testing.assert_array_equal(s.blocks[2]["x"],
+                                      np.arange(6, dtype=np.int32) + 2)
+
+    def test_missing_file_scans_empty(self, tmp_path):
+        s = wal.scan(str(tmp_path / "absent.log"))
+        assert s.config is None and s.blocks == [] and s.valid_bytes == 0
+
+    def test_torn_tail_tolerated_and_truncated_on_reopen(self, tmp_path):
+        p = tmp_path / "wal.log"
+        self._fill(p)
+        whole = p.stat().st_size
+        assert wal.torn_tail(str(p), 7) == 7
+        s = wal.scan(str(p))
+        assert len(s.blocks) == 3                 # last record destroyed
+        assert s.valid_bytes < whole - 7 and s.torn_bytes > 0
+        w = wal.WalWriter(str(p), valid_bytes=s.valid_bytes)
+        w.append(wal.REC_BLOCK, {"seq": 3, "x": np.int32(9)})
+        w.close()
+        s2 = wal.scan(str(p))
+        assert len(s2.blocks) == 4 and s2.torn_bytes == 0
+
+    def test_midlog_bitrot_ends_the_trusted_prefix(self, tmp_path):
+        p = tmp_path / "wal.log"
+        self._fill(p)
+        s = wal.scan(str(p))
+        data = bytearray(p.read_bytes())
+        # flip one payload byte inside the second block record
+        off = s.valid_bytes - (s.valid_bytes // 3)
+        data[off] ^= 0xFF
+        p.write_bytes(bytes(data))
+        damaged = wal.scan(str(p))
+        assert len(damaged.blocks) < 4 and damaged.torn_bytes > 0
+
+    def test_config_must_head_the_log(self, tmp_path):
+        p = tmp_path / "wal.log"
+        w = wal.WalWriter(str(p))
+        w.append(wal.REC_BLOCK, {"seq": 0})
+        w.append(wal.REC_CONFIG, {"format": 1})
+        w.close()
+        with pytest.raises(WalError, match="CONFIG record not at log head"):
+            wal.scan(str(p))
+
+    def test_noncontiguous_seq_rejected(self, tmp_path):
+        p = tmp_path / "wal.log"
+        w = wal.WalWriter(str(p))
+        w.append(wal.REC_BLOCK, {"seq": 0})
+        w.append(wal.REC_BLOCK, {"seq": 2})
+        w.close()
+        with pytest.raises(WalError, match="not a contiguous retire order"):
+            wal.scan(str(p))
+
+    def test_fsync_batching_and_simulated_crash(self, tmp_path):
+        p = tmp_path / "wal.log"
+        w = wal.WalWriter(str(p), fsync_every=3)
+        w.append(wal.REC_BLOCK, {"seq": 0})
+        w.append(wal.REC_BLOCK, {"seq": 1})
+        assert w.unsynced_records == 2           # buffered, not in the OS
+        assert len(wal.scan(str(p)).blocks) == 0
+        assert w.drop_unsynced() == 2            # the crash loses them
+        assert len(wal.scan(str(p)).blocks) == 0
+        w2 = wal.WalWriter(str(p), fsync_every=3)
+        w2.append(wal.REC_BLOCK, {"seq": 0})
+        w2.append(wal.REC_BLOCK, {"seq": 1})
+        w2.append(wal.REC_BLOCK, {"seq": 2})     # batch boundary: auto-sync
+        assert w2.unsynced_records == 0
+        assert len(wal.scan(str(p)).blocks) == 3
+        w2.close()
+
+    def test_fsync_barrier_bounds_the_tearable_suffix(self, tmp_path):
+        """simulate_crash hands pending frames to the OS unfsynced: they
+        are scannable (a gentle crash keeps them) but AT RISK — a torn
+        tail may eat them, yet can never reach behind synced_bytes."""
+        p = tmp_path / "wal.log"
+        w = wal.WalWriter(str(p), fsync_every=4)
+        w.append(wal.REC_BLOCK, {"seq": 0})
+        w.sync()                                  # explicit barrier
+        barrier = w.synced_bytes
+        assert barrier == p.stat().st_size
+        w.append(wal.REC_BLOCK, {"seq": 1})
+        w.append(wal.REC_BLOCK, {"seq": 2})
+        assert w.synced_bytes == barrier          # barrier did not move
+        assert w.simulate_crash() == 2            # flushed, never fsynced
+        assert len(wal.scan(str(p)).blocks) == 3  # gentle crash: all there
+        at_risk = p.stat().st_size - barrier
+        assert wal.torn_tail(str(p), at_risk) == at_risk
+        s = wal.scan(str(p))                      # tear ate both at-risk recs
+        assert len(s.blocks) == 1 and s.valid_bytes == barrier
+        # with fsync_every=1 every seam leaves the pending buffer empty
+        w1 = wal.WalWriter(str(p), fsync_every=1, valid_bytes=s.valid_bytes)
+        w1.append(wal.REC_BLOCK, {"seq": 1})
+        assert w1.simulate_crash() == 0           # nothing ever at risk
+
+    def test_fsync_every_validated(self, tmp_path):
+        with pytest.raises(ValueError, match="fsync_every"):
+            wal.WalWriter(str(tmp_path / "w.log"), fsync_every=0)
+
+
+# ------------------------------------------------------- snapshot unit tests
+class TestSnapshots:
+    def test_damaged_snapshot_degrades_to_full_replay(self, tmp_path):
+        svc, mgr = _service(tmp_path, "postsi", snapshot_every=3)
+        assert not _serve(svc, mgr)
+        snap_meta = os.path.join(str(tmp_path), SnapshotStore.SUBDIR,
+                                 "postsi_meta.pkl")
+        with open(snap_meta, "wb") as f:
+            f.write(b"rotten")
+        st = recover(str(tmp_path))
+        assert st.snapshot_seq is None           # fell back, did not die
+        assert st.n_replayed == st.n_blocks
+        _assert_state_matches_live(st, svc)
+
+    def test_snapshot_ahead_of_wal_is_rejected(self, tmp_path):
+        svc, mgr = _service(tmp_path, "postsi")
+        assert not _serve(svc, mgr, n_ticks=4)
+        snaps = SnapshotStore(str(tmp_path), N_KEYS, svc.store.n_versions)
+        snaps.save(svc.store, int(np.asarray(svc.clock)), svc.wave_idx,
+                   wal_seq=10_000, gc_clock=svc.gc.clock,
+                   next_tid=svc.former.next_tid)
+        with pytest.raises(RecoveryError, match="wal_seq=10000"):
+            recover(str(tmp_path))
+
+    def test_snapshots_only_at_pipeline_empty_boundaries(self, tmp_path):
+        """maybe_snapshot refuses while blocks are in flight — the device
+        store would include unretired (undurable) state."""
+        mgr = DurabilityManager(str(tmp_path), snapshot_every=1)
+        svc = TxnService(n_keys=N_KEYS, T=T, n_nodes=N_NODES,
+                         durability=mgr)
+        mgr._since_snap = 5
+        assert not mgr.maybe_snapshot(svc, pipeline_empty=False)
+        assert mgr.maybe_snapshot(svc, pipeline_empty=True)
+        assert mgr.snapshots_taken == 1
+        mgr.close()
+
+
+# --------------------------------------------------------------- mesh twin
+def test_recovery_mesh_conformance():
+    """Mesh substrate (child process, 8 virtual devices): for every
+    scheduler the mesh-served WAL recovers bit-identically to the live
+    sharded store; the same WAL recovers identically through the LOCAL
+    engine (substrate freedom); and a drop_node kill recovers onto a fresh
+    mesh — the replacement-node story — leaving a WAL that is a prefix of
+    the uninterrupted run's."""
+    import test_distribution as td
+    print(td._run(r"""
+import shutil, tempfile
+import numpy as np
+from repro.core import SCHEDULERS
+from repro.core.dist_engine import make_node_mesh
+from repro.core.workloads import poisson_arrivals
+from repro.durability import DurabilityManager, recover, wal, wal_path
+from repro.runtime.faults import Fault, FaultSchedule, InjectedCrash
+from repro.service import RetryPolicy, TxnService, ycsb_txn_gen
+
+n_nodes, kpn, T = 8, 8, 8
+mesh = make_node_mesh(n_nodes)
+FIELDS = ("val", "tid", "cid", "sid", "head", "wave")
+
+def session(d, sched, mesh_, faults=None, seed=3, n_ticks=6):
+    hs = (np.round(np.linspace(0, 2, n_nodes)).astype(np.int32)
+          if sched == "clocksi" else None)
+    mgr = DurabilityManager(d, fsync_every=1, snapshot_every=3)
+    svc = TxnService(n_keys=n_nodes*kpn, T=T, sched=sched, n_nodes=n_nodes,
+                     retry=RetryPolicy(max_attempts=6), host_skew=hs,
+                     seed=0, mesh=mesh_, durability=mgr, faults=faults)
+    gen = ycsb_txn_gen(np.random.RandomState(seed+100), n_nodes, kpn,
+                       theta=0.6, read_frac=0.5)
+    arr = poisson_arrivals(np.random.RandomState(seed+200), 0.8*T, n_ticks)
+    try:
+        svc.run_streaming(arr, gen, B=2, K=2)
+    except InjectedCrash:
+        mgr.crash()
+        faults.mutilate_wal(mgr.wal_path, mgr.crash_synced_bytes)
+        return svc, mgr, True
+    mgr.close()
+    return svc, mgr, False
+
+def same_store(a, b, msg):
+    for f in FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=msg + f)
+
+def same_meta(st, svc):
+    assert st.clock == int(np.asarray(svc.clock))
+    assert st.wave_idx == svc.wave_idx
+    assert st.gc_clock == svc.gc.clock
+    assert st.next_tid == svc.former.next_tid
+
+for sched in SCHEDULERS:
+    d = tempfile.mkdtemp()
+    svc, mgr, crashed = session(d, sched, mesh)
+    assert not crashed and svc.committed > 0
+    st = recover(d, mesh=make_node_mesh(n_nodes))   # fresh mesh
+    same_store(st.store, svc.store, sched + " mesh-recover ")
+    same_meta(st, svc)
+    st_local = recover(d)                           # local engine, same WAL
+    same_store(st_local.store, st.store, sched + " local-vs-mesh ")
+    same_meta(st_local, svc)
+    shutil.rmtree(d)
+    print("MESH-RECOVER-OK", sched, st.n_blocks)
+
+# drop_node crash: prefix conformance + recovery onto a replacement mesh
+ref_d, c_d = tempfile.mkdtemp(), tempfile.mkdtemp()
+ref, ref_mgr, crashed = session(ref_d, "postsi", mesh, n_ticks=10)
+assert not crashed
+faults = FaultSchedule([Fault("drop_node", "retire", 3)])
+svc, mgr, crashed = session(c_d, "postsi", mesh, faults=faults, n_ticks=10)
+assert crashed
+ref_blocks = wal.scan(wal_path(ref_d)).blocks
+c_blocks = wal.scan(wal_path(c_d)).blocks
+assert 0 < len(c_blocks) < len(ref_blocks)
+for i, (a, b) in enumerate(zip(c_blocks, ref_blocks)):
+    for k in ("op_kind", "op_key", "op_val", "host", "tid",
+              "status", "s", "c"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{i}:{k}")
+    assert (a["clock"], a["gc_clock"]) == (b["clock"], b["gc_clock"])
+st = recover(c_d, mesh=make_node_mesh(n_nodes))     # replacement mesh
+assert st.n_blocks == len(c_blocks)
+# reattach on the replacement mesh and keep serving
+mgr2 = DurabilityManager(c_d, fsync_every=1)
+svc2 = TxnService(n_keys=n_nodes*kpn, T=T, sched="postsi", n_nodes=n_nodes,
+                  retry=RetryPolicy(max_attempts=6), seed=0,
+                  mesh=make_node_mesh(n_nodes), durability=mgr2)
+gen = ycsb_txn_gen(np.random.RandomState(999), n_nodes, kpn, theta=0.6)
+svc2.run_streaming([4]*4, gen, B=2, K=2)
+assert svc2.verify() == []
+mgr2.close()
+shutil.rmtree(ref_d); shutil.rmtree(c_d)
+print("MESH-DROPNODE-OK", len(c_blocks), "of", len(ref_blocks))
+"""))
+
+
+# ------------------------------------------------------- chaos (pinned seed)
+def test_chaos_pinned_failure_schedule(tmp_path):
+    """CI chaos leg: REPRO_FAULT_SEED ∈ {11, 23, 47} selects a pinned
+    random failure schedule; whatever it injects, the durable log keeps
+    the watermark rules, recovery replays it exactly, and the resubmission
+    harness commits everything exactly once or drops it.  Pure-kill
+    schedules additionally satisfy the prefix property."""
+    seed = int(os.environ.get("REPRO_FAULT_SEED", "11"))
+    ref_d, c_d = tmp_path / "ref", tmp_path / "chaos"
+    ref, ref_mgr = _service(ref_d, "postsi", snapshot_every=4)
+    assert not _serve(ref, ref_mgr, n_ticks=12)
+    faults = FaultSchedule.random(seed)
+    svc, mgr = _service(c_d, "postsi", snapshot_every=4, faults=faults)
+    crashed = _serve(svc, mgr, n_ticks=12)
+    blocks = wal.scan(wal_path(str(c_d))).blocks
+    _assert_wal_invariants(blocks)
+    st = recover(str(c_d))                       # replay determinism check
+    assert st.n_blocks == len(blocks)
+    if crashed:
+        if faults.pure_kill:
+            _assert_wal_prefix(blocks,
+                               wal.scan(wal_path(str(ref_d))).blocks)
+        _restart_exactly_once(c_d, svc)
+    else:
+        _assert_state_matches_live(st, svc)
+        assert svc.verify() == []
+
+
+# ------------------------------------------------- hypothesis (slow leg)
+def _recovery_property_case(seed, snapshot_every, shape):
+    """One property instance: commit-exactly-once-or-dropped holds across
+    the crash (durable-before-ack, WAL-deduped resubmission), the GC
+    watermark and engine clock are monotone over every durable record,
+    replay reproduces the log, and pure-kill schedules leave a
+    bit-identical prefix of the uninterrupted run's WAL."""
+    import shutil
+    import tempfile
+    B, K = shape
+    ref_d, c_d = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        ref, ref_mgr = _service(ref_d, "postsi",
+                                snapshot_every=snapshot_every)
+        assert not _serve(ref, ref_mgr, n_ticks=10, seed=seed, B=B, K=K)
+        faults = FaultSchedule.random(seed)
+        svc, mgr = _service(c_d, "postsi", snapshot_every=snapshot_every,
+                            faults=faults)
+        crashed = _serve(svc, mgr, n_ticks=10, seed=seed, B=B, K=K)
+        blocks = wal.scan(wal_path(str(c_d))).blocks
+        _assert_wal_invariants(blocks)
+        recover(str(c_d))                        # raises on any divergence
+        if crashed:
+            if faults.pure_kill:
+                _assert_wal_prefix(
+                    blocks, wal.scan(wal_path(str(ref_d))).blocks)
+            _restart_exactly_once(c_d, svc)
+        else:
+            rep = svc.report()
+            assert rep.committed + rep.dropped == rep.admitted
+            assert svc.verify() == []
+    finally:
+        shutil.rmtree(ref_d, ignore_errors=True)
+        shutil.rmtree(c_d, ignore_errors=True)
+
+
+@pytest.mark.slow
+def test_recovery_property_exactly_once_and_monotone_watermark():
+    """Random failure schedules × random streams (see
+    _recovery_property_case for the property).  Hypothesis-driven where
+    available; otherwise a pinned pseudo-random sweep of the same property
+    — the image may not ship hypothesis, and the guarantee must not be
+    skippable with it."""
+    try:
+        from hypothesis import given, settings, strategies as st_
+    except ImportError:
+        shapes = [(1, 1), (2, 2), (2, 3)]
+        for i, seed in enumerate((11, 23, 47, 1009, 4099, 9001)):
+            _recovery_property_case(seed, 2 + seed % 4, shapes[i % 3])
+        return
+
+    @settings(max_examples=8, deadline=None)
+    @given(st_.integers(0, 10_000), st_.integers(2, 5),
+           st_.sampled_from([(1, 1), (2, 2), (2, 3)]))
+    def run(seed, snapshot_every, shape):
+        _recovery_property_case(seed, snapshot_every, shape)
+
+    run()

@@ -1,0 +1,132 @@
+"""Unit tests for the runtime fault plane: the straggler detector
+(runtime/straggler.py — seed code with zero coverage) and the fault
+injector that generalizes it (runtime/faults.py, DESIGN.md §9).
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import Fault, FaultSchedule, InjectedCrash, StragglerPolicy
+
+
+# --------------------------------------------------------------- straggler
+class TestStragglerPolicy:
+    def test_no_flag_before_window_warms_up(self):
+        p = StragglerPolicy()
+        # fewer than 8 observations: even a 100x outlier is not flagged
+        for step in range(7):
+            assert not p.record(step, 1.0)
+        assert not p.record(7, 100.0)
+
+    def test_flags_outlier_after_warmup(self):
+        p = StragglerPolicy(threshold=4.0)
+        for step in range(8):
+            p.record(step, 1.0 + 0.01 * (step % 3))
+        assert p.record(8, 50.0, worker=0)
+        assert p.flags and p.flags[-1][0] == 8 and p.flags[-1][1] == 0
+
+    def test_threshold_scales_sensitivity(self):
+        def flagged_at(threshold, dt):
+            p = StragglerPolicy(threshold=threshold)
+            for step in range(8):
+                p.record(step, 1.0 + 0.05 * (step % 4))
+            return p.record(8, dt)
+        # a mild outlier trips a tight threshold but not a loose one
+        assert flagged_at(2.0, 1.6)
+        assert not flagged_at(20.0, 1.6)
+
+    def test_per_worker_isolation(self):
+        p = StragglerPolicy()
+        for step in range(10):
+            p.record(step, 1.0, worker=0)
+            p.record(step, 10.0, worker=1)    # slow but *consistent*
+        assert not p.record(10, 10.0, worker=1)   # its own model: normal
+        assert p.record(10, 3.0, worker=0)        # 3x its model: straggler
+
+    def test_window_forgets_old_regime(self):
+        p = StragglerPolicy(window=8)
+        for step in range(8):
+            p.record(step, 1.0)
+        for step in range(8, 24):     # regime change: 5x slower, stabilizes
+            p.record(step, 5.0 + 0.1 * (step % 4))
+        assert not p.record(24, 5.2)  # old fast regime fell out of window
+
+    def test_grad_scale_unbiased(self):
+        p = StragglerPolicy(action="skip")
+        assert p.grad_scale(8, 0) == 1.0
+        assert p.grad_scale(8, 2) == pytest.approx(8 / 6)
+        assert p.grad_scale(1, 1) == 1.0      # never divides by zero
+
+    def test_rebalance_share_inverse_mean(self):
+        p = StragglerPolicy(action="rebalance")
+        for step in range(4):
+            p.record(step, 1.0, worker=0)
+            p.record(step, 3.0, worker=1)
+        s0, s1 = p.share(0, 2), p.share(1, 2)
+        assert s0 == pytest.approx(0.75) and s1 == pytest.approx(0.25)
+        assert p.share(7, 2) == 0.5           # unknown worker: uniform
+
+
+# ------------------------------------------------------------ fault plane
+class TestFaultSchedule:
+    def test_kill_fires_on_nth_visit_only(self):
+        s = FaultSchedule([Fault("kill", "retire", 2)])
+        s.at_retire()
+        s.at_retire()
+        with pytest.raises(InjectedCrash, match="kill at retire#2"):
+            s.at_retire()
+        assert s.crashed is not None and s.crashed.at == 2
+
+    def test_seams_counted_independently(self):
+        s = FaultSchedule([Fault("kill", "post_log", 1)])
+        for _ in range(5):
+            s.at_dispatch()
+            s.at_retire()
+        s.post_log()
+        with pytest.raises(InjectedCrash):
+            s.post_log()
+
+    def test_delay_budget_is_finite(self):
+        s = FaultSchedule([Fault("delay_retire", "retire", 0, arg=3)])
+        s.at_retire()                         # arms the budget
+        assert [s.delay_retire() for _ in range(5)] == \
+            [True, True, True, False, False]
+        assert s.delays_taken == 3
+
+    def test_fault_fires_once(self):
+        s = FaultSchedule([Fault("delay_retire", "retire", 0, arg=1)])
+        s.at_retire()
+        assert s.delay_retire()
+        s.at_retire()                         # visit 1: fault already fired
+        assert not s.delay_retire()
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            Fault("segfault", "retire", 0)
+
+    def test_pure_kill_classification(self):
+        assert FaultSchedule([Fault("kill", "retire", 1),
+                              Fault("torn_tail", "wal", 0, arg=9)]).pure_kill
+        assert not FaultSchedule(
+            [Fault("delay_retire", "retire", 0, arg=1),
+             Fault("kill", "retire", 1)]).pure_kill
+
+    def test_random_is_seed_deterministic(self):
+        a, b = FaultSchedule.random(123), FaultSchedule.random(123)
+        assert [(f.kind, f.point, f.at, f.arg) for f in a.faults] == \
+            [(f.kind, f.point, f.at, f.arg) for f in b.faults]
+        c = FaultSchedule.random(124)
+        assert a.faults != c.faults or a.seed != c.seed
+        # every random schedule carries exactly one terminal kill
+        for seed in range(30):
+            s = FaultSchedule.random(seed)
+            assert sum(f.kind == "kill" for f in s.faults) == 1
+
+    def test_mutilate_wal_tears_scheduled_bytes(self, tmp_path):
+        p = tmp_path / "wal.log"
+        p.write_bytes(b"x" * 100)
+        s = FaultSchedule([Fault("kill", "retire", 0),
+                           Fault("torn_tail", "wal", 0, arg=30)])
+        assert s.mutilate_wal(str(p)) == 30
+        assert p.stat().st_size == 70
+        assert FaultSchedule([Fault("kill", "retire", 0)]) \
+            .mutilate_wal(str(p)) == 0        # no tear scheduled
