@@ -164,6 +164,7 @@ def _service(n, T, n_ticks, sched: str = "postsi") -> Dict:
 def run(smoke: bool = False) -> Dict:
     import jax
     from repro.core import SCHEDULERS
+    from repro.core.substrate import effective_mesh_backend
     if smoke:
         n_waves, T = SMOKE["n_waves"], SMOKE["T"]
         node_counts, scheds = SMOKE["node_counts"], SMOKE["scheds"]
@@ -177,7 +178,11 @@ def run(smoke: bool = False) -> Dict:
         "config": {"workload": "smallbank", "n_waves": n_waves,
                    "wave_size": T, "n_keys": N_KEYS,
                    "node_counts": list(node_counts),
-                   "device_count": jax.device_count(), "smoke": smoke},
+                   "device_count": jax.device_count(), "smoke": smoke,
+                   # honest label: what the mesh rows below actually ran —
+                   # a 'pallas' process default degrades to 'jnp' on the
+                   # mesh path (substrate.mesh_kernels warns and counts)
+                   "kernel_backend": effective_mesh_backend()},
         "scaling": _scaling(scheds, node_counts, n_waves, T),
         "executor": _executor(scheds, n_max, n_waves, T),
         "service": _service(n_max, T, svc_ticks),

@@ -113,6 +113,36 @@ def _service() -> None:
          f"md={a['md_events']} ai={a['ai_events']}")
 
 
+def _planner() -> None:
+    """Planned-vs-optimistic goodput crossover (DESIGN.md §10); merges the
+    ``planned_crossover`` section into BENCH_engine.json.  With ``--smoke``
+    a trimmed sweep also lands in artifacts/planner_smoke/ for CI upload."""
+    import json
+
+    from . import bench_engine
+    smoke = "--smoke" in _FLAGS
+    cross = bench_engine.run_planned_crossover(smoke=smoke)
+    bench_engine.write_crossover(cross)   # quiet: keep stdout pure CSV
+    for r in cross["rows"]:
+        p = r["planned"]
+        _csv(f"planner/planned/theta{r['theta']}/T{r['T']}",
+             p["wall_s"] * 1e6 / r["n_txn"],
+             f"goodput={p['goodput_tps']:.0f}tps lanes={p['lane_waves']} "
+             f"plan={p['plan_s']*1e3:.1f}ms wins={r['planned_wins']}")
+        for sched in cross["config"]["baselines"]:
+            b = r[sched]
+            _csv(f"planner/{sched}/theta{r['theta']}/T{r['T']}",
+                 b["wall_s"] * 1e6 / r["n_txn"],
+                 f"goodput={b['goodput_tps']:.0f}tps "
+                 f"abort={100 * b['abort_rate']:.1f}%")
+    if smoke:
+        out_dir = os.path.join("artifacts", "planner_smoke")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "planner_crossover.json"), "w") as f:
+            json.dump(cross, f, indent=2)
+            f.write("\n")
+
+
 def _dist() -> None:
     """Distributed wave engine on an 8-virtual-device mesh; also refreshes
     BENCH_dist.json.  Runs in a child python: the XLA device count is locked
@@ -217,6 +247,7 @@ BLOCKS = {
     "figures": _engine_figures,
     "engine": _engine_executor,
     "service": _service,
+    "planner": _planner,
     "dist": _dist,
     "kernels": _kernel_micro,
     "roofline": _roofline_headlines,

@@ -35,6 +35,8 @@ pins every backend route bit-identical on both.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 from jax import lax
 
@@ -42,6 +44,27 @@ from repro.kernels import KernelConfig, ops, resolve
 from .commit_phase import build_potential
 from .store import INF, MVStore
 from . import store as store_ops
+
+# mesh-degrade accounting: how many times a compiled-Mosaic ``pallas``
+# request was served by the ``jnp`` reference on the mesh path, surfaced so
+# benchmarks can label affected rows honestly (``benchmarks.bench_dist``)
+# instead of silently reporting pallas numbers that never ran as pallas
+_degrades = 0
+_degrade_warned = False
+
+
+def mesh_degrade_count() -> int:
+    """Times ``mesh_kernels`` degraded a ``pallas`` request to ``jnp``."""
+    return _degrades
+
+
+def effective_mesh_backend(kernels: KernelConfig | str | None = None) -> str:
+    """Honest label for what the mesh path runs under this request:
+    the resolved backend name, or ``"jnp (degraded from pallas)"``."""
+    cfg = resolve(kernels)
+    if cfg.backend == "pallas":
+        return "jnp (degraded from pallas)"
+    return cfg.backend
 
 
 def mesh_kernels(kernels: KernelConfig | str | None = None) -> KernelConfig:
@@ -51,9 +74,26 @@ def mesh_kernels(kernels: KernelConfig | str | None = None) -> KernelConfig:
     ``pallas_interpret``/``jnp`` pass through.  The mesh drivers normalize
     through this BEFORE using the config as a jit/lru cache key, so
     ``pallas`` and ``jnp`` requests share one trace instead of compiling
-    identical programs twice."""
+    identical programs twice.
+
+    The degradation is *not* silent: the first occurrence per process emits
+    a ``RuntimeWarning`` and every occurrence bumps ``mesh_degrade_count()``
+    so callers (benchmarks, services) can report what actually ran."""
     cfg = resolve(kernels)
-    return KernelConfig("jnp") if cfg.backend == "pallas" else cfg
+    if cfg.backend == "pallas":
+        global _degrades, _degrade_warned
+        _degrades += 1
+        if not _degrade_warned:
+            _degrade_warned = True
+            warnings.warn(
+                "KernelConfig('pallas') degrades to the bit-identical 'jnp' "
+                "reference on the mesh path (compiled-Mosaic kernels are not "
+                "lowered inside shard_map bodies); mesh results are correct "
+                "but do not measure compiled kernels — request "
+                "'pallas_interpret' or 'jnp' explicitly to silence this",
+                RuntimeWarning, stacklevel=2)
+        return KernelConfig("jnp")
+    return cfg
 
 
 class LocalSubstrate:

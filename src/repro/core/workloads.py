@@ -305,6 +305,95 @@ def ycsb_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
     return waves
 
 
+CHAIN_O = 2
+
+
+def chain_txn(prev_key, link_key: int, kind: str = "raw",
+              n_ops: int = CHAIN_O, val: int = 1):
+    """One link of a deliberate intra-wave dependency chain (DESIGN.md §10).
+
+    Every other generator here NOP-dedups duplicate keys *within* a txn and
+    draws keys independently *across* txns, so same-wave dependency chains
+    only arise by collision.  Chains build them on purpose — the structure
+    the planner's lanes exist to serialize:
+
+    * ``raw`` — READ the predecessor's ``prev_key`` (head links skip it),
+      then RMW this link's own fresh ``link_key``: a write→read chain
+      across consecutive txns.  Optimistic waves commit these but every
+      reader sees the *wave-start* snapshot, never its predecessor; planned
+      lanes place each link after its predecessor's commit.
+    * ``waw`` — RMW ``link_key`` (the chain's single shared key; callers
+      pass ``prev_key`` through as ``link_key``): successive RMWs of one
+      key, which rule 4(a) serializes the hard way — in an optimistic wave
+      all but the first link lose their update and abort.
+
+    Pure function of its arguments (the rng lives in ``chain_waves``);
+    returns ``(op_kind, op_key, op_val)`` as ``[n_ops]`` int32 arrays."""
+    if kind not in ("raw", "waw"):
+        raise ValueError(f"unknown chain link kind {kind!r}")
+    if n_ops < CHAIN_O:
+        raise ValueError(f"chain links need n_ops >= {CHAIN_O}, got {n_ops}")
+    op_kind = np.zeros(n_ops, np.int32)
+    op_key = np.zeros(n_ops, np.int32)
+    op_val = np.zeros(n_ops, np.int32)
+    if kind == "raw" and prev_key is not None:
+        op_kind[0], op_key[0] = READ, prev_key
+    op_kind[1], op_key[1], op_val[1] = RMW, link_key, val
+    return op_kind, op_key, op_val
+
+
+def chain_waves(rng: np.random.RandomState, n_waves: int, T: int,
+                n_nodes: int, keys_per_node: int, chain_len: int = 4,
+                kind: str = "raw", n_ops: int = CHAIN_O,
+                tid0: int = 1) -> List[Wave]:
+    """Waves of intra-wave dependency chains: consecutive txns
+    ``[t, t+chain_len)`` form one chain on one host node (rows are tid
+    order, so chain depth == conflict-chain depth for the planner's layered
+    coloring).  ``kind``: ``raw`` / ``waw`` as in ``chain_txn``, or
+    ``mixed`` — chains alternate raw and waw links (both edge flavors in
+    one wave).  Fresh keys come from a per-host shuffled permutation of the
+    host's partition, so chains never collide with each other and every key
+    obeys the partition invariant (``key % n_nodes == host``)."""
+    if kind not in ("raw", "waw", "mixed"):
+        raise ValueError(f"unknown chain kind {kind!r}")
+    waves = []
+    for w in range(n_waves):
+        perms = [rng.permutation(keys_per_node) for _ in range(n_nodes)]
+        used = np.zeros(n_nodes, np.int64)
+
+        def fresh(h):
+            if used[h] >= keys_per_node:
+                raise ValueError(
+                    f"host {h} partition exhausted: T={T} chains need more "
+                    f"than keys_per_node={keys_per_node} fresh keys")
+            k = _key(int(perms[h][used[h]]), h, n_nodes)
+            used[h] += 1
+            return k
+
+        op_kind = np.zeros((T, n_ops), np.int32)
+        op_key = np.zeros((T, n_ops), np.int32)
+        op_val = np.zeros((T, n_ops), np.int32)
+        host = np.zeros(T, np.int32)
+        h = prev = None
+        for t in range(T):
+            pos = t % chain_len
+            if pos == 0:                       # new chain, new host
+                h, prev = int(rng.randint(0, n_nodes)), None
+            link_kind = kind if kind != "mixed" else \
+                ("raw" if pos % 2 == 0 else "waw")
+            if link_kind == "waw":
+                # continue on the shared chain key (head draws it fresh)
+                link = prev if prev is not None else fresh(h)
+            else:
+                link = fresh(h)
+            op_kind[t], op_key[t], op_val[t] = chain_txn(
+                prev, link, link_kind, n_ops, val=int(rng.randint(1, 10)))
+            host[t] = h
+            prev = link
+        waves.append(_mk_wave(op_kind, op_key, op_val, host, tid0 + w * T))
+    return waves
+
+
 # ---------------------------------------------------------------------------
 # open-stream arrival processes (DESIGN.md §8)
 # ---------------------------------------------------------------------------

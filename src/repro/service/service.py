@@ -32,8 +32,8 @@ from typing import Callable, Dict, Iterable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COMMITTED, Wave, WaveOut, make_store, run_block, \
-    step_wave
+from repro.core import ABORTED, COMMITTED, Wave, WaveOut, make_store, \
+    run_block, step_wave
 from repro.core.verify import final_values_ok, verify_cv, verify_si
 from repro.core.workloads import SMALLBANK_O, smallbank_txn, ycsb_txn
 
@@ -70,6 +70,11 @@ class ServiceReport:
     gc: Dict[str, int]
     # streaming plane (DESIGN.md §8): 0 under the per-wave step loop
     blocks: int = 0        # fused block dispatches (>= waves / B)
+    # planner plane (DESIGN.md §10): all 0 without a planner knob
+    planned_waves: int = 0       # waves served through conflict-free lanes
+    planned_lane_waves: int = 0  # lane + spill waves they expanded to
+    planned_spilled: int = 0     # txns spilled past the lane budget
+    planner_switches: int = 0    # hybrid mode flips (either direction)
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -93,9 +98,11 @@ class TxnService:
                  n_nodes: int = 8, retry: Optional[RetryPolicy] = None,
                  gc_block: bool = False, max_queue: Optional[int] = None,
                  host_skew: Optional[np.ndarray] = None, seed: int = 0,
-                 mesh=None, kernels=None, durability=None, faults=None):
+                 mesh=None, kernels=None, durability=None, faults=None,
+                 planner=None):
         from repro.core.substrate import mesh_kernels
         from repro.kernels import resolve
+        from repro.planner import HybridSwitch
         self.sched = sched
         self.n_nodes = n_nodes
         self.host_skew = host_skew
@@ -140,6 +147,15 @@ class TxnService:
         # an existing log into this fresh service; the schedule fires at
         # the dispatch/retire/post-log seams
         self.faults = faults
+        # planner plane (DESIGN.md §10): ``None`` — always optimistic;
+        # ``"hybrid"`` — switch to planned lanes when the trailing abort
+        # rate crosses the AIMD ceiling and back when contention drops;
+        # ``"planned"`` — plan every wave; or a configured HybridSwitch
+        self.planner = (HybridSwitch.from_name(planner)
+                        if isinstance(planner, str) else planner)
+        self.planned_waves = 0        # waves served through the planner
+        self.planned_lane_waves = 0   # lane + spill waves they expanded to
+        self.planned_spilled = 0      # txns spilled past the lane budget
         self.durability = durability
         if durability is not None:
             durability.attach(self)
@@ -167,6 +183,10 @@ class TxnService:
             self.idle_ticks += 1
             return None
         wave, slots = formed
+        if self.planner is not None and self.planner.planned:
+            out = self._step_planned(wave, slots)
+            self._wall_s += time.perf_counter() - t0
+            return out
         self.wave_idx += 1
         wm = self._watermark()
         if self.faults is not None:
@@ -188,9 +208,61 @@ class TxnService:
             if self.faults is not None:
                 self.faults.post_log(self)
         self._route(out, slots)
+        if self.planner is not None:
+            self.planner.observe_optimistic(
+                len(slots), int((out.status[:len(slots)] == ABORTED).sum()))
         if self.durability is not None:
             self.durability.maybe_snapshot(self, pipeline_empty=True)
         self._wall_s += time.perf_counter() - t0
+        return out
+
+    def _step_planned(self, wave, slots):
+        """Planned-mode tick half (DESIGN.md §10): plan the formed wave
+        into conflict-free lanes and execute them as ONE pow2 wave block
+        through the configured data plane (local or mesh — same engine
+        rules per lane), then route the merged per-row outcomes exactly
+        like an optimistic wave.  Lane rows commit abort-free; only spilled
+        rows can re-enter the retry calendar."""
+        from repro.planner.sched import run_wave_planned
+        wave_idx0 = self.wave_idx + 1
+        wm = self._watermark()
+        if self.faults is not None:
+            self.faults.at_dispatch(self)
+        self.store, self.clock, pw = run_wave_planned(
+            self.store, wave, self.clock, wave_idx0=wave_idx0,
+            next_tid=self.former.next_tid, sched=self.sched,
+            n_nodes=self.n_nodes, mesh=self.mesh, kernels=self.kernels,
+            watermark=wm, host_skew=self.host_skew, gc_block=self.gc.block,
+            max_lanes=self.planner.max_lanes)
+        if self.faults is not None:
+            self.faults.at_retire(self)
+        # the planner relabeled every row with fresh contiguous tids (lane
+        # waves need their own [tid0, tid0+T) ranges); advance the former's
+        # counter past them and point each request at the tid it ran under,
+        # so history rows, requests and store versions all agree
+        self.wave_idx += pw.waves_consumed
+        self.former.next_tid += pw.tids_consumed
+        out = pw.merged
+        self.gc.observe(out, int(self.clock))
+        self.history.append((pw.exec_tid, out))
+        self.planned_waves += 1
+        self.planned_lane_waves += pw.lane_waves + pw.spill_waves
+        self.planned_spilled += pw.plan.n_spilled
+        if self.durability is not None:
+            # the dispatched block IS an ordinary wave block: logged as-is,
+            # recovery replays it through run_block under the base sched
+            self.durability.log_block(pw.stacked, wave_idx0, wm, pw.outs,
+                                      int(self.clock), self.gc.clock)
+            if self.faults is not None:
+                self.faults.post_log(self)
+        for i, req in enumerate(slots):
+            req.tid = int(pw.exec_tid[i])
+            req.tids[-1] = req.tid
+        self._route(out, slots)
+        self.planner.observe_planned(
+            len(slots), pw.plan.conflicted + pw.plan.n_spilled)
+        if self.durability is not None:
+            self.durability.maybe_snapshot(self, pipeline_empty=True)
         return out
 
     def _route(self, out, slots):
@@ -359,6 +431,11 @@ class TxnService:
             evicted_visible=self.gc.evicted_visible,
             gc=self.gc.report(),
             blocks=self.blocks,
+            planned_waves=self.planned_waves,
+            planned_lane_waves=self.planned_lane_waves,
+            planned_spilled=self.planned_spilled,
+            planner_switches=(self.planner.switches
+                              if self.planner is not None else 0),
         )
 
     def verify(self) -> List[str]:

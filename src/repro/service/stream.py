@@ -195,8 +195,19 @@ class StreamingDriver:
         block is held while the device is busy (retiring one finished block
         instead, which feeds retries back to the former) and shipped only
         when the pipeline is empty — the device never idles behind a
-        hoarded buffer, and no tick ships NOP filler."""
+        hoarded buffer, and no tick ships NOP filler.
+
+        With a hybrid planner attached (DESIGN.md §10) and in planned mode,
+        the pipeline is first drained (planned lanes must see every earlier
+        wave's commits — and routed retries re-enter before the planner
+        forms) and the tick is served synchronously through the service's
+        planned step path; when the policy drops back to optimistic the
+        pipelined path resumes on the next tick."""
         svc = self.svc
+        if svc.planner is not None and svc.planner.planned:
+            self.flush()
+            svc.step()
+            return
         svc.tick += 1
         t0 = time.perf_counter()
         if self._buf_T is None:            # block boundary: propose sizes
@@ -312,9 +323,11 @@ class StreamingDriver:
                 svc.faults.post_log(svc)   # kill: durable-but-unacked window
         for out_j, slots in per_wave:
             svc._route(out_j, slots)
+            n_abort = int((out_j.status[:len(slots)] == ABORTED).sum())
             if self.sizer is not None:
-                n_abort = int((out_j.status[:len(slots)] == ABORTED).sum())
                 self.sizer.observe(len(slots), n_abort)
+            if svc.planner is not None:
+                svc.planner.observe_optimistic(len(slots), n_abort)
         if svc.durability is not None:
             svc.durability.maybe_snapshot(
                 svc, pipeline_empty=not self._inflight and not self._buf)

@@ -1,0 +1,361 @@
+"""Planner-plane conformance (src/repro/planner/, DESIGN.md §10).
+
+Three layers:
+
+* **graph/lanes units + hypothesis properties** — the conflict graph finds
+  exactly the declared WW/WR/RW edges (NOP-aware, dense == grouped), and
+  the layered coloring's invariants hold on arbitrary op arrays: lanes are
+  pairwise conflict-free, lane union + spill covers the wave exactly once,
+  every conflict edge is oriented forward (topological in lane order), and
+  nothing spills without a budget.
+* **planned-vs-oracle differential** — the ``"planned"`` scheduler commits
+  with ZERO aborts and lands in exactly the sequential oracle's state
+  (``core/seq.py`` replayed in tid order: same commit set — everything —
+  and same final store values) on random zipfian and deliberate chain
+  workloads, for every base scheduler, on both kernel backends and both
+  substrates (the mesh case runs in a subprocess with 8 virtual devices,
+  bit-identical to local).
+* **hybrid service** — the switch enters planned mode when the trailing
+  abort rate crosses the AIMD ceiling, leaves it when the planned waves'
+  conflict fraction drops, and served histories stay verifier-clean.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import ABORTED, COMMITTED, NOP, READ, RMW, WRITE, make_store
+from repro.core.engine import SCHEDULERS
+from repro.core.seq import SeqScheduler
+from repro.core.verify import final_values_ok, verify_cv, verify_si
+from repro.core.workloads import chain_waves, ycsb_waves
+from repro.planner import (ALL_SCHEDULERS, PLANNED, HybridSwitch, Plan,
+                           PlannerError, color_lanes, conflict_graph,
+                           plan_wave, run_workload_any,
+                           run_workload_planned)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_NODES, KPN = 4, 32
+N_KEYS = N_NODES * KPN
+
+
+# ------------------------------------------------------------------ graph
+def test_conflict_graph_edges_by_hand():
+    # t0 writes 5; t1 reads 5; t2 RMWs 5; t3 touches 9 only; t4 all-NOP
+    op_kind = np.array([[WRITE, NOP], [READ, NOP], [RMW, NOP],
+                        [READ, WRITE], [NOP, NOP]], np.int32)
+    op_key = np.array([[5, 0], [5, 0], [5, 0], [9, 9], [5, 5]], np.int32)
+    g = conflict_graph(op_kind, op_key)
+    assert g.rw[1, 0] and g.rw[2, 0]        # 1,2 read what 0 writes
+    assert g.wr[0, 1] and not g.rw[0, 1]    # 0 reads nothing
+    assert g.ww[0, 2] and g.ww[2, 0]        # WRITE vs RMW on key 5
+    # t3 reads its own write key — not a conflict with anyone
+    assert not g.conflict[3].any()
+    # all-NOP row: isolated even though its padded key slots say 5
+    assert not g.conflict[4].any() and not g.active[4]
+    assert (g.conflict == g.conflict.T).all()
+    assert not g.conflict.diagonal().any()
+
+
+def test_conflict_graph_dense_equals_grouped():
+    rng = np.random.RandomState(0)
+    for _ in range(30):
+        T, O = int(rng.randint(1, 24)), int(rng.randint(1, 6))
+        op_kind = rng.randint(0, 4, (T, O)).astype(np.int32)
+        op_key = rng.randint(0, 10, (T, O)).astype(np.int32)
+        gd = conflict_graph(op_kind, op_key, method="dense")
+        gg = conflict_graph(op_kind, op_key, method="grouped")
+        np.testing.assert_array_equal(gd.conflict, gg.conflict)
+        np.testing.assert_array_equal(gd.rw, gg.rw)
+        np.testing.assert_array_equal(gd.ww, gg.ww)
+
+
+# ------------------------------------------------------------------ lanes
+def _assert_plan_invariants(plan: Plan, conflict: np.ndarray,
+                            max_lanes=None):
+    T = conflict.shape[0]
+    # partition: lane union + spill covers every row exactly once
+    cover = np.concatenate([*plan.lanes, plan.spill]) if T else np.arange(0)
+    assert sorted(cover.tolist()) == list(range(T))
+    # lanes pairwise conflict-free
+    for lane in plan.lanes:
+        assert not conflict[np.ix_(lane, lane)].any()
+    # topological: conflicting laned pairs execute in row (tid) order
+    lane_of = plan.lane_of
+    for i, j in zip(*np.nonzero(np.triu(conflict, 1))):
+        if lane_of[i] >= 0 and lane_of[j] >= 0:
+            assert lane_of[i] < lane_of[j]
+    if max_lanes is None:
+        assert plan.n_spilled == 0
+    else:
+        assert plan.n_lanes <= max_lanes
+
+
+def test_color_lanes_budget_and_spill():
+    # a pure WAW chain of depth 6: one txn per lane, budget 3 spills 3
+    op_kind = np.full((6, 1), RMW, np.int32)
+    op_key = np.zeros((6, 1), np.int32)
+    g = conflict_graph(op_kind, op_key)
+    full = color_lanes(g)
+    assert full.n_lanes == 6 and full.n_spilled == 0
+    _assert_plan_invariants(full, g.conflict)
+    bounded = color_lanes(g, max_lanes=3)
+    assert bounded.n_lanes == 3 and bounded.n_spilled == 3
+    _assert_plan_invariants(bounded, g.conflict, max_lanes=3)
+    assert full.conflicted == bounded.conflicted == 6
+
+
+def test_plan_invariants_random_sweep():
+    """Seeded stand-in for the hypothesis property below — always runs,
+    even where hypothesis is absent (it skips)."""
+    rng = np.random.RandomState(42)
+    for _ in range(60):
+        T, O = int(rng.randint(1, 24)), int(rng.randint(1, 5))
+        op_kind = rng.randint(0, 4, (T, O)).astype(np.int32)
+        op_key = rng.randint(0, int(rng.randint(2, 12)), (T, O)).astype(
+            np.int32)
+        max_lanes = None if rng.rand() < 0.5 else int(rng.randint(1, 6))
+        plan = plan_wave(op_kind, op_key, max_lanes=max_lanes)
+        g = conflict_graph(op_kind, op_key)
+        _assert_plan_invariants(plan, g.conflict, max_lanes)
+
+
+def test_plan_invariants_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=120, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 24), st.integers(1, 5),
+           st.integers(2, 12),
+           st.one_of(st.none(), st.integers(1, 6)))
+    def check(seed, T, O, n_keys, max_lanes):
+        rng = np.random.RandomState(seed)
+        op_kind = rng.randint(0, 4, (T, O)).astype(np.int32)
+        op_key = rng.randint(0, n_keys, (T, O)).astype(np.int32)
+        plan = plan_wave(op_kind, op_key, max_lanes=max_lanes)
+        g = conflict_graph(op_kind, op_key)
+        _assert_plan_invariants(plan, g.conflict, max_lanes)
+
+    check()
+
+
+# ------------------------------------------- planned vs sequential oracle
+def _oracle_replay(waves):
+    """Drive core/seq.py one txn at a time in tid order; return final
+    per-key values (the serial baseline everything must commit into)."""
+    seq = SeqScheduler(N_KEYS)
+    for w in waves:
+        op_kind = np.asarray(w.op_kind)
+        op_key = np.asarray(w.op_key)
+        op_val = np.asarray(w.op_val)
+        for t in range(op_kind.shape[0]):
+            tid = seq.begin()
+            for o in range(op_kind.shape[1]):
+                kind, k, v = (int(op_kind[t, o]), int(op_key[t, o]),
+                              int(op_val[t, o]))
+                if kind == NOP:
+                    continue
+                if kind == READ:
+                    seq.read(tid, k)
+                elif kind == WRITE:
+                    seq.write(tid, k, v)
+                else:
+                    seq.write(tid, k, seq.read(tid, k) + v)
+            seq.commit(tid)
+    return {k: seq.versions[k][-1].value
+            for k in range(N_KEYS) if seq.versions[k]}
+
+
+def _mixed_workload(seed):
+    rng = np.random.RandomState(seed)
+    waves = ycsb_waves(rng, 2, 12, N_NODES, KPN, theta=0.95, read_frac=0.3,
+                      dist_frac=0.2, n_ops=4)
+    waves += chain_waves(rng, 2, 12, N_NODES, KPN, chain_len=4, kind="mixed",
+                         tid0=1 + 2 * 12)
+    return waves
+
+
+def _assert_matches_oracle(store, history, waves):
+    # zero aborts, everything commits
+    for tids, out in history:
+        assert (out.status == COMMITTED).all()
+    # SI-valid history, store consistent with it
+    assert verify_si(history) == []
+    assert final_values_ok(store, history, N_KEYS) == []
+    # final values equal the serial tid-order oracle: planned execution is
+    # conflict-equivalent to program order (lanes.py layering argument)
+    expect = _oracle_replay(waves)
+    val = np.asarray(store.val)
+    head = np.asarray(store.head)
+    for k, v in expect.items():
+        assert int(val[k, head[k]]) == v, f"key {k}"
+
+
+@pytest.mark.parametrize("base", ["postsi", "cv", "si"])
+def test_planned_matches_oracle_local(base):
+    waves = _mixed_workload(seed=1)
+    store = make_store(N_KEYS, 8)
+    store, history, stats = run_workload_planned(
+        store, waves, sched=base, n_nodes=N_NODES, kernels="jnp")
+    assert stats.aborted == 0 and stats.spilled_txns == 0
+    _assert_matches_oracle(store, history, waves)
+    if base == "cv":
+        assert verify_cv(history) == []
+
+
+def test_planned_zero_abort_all_base_scheds():
+    """WAW chains abort hard optimistically; planned lanes must commit
+    them abort-free under every one of the six base schedulers."""
+    rng = np.random.RandomState(2)
+    waves = chain_waves(rng, 1, 8, N_NODES, KPN, chain_len=4, kind="waw")
+    for base in SCHEDULERS:
+        store = make_store(N_KEYS, 8)
+        _, history, stats = run_workload_planned(
+            store, waves, sched=base, n_nodes=N_NODES, kernels="jnp")
+        assert stats.aborted == 0, base
+        assert stats.committed == 8, base
+
+
+def test_planned_matches_oracle_pallas_interpret():
+    waves = _mixed_workload(seed=3)
+    store = make_store(N_KEYS, 8)
+    store, history, stats = run_workload_planned(
+        store, waves, n_nodes=N_NODES, kernels="pallas_interpret")
+    assert stats.aborted == 0
+    _assert_matches_oracle(store, history, waves)
+
+
+def test_planned_spill_partition_and_validity():
+    """Bounded lane budget: deep WAW chains overflow into the optimistic
+    spill wave — every row still executes exactly once, spilled rows may
+    abort, the history stays SI-valid."""
+    rng = np.random.RandomState(4)
+    waves = chain_waves(rng, 2, 12, N_NODES, KPN, chain_len=6, kind="waw")
+    plan = plan_wave(waves[0].op_kind, waves[0].op_key, max_lanes=3)
+    assert plan.n_spilled > 0
+    store = make_store(N_KEYS, 8)
+    store, history, stats = run_workload_planned(
+        store, waves, n_nodes=N_NODES, kernels="jnp", max_lanes=3)
+    assert stats.spilled_txns > 0
+    assert stats.committed + stats.aborted == 24    # exactly once each
+    # aborts only among spilled rows
+    assert stats.aborted <= stats.spilled_txns
+    assert verify_si(history) == []
+    assert final_values_ok(store, history, N_KEYS) == []
+
+
+def test_planned_registry_dispatch():
+    assert PLANNED in ALL_SCHEDULERS and len(ALL_SCHEDULERS) == 7
+    waves = ycsb_waves(np.random.RandomState(5), 2, 8, N_NODES, KPN,
+                       theta=0.9, read_frac=0.5)
+    store = make_store(N_KEYS, 8)
+    _, _, st_planned = run_workload_any(store, waves, PLANNED,
+                                        n_nodes=N_NODES, kernels="jnp")
+    assert st_planned.aborted == 0
+    store = make_store(N_KEYS, 8)
+    _, _, st_opt = run_workload_any(store, waves, "postsi",
+                                    n_nodes=N_NODES, kernels="jnp")
+    assert st_opt.committed + st_opt.aborted == st_planned.committed
+    with pytest.raises(ValueError):
+        run_workload_any(make_store(N_KEYS, 8), waves, "nope")
+
+
+def test_planned_mesh_matches_local():
+    """Mesh substrate: same plan, same lanes, bit-identical outcomes to the
+    local run, zero aborts (subprocess: device count locks at jax init)."""
+    code = r"""
+import numpy as np
+from repro.core import make_store
+from repro.core.dist_engine import make_node_mesh, shard_store
+from repro.core.workloads import chain_waves, ycsb_waves
+from repro.core.verify import verify_si, final_values_ok
+from repro.planner import run_workload_planned
+
+N, KPN = 8, 16
+rng = np.random.RandomState(11)
+waves = ycsb_waves(rng, 2, 8, N, KPN, theta=0.95, read_frac=0.3,
+                   dist_frac=0.2, n_ops=4)
+waves += chain_waves(rng, 1, 8, N, KPN, chain_len=4, kind="waw", tid0=17)
+mesh = make_node_mesh(8)
+store_m = shard_store(make_store(N * KPN, 8), mesh)
+store_m, hist_m, st_m = run_workload_planned(
+    store_m, waves, n_nodes=N, mesh=mesh, kernels="jnp")
+store_l = make_store(N * KPN, 8)
+store_l, hist_l, st_l = run_workload_planned(
+    store_l, waves, n_nodes=N, kernels="jnp")
+assert st_m.aborted == st_l.aborted == 0
+for (t1, o1), (t2, o2) in zip(hist_m, hist_l):
+    assert (t1 == t2).all()
+    for f1, f2 in zip(o1, o2):
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+assert verify_si(hist_m) == []
+assert final_values_ok(store_m, hist_m, N * KPN) == []
+print("MESH-PLANNED-OK", st_m.committed)
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH-PLANNED-OK" in out.stdout
+
+
+# ----------------------------------------------------------------- hybrid
+def test_hybrid_switch_policy_units():
+    sw = HybridSwitch(enter_high=0.3, exit_low=0.2, window=10)
+    assert not sw.planned
+    sw.observe_optimistic(10, 2)           # 0.2 <= 0.3: stay optimistic
+    assert not sw.planned
+    sw.observe_optimistic(10, 5)           # 0.5 > 0.3: enter planned
+    assert sw.planned and sw.to_planned == 1
+    sw.observe_planned(10, 8)              # conflict frac 0.8: stay
+    assert sw.planned
+    sw.observe_planned(10, 1)              # 0.1 < 0.2: exit
+    assert not sw.planned and sw.to_optimistic == 1
+    assert sw.switches == 2
+    pinned = HybridSwitch.from_name("planned")
+    assert pinned.planned
+    pinned.observe_planned(1000, 0)        # conflict-free forever: stays
+    assert pinned.planned
+    with pytest.raises(ValueError):
+        HybridSwitch.from_name("sometimes")
+    with pytest.raises(ValueError):
+        HybridSwitch(window=0)
+
+
+def _hot_gen(rng):
+    from repro.service.service import ycsb_txn_gen
+    return ycsb_txn_gen(rng, N_NODES, KPN, theta=0.99, read_frac=0.1,
+                        n_ops=4)
+
+
+def test_hybrid_service_switches_and_verifies():
+    from repro.service import TxnService
+    svc = TxnService(n_keys=N_KEYS, T=16, O=4, sched="postsi",
+                     n_nodes=N_NODES, kernels="jnp", planner="hybrid")
+    rep = svc.run_stream([8] * 40, _hot_gen(np.random.RandomState(6)))
+    assert rep.planned_waves > 0 and rep.planner_switches >= 1
+    assert rep.committed + rep.dropped == rep.admitted
+    assert svc.verify() == []
+    # pinned planned mode: abort-free end to end (no spill at this depth)
+    svc2 = TxnService(n_keys=N_KEYS, T=16, O=4, sched="postsi",
+                      n_nodes=N_NODES, kernels="jnp", planner="planned")
+    rep2 = svc2.run_stream([8] * 20, _hot_gen(np.random.RandomState(7)))
+    assert rep2.planned_waves > 0
+    assert rep2.retries == rep2.planned_spilled == 0
+    assert svc2.verify() == []
+
+
+def test_hybrid_streaming_driver():
+    from repro.service import TxnService
+    svc = TxnService(n_keys=N_KEYS, T=16, O=4, sched="postsi",
+                     n_nodes=N_NODES, kernels="jnp", planner="hybrid")
+    rep = svc.run_streaming([8] * 40, _hot_gen(np.random.RandomState(8)),
+                            B=2, K=2)
+    assert rep.planned_waves > 0
+    assert rep.committed + rep.dropped == rep.admitted
+    assert svc.verify() == []

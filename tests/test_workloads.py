@@ -22,8 +22,9 @@ import numpy as np
 import pytest
 
 from repro.core import NOP, READ, RMW, WRITE
-from repro.core.workloads import (micro_waves, smallbank_waves, tpcc_waves,
-                                  ycsb_txn, ycsb_waves, zipf_cdf, zipf_rank)
+from repro.core.workloads import (chain_txn, chain_waves, micro_waves,
+                                  smallbank_waves, tpcc_waves, ycsb_txn,
+                                  ycsb_waves, zipf_cdf, zipf_rank)
 
 N_NODES, KPN = 4, 50
 N_KEYS = N_NODES * KPN
@@ -198,3 +199,65 @@ def test_ycsb_waves_invariants_and_reproducible():
     _check_common(waves, 16, 4, max_ops=4)
     _assert_reproducible(
         lambda r: ycsb_waves(r, 3, 8, N_NODES, KPN, theta=1.1))
+
+
+# ----------------------------------------------------------------- chains
+def test_chain_txn_links():
+    # head raw link: no read, one RMW of its own key
+    op_kind, op_key, op_val = chain_txn(None, 13, "raw", val=5)
+    assert op_kind.tolist() == [NOP, RMW]
+    assert op_key[1] == 13 and op_val[1] == 5
+    # interior raw link: reads the predecessor, RMWs its own fresh key
+    op_kind, op_key, _ = chain_txn(13, 17, "raw")
+    assert op_kind.tolist() == [READ, RMW]
+    assert op_key.tolist() == [13, 17]
+    # waw link: single RMW of the shared chain key
+    op_kind, op_key, _ = chain_txn(13, 13, "waw")
+    assert op_kind.tolist() == [NOP, RMW] and op_key[1] == 13
+    with pytest.raises(ValueError):
+        chain_txn(1, 2, "zigzag")
+    with pytest.raises(ValueError):
+        chain_txn(1, 2, "raw", n_ops=1)
+
+
+@pytest.mark.parametrize("kind", ["raw", "waw", "mixed"])
+def test_chain_waves_invariants(kind):
+    rng = np.random.RandomState(9)
+    waves = chain_waves(rng, 3, 16, N_NODES, KPN, chain_len=4, kind=kind)
+    _check_common(waves, 16, 2, max_ops=2)
+    for w in waves:
+        op_kind, op_key, _, host, _ = _np_wave(w)
+        active = op_kind != NOP
+        # every chain stays on one host partition (key % n == host)
+        node = op_key % N_NODES
+        assert (node[active] == np.broadcast_to(
+            host[:, None], op_key.shape)[active]).all()
+        for t in range(16):
+            pos = t % 4
+            if pos == 0:
+                continue
+            # the deliberate intra-wave dependency: each interior link
+            # touches the key its predecessor wrote (reads it on a raw
+            # link, RMWs the same shared key on a waw link)
+            prev_write = op_key[t - 1, 1]
+            if kind == "raw":
+                assert op_kind[t, 0] == READ and op_key[t, 0] == prev_write
+            elif kind == "waw":
+                assert op_kind[t, 1] == RMW and op_key[t, 1] == prev_write
+    # chains are key-disjoint from each other (raw/mixed draw without
+    # replacement), so the conflict components are exactly the chains
+    if kind == "raw":
+        for w in waves:
+            op_key, op_kind = np.asarray(w.op_key), np.asarray(w.op_kind)
+            writes = op_key[:, 1][op_kind[:, 1] == RMW]
+            assert len(writes) == len(set(writes.tolist()))
+
+
+def test_chain_waves_reproducible_and_capacity():
+    _assert_reproducible(
+        lambda r: chain_waves(r, 3, 8, N_NODES, KPN, chain_len=3,
+                              kind="mixed"))
+    # partition exhaustion is a loud error, not silent key reuse
+    with pytest.raises(ValueError):
+        chain_waves(np.random.RandomState(0), 1, 64, 1, 8, chain_len=64,
+                    kind="raw")
