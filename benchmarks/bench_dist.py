@@ -59,19 +59,23 @@ def _host_skew(sched: str, n_nodes: int):
 
 
 def _timed(setup, fn, reps: int = 3):
-    """(result, best wall seconds) for ``fn(setup())``.  The first call pays
-    jit outside the timer, and each rep's fresh store (allocation +
-    device_put sharding) is built and synced *before* its timer starts —
-    only mesh execution is measured."""
+    """(result, best wall seconds, warmup seconds) for ``fn(setup())``.
+    The first call pays jit outside the timers but its wall is *recorded*
+    (compile cost is reported, not hidden); each rep's fresh store
+    (allocation + device_put sharding) is built and synced *before* its
+    timer starts, and every timed region ends with ``block_until_ready``
+    on the actual outputs — only synced mesh execution is measured."""
     import jax
-    out = fn(setup())
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(setup()))
+    warmup = time.perf_counter() - t0
     best = float("inf")
     for _ in range(reps):
         arg = jax.block_until_ready(setup())
         t0 = time.perf_counter()
-        out = fn(arg)
+        out = jax.block_until_ready(fn(arg))
         best = min(best, time.perf_counter() - t0)
-    return out, best
+    return out, best, warmup
 
 
 def _scaling(scheds, node_counts, n_waves, T) -> Dict:
@@ -92,10 +96,11 @@ def _scaling(scheds, node_counts, n_waves, T) -> Dict:
                 return run_workload_fused_dist(st, waves, mesh, sched=sched,
                                                n_nodes=n, host_skew=hs)
 
-            (_, _, stats), wall = _timed(setup, run)
+            (_, _, stats), wall, warm = _timed(setup, run)
             n_txn = stats.committed + stats.aborted
             rows.append({
                 "sched": sched, "n_nodes": n, "wall_s": round(wall, 6),
+                "warmup_s": round(warm, 6),
                 "committed": stats.committed, "aborted": stats.aborted,
                 "goodput_tps": round(stats.committed / wall, 1),
                 "txns_per_sec": round(n_txn / wall, 1),
@@ -125,13 +130,15 @@ def _executor(scheds, n, n_waves, T) -> Dict:
             return run_workload_fused_dist(st, waves, mesh, sched=sched,
                                            n_nodes=n, host_skew=hs)
 
-        (_, h1, s1), wall_pw = _timed(setup, per_wave)
-        (_, h2, s2), wall_fz = _timed(setup, fused)
+        (_, h1, s1), wall_pw, warm_pw = _timed(setup, per_wave)
+        (_, h2, s2), wall_fz, warm_fz = _timed(setup, fused)
         assert s1 == s2, (sched, s1, s2)    # bit-identical by construction
         rows.append({
             "sched": sched, "n_nodes": n,
             "per_wave_wall_s": round(wall_pw, 6),
             "fused_wall_s": round(wall_fz, 6),
+            "per_wave_warmup_s": round(warm_pw, 6),
+            "fused_warmup_s": round(warm_fz, 6),
             "speedup": round(wall_pw / wall_fz, 2),
             "committed": s1.committed, "aborted": s1.aborted,
         })

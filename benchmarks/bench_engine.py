@@ -37,26 +37,39 @@ REPS = 3
 
 
 def _sweep_backends():
-    """Backends the platform can actually run end-to-end."""
-    import jax
-    from repro.kernels import BACKENDS
-    return tuple(bk for bk in BACKENDS
-                 if bk != "pallas" or jax.default_backend() == "tpu")
+    """Backend configs the platform can actually run end-to-end: every
+    runnable base backend plus its ``+fused`` wave-commit-megakernel
+    variant (compiled 'pallas' needs a platform the probe accepts)."""
+    from repro.kernels import BACKENDS, can_compile_pallas
+    base = tuple(bk for bk in BACKENDS
+                 if bk != "pallas" or can_compile_pallas())
+    return base + tuple(bk + "+fused" for bk in base)
 
 
 def _time(driver, waves, sched, host_skew, reps=REPS, kernels=None):
+    """(best wall, warmup wall, out).  Honest timing: each timed region ends
+    with ``jax.block_until_ready`` on the driver's actual outputs (the
+    returned store leaves — the histories are already host-synced by the
+    drivers), the per-rep store build + device sync happens *before* the
+    timer starts, and the warmup (compile + first run) wall is returned
+    separately so the JSON records it instead of silently dropping it."""
+    import jax
     mk = lambda: make_store(N_NODES * KEYS_PER_NODE, 8)
+    t0 = time.perf_counter()
     out = driver(mk(), waves, sched=sched, n_nodes=N_NODES,
                  host_skew=host_skew,
                  kernels=kernels)              # warmup: compile + first run
+    jax.block_until_ready(out[0])
+    warmup = time.perf_counter() - t0
     best = float("inf")
     for _ in range(reps):
-        store = mk()
+        store = jax.block_until_ready(mk())
         t0 = time.perf_counter()
         out = driver(store, waves, sched=sched, n_nodes=N_NODES,
                      host_skew=host_skew, kernels=kernels)
+        jax.block_until_ready(out[0])
         best = min(best, time.perf_counter() - t0)
-    return best, out
+    return best, warmup, out
 
 
 def run(scheds=SCHEDULERS, backends=None) -> Dict:
@@ -70,8 +83,9 @@ def run(scheds=SCHEDULERS, backends=None) -> Dict:
     for sched in scheds:
         hs = (np.round(np.linspace(0, 2, N_NODES)).astype(np.int32)
               if sched == "clocksi" else None)
-        t_fused, (_, h_f, st_f) = _time(run_workload_fused, waves, sched, hs)
-        t_wave, (_, h_w, st_w) = _time(run_workload, waves, sched, hs)
+        t_fused, w_fused, (_, h_f, st_f) = _time(run_workload_fused, waves,
+                                                 sched, hs)
+        t_wave, w_wave, (_, h_w, st_w) = _time(run_workload, waves, sched, hs)
         for (t1, o1), (t2, o2) in zip(h_f, h_w):
             np.testing.assert_array_equal(t1, t2)
             for f1, f2 in zip(o1, o2):
@@ -79,6 +93,8 @@ def run(scheds=SCHEDULERS, backends=None) -> Dict:
         rows[sched] = {
             "fused_wall_s": round(t_fused, 6),
             "perwave_wall_s": round(t_wave, 6),
+            "fused_warmup_s": round(w_fused, 6),
+            "perwave_warmup_s": round(w_wave, 6),
             "speedup": round(t_wave / t_fused, 3),
             "txns_per_sec": round(n_txn / t_fused, 1),
             "waves_per_sec": round(N_WAVES / t_fused, 1),
@@ -90,14 +106,15 @@ def run(scheds=SCHEDULERS, backends=None) -> Dict:
         # the trajectory datapoint gains the backend dimension, and every
         # backend's history must stay bit-identical to the default run's
         for bk in backends:
-            t_bk, (_, h_bk, st_bk) = _time(run_workload_fused, waves, sched,
-                                           hs, kernels=bk)
+            t_bk, w_bk, (_, h_bk, st_bk) = _time(run_workload_fused, waves,
+                                                 sched, hs, kernels=bk)
             for (t1, o1), (t2, o2) in zip(h_f, h_bk):
                 np.testing.assert_array_equal(t1, t2)
                 for f1, f2 in zip(o1, o2):
                     np.testing.assert_array_equal(f1, f2)
             backend_rows[bk][sched] = {
                 "fused_wall_s": round(t_bk, 6),
+                "warmup_s": round(w_bk, 6),
                 "txns_per_sec": round(n_txn / t_bk, 1),
                 "waves_per_sec": round(N_WAVES / t_bk, 1),
                 "vs_default": round(t_fused / t_bk, 3),
@@ -115,6 +132,84 @@ def run(scheds=SCHEDULERS, backends=None) -> Dict:
     }
 
 
+# ------------------------------------------------ fused megakernel sweep
+FUSED_TS = (64, 128, 256)
+FUSED_O = 8
+FUSED_V = 8
+FUSED_REPS = 5
+
+
+def run_fused_kernel() -> Dict:
+    """Op-level sweep: the single-launch ``ops.wave_commit`` megakernel vs
+    the three-dispatch unfused read phase (version_scan + s_lo reduction +
+    potential_matrix) at wave sizes T, per runnable backend config, over
+    rings populated by a real SmallBank prefix.
+
+    Labels are honest: every row names the platform that actually executed
+    and marks the Pallas interpreter as emulation (NOT a perf datapoint) —
+    the compiled claim is only made where a compiled backend really ran.
+    Fused and unfused outputs are asserted bit-identical before timing
+    counts."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.substrate import LocalSubstrate
+    from repro.kernels import BACKENDS, KernelConfig, can_compile_pallas
+
+    base = tuple(bk for bk in BACKENDS
+                 if bk != "pallas" or can_compile_pallas())
+    rng = np.random.RandomState(5)
+    n_keys = N_NODES * KEYS_PER_NODE
+    store, _, _ = run_workload(
+        make_store(n_keys, FUSED_V),
+        smallbank_waves(rng, 8, 64, N_NODES, KEYS_PER_NODE, dist_frac=0.2),
+        sched="postsi", n_nodes=N_NODES)
+    INF = jnp.int32(1 << 30)
+    rows = []
+    for T in FUSED_TS:
+        keys = jnp.asarray(rng.randint(0, n_keys, (T, FUSED_O)), jnp.int32)
+        is_r = jnp.asarray(rng.rand(T, FUSED_O) < 0.6)
+        is_w = jnp.asarray(rng.rand(T, FUSED_O) < 0.4)
+        mc = jnp.broadcast_to(INF, keys.shape)
+
+        def timed(sub):
+            out = jax.block_until_ready(
+                sub.read_phase(store, keys, mc, is_r, is_w))   # warmup
+            best = float("inf")
+            for _ in range(FUSED_REPS):
+                t0 = time.perf_counter()
+                out = sub.read_phase(store, keys, mc, is_r, is_w)
+                jax.block_until_ready(out)
+                best = min(best, time.perf_counter() - t0)
+            return best, out
+
+        for bk in base:
+            t_u, o_u = timed(LocalSubstrate(KernelConfig(bk)))
+            t_f, o_f = timed(LocalSubstrate(KernelConfig(bk + "+fused")))
+            for a, b in zip(o_u, o_f):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            rows.append({
+                "T": T, "ops_per_txn": FUSED_O, "backend": bk,
+                "platform": jax.default_backend(),
+                "measured": ("interpreted (Pallas interpreter; emulation, "
+                             "not a perf datapoint)"
+                             if bk == "pallas_interpret" else
+                             f"compiled ({jax.default_backend()})"),
+                "unfused_3op_us": round(t_u * 1e6, 2),
+                "fused_1launch_us": round(t_f * 1e6, 2),
+                "speedup": round(t_u / t_f, 3),
+            })
+    return {
+        "config": {"wave_sizes": list(FUSED_TS), "n_ops": FUSED_O,
+                   "n_versions": FUSED_V, "n_keys": n_keys,
+                   "reps": FUSED_REPS, "backends": list(base),
+                   "platform": jax.default_backend()},
+        "rows": rows,
+        "fused_wins_1p3x": any(r["speedup"] >= 1.3 and r["T"] >= 64
+                               for r in rows),
+    }
+
+
 # ---------------------------------------------------- planner crossover
 # zipfian write-heavy YCSB: where does the planned scheduler's abort-free
 # execution overtake optimistic retry-burn?  (DESIGN.md §10)
@@ -127,17 +222,24 @@ CROSS_BASES = ("postsi", "cv")
 
 
 def _time_goodput(driver, waves, n_keys, reps, **kw):
-    """Best-of-reps wall (compile excluded) + committed count; goodput is
-    committed/wall — aborted work counts in the denominator only."""
+    """(best wall, warmup wall, stats); goodput is committed/wall — aborted
+    work counts in the denominator only.  Same honesty contract as
+    ``_time``: timed regions end with ``block_until_ready`` on the returned
+    store, warmup (compile + first run) is reported, not hidden."""
+    import jax
     mk = lambda: make_store(n_keys, 8)
-    driver(mk(), waves, **kw)                 # warmup: compile + first run
+    t0 = time.perf_counter()
+    out = driver(mk(), waves, **kw)           # warmup: compile + first run
+    jax.block_until_ready(out[0])
+    warmup = time.perf_counter() - t0
     best = float("inf")
     for _ in range(reps):
-        store = mk()
+        store = jax.block_until_ready(mk())
         t0 = time.perf_counter()
-        _, _, st = driver(store, waves, **kw)
+        st_out, _, st = driver(store, waves, **kw)
+        jax.block_until_ready(st_out)
         best = min(best, time.perf_counter() - t0)
-    return best, st
+    return best, warmup, st
 
 
 def run_planned_crossover(smoke: bool = False) -> Dict:
@@ -162,19 +264,23 @@ def run_planned_crossover(smoke: bool = False) -> Dict:
             n_keys = N_NODES * CROSS_KPN
             row = {"theta": theta, "T": T, "n_txn": n_txn}
             for sched in CROSS_BASES:
-                wall, st = _time_goodput(run_workload_fused, waves, n_keys,
-                                         reps, sched=sched, n_nodes=N_NODES)
+                wall, warm, st = _time_goodput(run_workload_fused, waves,
+                                               n_keys, reps, sched=sched,
+                                               n_nodes=N_NODES)
                 row[sched] = {
                     "wall_s": round(wall, 6),
+                    "warmup_s": round(warm, 6),
                     "committed": st.committed,
                     "abort_rate": round(st.aborted / n_txn, 4),
                     "goodput_tps": round(st.committed / wall, 1),
                 }
-            wall, st = _time_goodput(run_workload_planned, waves, n_keys,
-                                     reps, sched="postsi", n_nodes=N_NODES)
+            wall, warm, st = _time_goodput(run_workload_planned, waves,
+                                           n_keys, reps, sched="postsi",
+                                           n_nodes=N_NODES)
             assert st.aborted == 0 and st.committed == n_txn
             row["planned"] = {
                 "wall_s": round(wall, 6),
+                "warmup_s": round(warm, 6),
                 "committed": st.committed,
                 "abort_rate": 0.0,
                 "lane_waves": st.lane_waves,
@@ -199,26 +305,37 @@ def run_planned_crossover(smoke: bool = False) -> Dict:
     }
 
 
-def write_crossover(cross: Dict) -> None:
-    """Merge the crossover section into BENCH_engine.json, preserving
-    whatever executor report is already there."""
+# sections that independent bench blocks own and refresh on their own
+# cadence — rewriting the file for one block must not drop the others
+_MERGE_SECTIONS = ("planned_crossover", "fused_kernel", "roofline")
+
+
+def write_section(name: str, payload: Dict) -> None:
+    """Merge one named section into BENCH_engine.json, preserving whatever
+    the other blocks already wrote there."""
     report = {}
     if os.path.exists(OUT_PATH):
         with open(OUT_PATH) as f:
             report = json.load(f)
-    report["planned_crossover"] = cross
-    write_report(report)
+    report[name] = payload
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+def write_crossover(cross: Dict) -> None:
+    write_section("planned_crossover", cross)
 
 
 def write_report(report: Dict) -> None:
-    # the executor block and the planner block refresh the file
-    # independently — keep the other block's section when rewriting
-    if "planned_crossover" not in report and os.path.exists(OUT_PATH):
+    # the executor block refreshes the whole file — carry over every
+    # independently-owned section it did not itself produce
+    if os.path.exists(OUT_PATH):
         with open(OUT_PATH) as f:
             old = json.load(f)
-        if "planned_crossover" in old:
-            report = dict(report,
-                          planned_crossover=old["planned_crossover"])
+        for k in _MERGE_SECTIONS:
+            if k not in report and k in old:
+                report = dict(report, **{k: old[k]})
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
@@ -226,6 +343,7 @@ def write_report(report: Dict) -> None:
 
 def main(write_json: bool = True) -> Dict:
     report = run()
+    report["fused_kernel"] = run_fused_kernel()
     if write_json:
         write_report(report)
     for sched, r in report["schedulers"].items():
@@ -239,6 +357,11 @@ def main(write_json: bool = True) -> Dict:
                   f"{r['fused_wall_s']*1e3:.1f}ms "
                   f"{r['txns_per_sec']:.0f} txn/s "
                   f"(vs default {r['vs_default']:.2f}x)")
+    for r in report["fused_kernel"]["rows"]:
+        print(f"bench_engine/wave_commit/T{r['T']}/{r['backend']}: "
+              f"fused {r['fused_1launch_us']:.0f}us vs 3-op "
+              f"{r['unfused_3op_us']:.0f}us ({r['speedup']:.2f}x) "
+              f"[{r['measured']}]")
     return report
 
 

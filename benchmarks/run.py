@@ -67,10 +67,12 @@ def _engine_figures() -> None:
 
 
 def _engine_executor() -> None:
-    """Fused-scan vs per-wave executor comparison; also refreshes
-    BENCH_engine.json (the perf-trajectory datapoint)."""
+    """Fused-scan vs per-wave executor comparison plus the wave-commit
+    megakernel sweep; also refreshes BENCH_engine.json (the perf-trajectory
+    datapoint, ``fused_kernel`` section included)."""
     from . import bench_engine
     report = bench_engine.run()
+    report["fused_kernel"] = bench_engine.run_fused_kernel()
     bench_engine.write_report(report)     # quiet: keep stdout pure CSV
     for sched, r in report["schedulers"].items():
         n_txn = r["committed"] + r["aborted"]
@@ -83,6 +85,10 @@ def _engine_executor() -> None:
                  b["fused_wall_s"] * 1e6 / n_txn,
                  f"waves/s={b['waves_per_sec']:.0f} "
                  f"vs_default={b['vs_default']:.2f}x")
+    for r in report["fused_kernel"]["rows"]:
+        _csv(f"engine/wave_commit/T{r['T']}/{r['backend']}",
+             r["fused_1launch_us"],
+             f"vs_3op={r['speedup']:.2f}x measured={r['measured']}")
 
 
 def _service() -> None:
@@ -232,7 +238,24 @@ def _kernel_micro() -> None:
 
 
 def _roofline_headlines() -> None:
-    from . import roofline
+    """Dry-run roofline headlines + the compiled wave-engine HLO audit
+    (bytes / FLOPs / arithmetic intensity per scheduler x kernel config).
+    The engine audit lands as the ``roofline`` section of BENCH_engine.json
+    and as artifacts/roofline/engine_roofline.json for CI upload."""
+    import json
+
+    from . import bench_engine, roofline
+    rep = roofline.engine_roofline(smoke="--smoke" in _FLAGS)
+    bench_engine.write_section("roofline", rep)   # quiet: stdout stays CSV
+    out_dir = os.path.join("artifacts", "roofline")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "engine_roofline.json"), "w") as f:
+        json.dump(rep, f, indent=2)
+        f.write("\n")
+    for r in rep["rows"]:
+        _csv(f"roofline/engine/{r['sched']}/{r['backend']}", 0.0,
+             f"flops={r['flops']:.3g} bytes={r['bytes']:.3g} "
+             f"AI={r['arith_intensity']} platform={r['platform']}")
     try:
         rows = roofline.load()
     except Exception:

@@ -52,30 +52,23 @@ def potential_backend() -> str:
 # potential[i, j] = "txn i read a key that txn j writes"
 # ---------------------------------------------------------------------------
 
-def potential_matrix_jnp(read_key, write_key, read_mask, write_mask):
-    """Dense reference build: [T,T,O,O] broadcast-compare, diagonal masked."""
-    rk = jnp.where(read_mask, read_key, -1)
-    wk = jnp.where(write_mask, write_key, -2)
-    eq = rk[:, None, :, None] == wk[None, :, None, :]     # [T,T,O,O]
-    pot = eq.any(axis=(2, 3))
-    T = read_key.shape[0]
-    return pot & ~jnp.eye(T, dtype=bool)
-
-
 def build_potential(keys, is_read, is_write, backend=None):
     """Anti-dependency candidates for one wave: bool [T, T].
 
     keys: [T, O] int32 op keys (>= 0 where active); is_read / is_write:
     [T, O] bool op masks.  ``backend`` is anything ``kernels.backend.resolve``
     accepts — a resolved ``KernelConfig``, a backend name, or ``None`` for
-    the process default.  All routes are bit-identical.
+    the process default.  All routes are bit-identical; the jnp body lives
+    ONLY in ``kernels.ref.potential_matrix_ref`` (the test oracle), so there
+    is exactly one copy of the rule per backend.
     """
     cfg = kernel_backend.resolve(backend)
-    if not cfg.use_pallas:
-        return potential_matrix_jnp(keys, keys, is_read, is_write)
-    from repro.kernels import ops
     rk = jnp.where(is_read, keys, -1)
     wk = jnp.where(is_write, keys, -1)
+    if not cfg.use_pallas:
+        from repro.kernels import ref
+        return ref.potential_matrix_ref(rk, wk).astype(bool)
+    from repro.kernels import ops
     out = ops.potential_matrix(rk, wk, use_pallas=True,
                                interpret=cfg.interpret)
     return out.astype(bool)

@@ -54,8 +54,7 @@ from jax import lax
 from repro.kernels import KernelConfig, register_cache_clear, resolve
 from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
                            creator_slots, lost_update, ongoing_readers_of,
-                           postsi_bounds, push_bounds, potential_matrix_jnp,
-                           rw_edge_to_creator)
+                           postsi_bounds, push_bounds, rw_edge_to_creator)
 from .store import INF, MVStore, node_of_key
 from .substrate import LocalSubstrate
 
@@ -85,11 +84,6 @@ class WaveOut(NamedTuple):
     waits: jax.Array       # scalar: clock-si skew waits
     evicted_visible: jax.Array  # scalar: ring-slot reuses of still-visible
                                 # versions (GC watermark violations, §8)
-
-
-# jnp reference build of potential[i, j] = "txn i read a key txn j writes";
-# run_wave routes through commit_phase.build_potential (Pallas by default)
-_potential_antidep = potential_matrix_jnp
 
 
 def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
@@ -126,21 +120,21 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
         key_wave, head_cid = sub.key_staleness(store, keys)       # [T,O] each
         stale = key_wave >= cutoff_wave[:, None]
         max_cid = jnp.where(stale, head_cid - 1, INF)
-        r_val, r_tid, r_cid, r_sid, r_slot = sub.read_visible(store, keys,
-                                                              max_cid)
     else:
-        r_val, r_tid, r_cid, r_sid, r_slot = sub.read_newest(store, keys)
+        max_cid = jnp.broadcast_to(jnp.int32(INF), keys.shape)
+
+    # the whole read phase — slot selection, the PostSI rule-3 seed (raise
+    # s_lo/c_lo to the CID of every version read) and the anti-dependency
+    # candidate build — is one substrate call, so the fused ``wave_commit``
+    # megakernel and the three-dispatch route swap under the engine without
+    # the rules seeing a difference (DESIGN.md §7)
+    (r_val, r_tid, r_cid, r_sid, r_slot, s_lo0,
+     potential) = sub.read_phase(store, keys, max_cid, is_read, is_write)
 
     read_key = jnp.where(is_read, keys, -1)
     read_cid = jnp.where(is_read, r_cid, -1)
-
-    # PostSI rule 3 at read time: creator of every read version must be
-    # visible -> raise s_lo and c_lo to its CID.
-    s_lo0 = jnp.where(is_read, r_cid, 0).max(axis=1)              # [T]
     c_lo0 = s_lo0
     s_hi0 = jnp.full((T,), INF, jnp.int32)
-
-    potential = sub.build_potential(keys, is_read, is_write)       # [T,T]
 
     # --------------------------------------------------------------- commits
     # deterministic commit order = wave-local index (tids ascend within wave)

@@ -40,7 +40,7 @@ import warnings
 import jax.numpy as jnp
 from jax import lax
 
-from repro.kernels import KernelConfig, ops, resolve
+from repro.kernels import KernelConfig, can_compile_pallas, ops, resolve
 from .commit_phase import build_potential
 from .store import INF, MVStore
 from . import store as store_ops
@@ -60,39 +60,46 @@ def mesh_degrade_count() -> int:
 
 def effective_mesh_backend(kernels: KernelConfig | str | None = None) -> str:
     """Honest label for what the mesh path runs under this request:
-    the resolved backend name, or ``"jnp (degraded from pallas)"``."""
+    the resolved backend spec, or ``"jnp (degraded from pallas)"`` when the
+    capability probe says compiled Mosaic cannot run in this process."""
     cfg = resolve(kernels)
-    if cfg.backend == "pallas":
-        return "jnp (degraded from pallas)"
-    return cfg.backend
+    if cfg.backend == "pallas" and not can_compile_pallas():
+        return "jnp (degraded from pallas)" + ("+fused" if cfg.fused else "")
+    return cfg.name
 
 
 def mesh_kernels(kernels: KernelConfig | str | None = None) -> KernelConfig:
-    """The config a ``MeshSubstrate`` will actually run: compiled-Mosaic
-    kernels are not assumed to lower inside shard_map bodies, so ``pallas``
-    degrades to the bit-identical ``jnp`` reference on the mesh while
-    ``pallas_interpret``/``jnp`` pass through.  The mesh drivers normalize
-    through this BEFORE using the config as a jit/lru cache key, so
-    ``pallas`` and ``jnp`` requests share one trace instead of compiling
-    identical programs twice.
+    """The config a ``MeshSubstrate`` will actually run.
+
+    Per-shard local block shapes are static under shard_map, so compiled
+    Mosaic kernels are legal on the mesh path whenever the platform can
+    lower them at all — ``pallas`` now passes through when the
+    once-per-process capability probe (``kernels.can_compile_pallas``)
+    succeeds, and degrades to the bit-identical ``jnp`` reference ONLY when
+    it fails (e.g. the CPU backend, which has no Mosaic target).
+    ``pallas_interpret``/``jnp`` always pass through.  The mesh drivers
+    normalize through this BEFORE using the config as a jit/lru cache key,
+    so a degraded ``pallas`` request and a ``jnp`` request share one trace
+    instead of compiling identical programs twice.
 
     The degradation is *not* silent: the first occurrence per process emits
     a ``RuntimeWarning`` and every occurrence bumps ``mesh_degrade_count()``
     so callers (benchmarks, services) can report what actually ran."""
     cfg = resolve(kernels)
-    if cfg.backend == "pallas":
+    if cfg.backend == "pallas" and not can_compile_pallas():
         global _degrades, _degrade_warned
         _degrades += 1
         if not _degrade_warned:
             _degrade_warned = True
             warnings.warn(
                 "KernelConfig('pallas') degrades to the bit-identical 'jnp' "
-                "reference on the mesh path (compiled-Mosaic kernels are not "
-                "lowered inside shard_map bodies); mesh results are correct "
-                "but do not measure compiled kernels — request "
-                "'pallas_interpret' or 'jnp' explicitly to silence this",
+                "reference on the mesh path: the capability probe found no "
+                "compiled-Mosaic support in this process (CPU backend); "
+                "mesh results are correct but do not measure compiled "
+                "kernels — request 'pallas_interpret' or 'jnp' explicitly "
+                "to silence this",
                 RuntimeWarning, stacklevel=2)
-        return KernelConfig("jnp")
+        return KernelConfig("jnp", fused=cfg.fused)
     return cfg
 
 
@@ -139,10 +146,12 @@ class LocalSubstrate:
 
     def key_staleness(self, store: MVStore, keys):
         """Per-key (last-commit wave tag, head CID) — the clocksi stale-read
-        cutoff inputs."""
-        key_wave = store.wave[keys]
+        cutoff inputs.  NOP/padding keys (possibly negative) are clamped
+        like every other gather so they can never wrap to the last key."""
+        k = jnp.clip(keys, 0, store.n_keys - 1)
+        key_wave = store.wave[k]
         head_cid = jnp.take_along_axis(
-            store.cid[keys], store.head[keys][..., None], axis=-1)[..., 0]
+            store.cid[k], store.head[k][..., None], axis=-1)[..., 0]
         return key_wave, head_cid
 
     def evicting_visible(self, store: MVStore, keys, watermark):
@@ -173,6 +182,33 @@ class LocalSubstrate:
         """Anti-dependency candidate matrix [T, T] — routed through the
         configured backend (Pallas kernel / interpret / jnp)."""
         return build_potential(keys, is_read, is_write, backend=self.kernels)
+
+    def read_phase(self, store: MVStore, keys, max_cid, is_read, is_write):
+        """The whole wave read phase (DESIGN.md §7): latest-visible slot
+        selection, the PostSI rule-3 negotiation seed ``s_lo0`` and the
+        anti-dependency candidate build.  Returns ``(r_val, r_tid, r_cid,
+        r_sid, r_slot, s_lo0 [T], potential [T, T] bool)``.
+
+        With ``kernels.fused`` this is ONE ``ops.wave_commit`` launch over
+        the gathered rings — no HBM round-trips between the three bodies;
+        otherwise the three separate dispatches.  Bit-identical either way
+        (tests/test_kernels.py, tests/test_kernel_backend.py).
+        """
+        mc = jnp.broadcast_to(max_cid, keys.shape)
+        if not self.kernels.fused:
+            r_val, r_tid, r_cid, r_sid, r_slot = self.read_visible(
+                store, keys, mc)
+            s_lo0 = jnp.where(is_read, r_cid, 0).max(axis=1)
+            pot = self.build_potential(keys, is_read, is_write)
+            return r_val, r_tid, r_cid, r_sid, r_slot, s_lo0, pot
+        k = jnp.clip(keys, 0, store.n_keys - 1)
+        slot, r_val, r_tid, r_cid, r_sid, s_lo0, pot = ops.wave_commit(
+            store.cid[k], store.tid[k], store.sid[k], store.val[k], mc,
+            jnp.where(is_read, keys, -1), jnp.where(is_write, keys, -1),
+            is_read,
+            use_pallas=self.kernels.use_pallas,
+            interpret=self.kernels.interpret)
+        return r_val, r_tid, r_cid, r_sid, slot, s_lo0, pot.astype(bool)
 
 
 class MeshSubstrate:
@@ -254,5 +290,36 @@ class MeshSubstrate:
 
     def build_potential(self, keys, is_read, is_write):
         # replicated build: every node computes the same [T, T] matrix,
-        # routed through the (mesh-degraded) config
+        # routed through the (possibly probe-degraded) config
         return build_potential(keys, is_read, is_write, backend=self.kernels)
+
+    def read_phase(self, store: MVStore, keys, max_cid, is_read, is_write):
+        """Mesh twin of ``LocalSubstrate.read_phase``.
+
+        Fused route: each node runs the ``ops.wave_commit`` megakernel over
+        its LOCAL gathered rings with ``rvalid = is_read & mine`` as the
+        s_lo0 seed mask, then the scan outputs merge with the usual
+        owner-keeps/psum pattern and the per-node partial ``s_lo0`` maxima
+        merge with ``lax.pmax`` — equal to the unfused merge-then-reduce
+        order because every contribution is a non-negative CID.  The
+        potential tile is built from GLOBAL replicated keys, so it is
+        replicated-identical on every node with no merge at all.
+        """
+        mc = jnp.broadcast_to(max_cid, keys.shape)
+        if not self.kernels.fused:
+            r_val, r_tid, r_cid, r_sid, r_slot = self.read_visible(
+                store, keys, mc)
+            s_lo0 = jnp.where(is_read, r_cid, 0).max(axis=1)
+            pot = self.build_potential(keys, is_read, is_write)
+            return r_val, r_tid, r_cid, r_sid, r_slot, s_lo0, pot
+        lk, mine, _ = self._local(store, keys)
+        slot, r_val, r_tid, r_cid, r_sid, s_lo0, pot = ops.wave_commit(
+            store.cid[lk], store.tid[lk], store.sid[lk], store.val[lk], mc,
+            jnp.where(is_read, keys, -1), jnp.where(is_write, keys, -1),
+            is_read & mine,
+            use_pallas=self.kernels.use_pallas,
+            interpret=self.kernels.interpret)
+        r_val, r_tid, r_cid, r_sid, slot = self._merge(
+            mine, r_val, r_tid, r_cid, r_sid, slot)
+        s_lo0 = lax.pmax(s_lo0, self.axis)
+        return r_val, r_tid, r_cid, r_sid, slot, s_lo0, pot.astype(bool)

@@ -1,11 +1,13 @@
 """Kernel plane: Pallas TPU kernels, their jnp oracles, and the unified
 backend registry that routes every data-plane hot spot (version scan,
-anti-dependency build) through one resolved :class:`KernelConfig`.
+anti-dependency build, fused wave-commit read phase) through one resolved
+:class:`KernelConfig`.
 """
-from .backend import (BACKENDS, KernelConfig, default_backend,
-                      register_cache_clear, resolve, set_default_backend)
+from .backend import (BACKENDS, KernelConfig, can_compile_pallas,
+                      default_backend, register_cache_clear, resolve,
+                      set_default_backend)
 
 __all__ = [
-    "BACKENDS", "KernelConfig", "default_backend", "register_cache_clear",
-    "resolve", "set_default_backend",
+    "BACKENDS", "KernelConfig", "can_compile_pallas", "default_backend",
+    "register_cache_clear", "resolve", "set_default_backend",
 ]

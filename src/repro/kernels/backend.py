@@ -22,9 +22,18 @@ Backends:
                        elsewhere.  Only accepted as *input*; a resolved
                        :class:`KernelConfig` never carries it.
 
+Fusion: orthogonally to the backend, ``KernelConfig(fused=True)`` routes
+the whole wave read phase (slot selection + rule-3 interval seed +
+anti-dependency build) through the single-launch ``ops.wave_commit``
+megakernel instead of three separate dispatches — bit-identical by
+construction (DESIGN.md §7).  A backend spec string may carry it as a
+``"+fused"`` suffix (``"pallas_interpret+fused"``) so the knob threads
+through every name-typed seam (env var, CLI, bench labels) unchanged.
+
 Process default: ``default_backend()`` reads env ``REPRO_KERNEL_BACKEND``
 (falling back to the pre-refactor ``REPRO_POTENTIAL_BACKEND`` name, then
-``auto``); ``set_default_backend`` switches it and clears every jit cache
+``auto``), with env ``REPRO_KERNEL_FUSED=1`` forcing the fused route;
+``set_default_backend`` switches it and clears every jit cache
 registered via :func:`register_cache_clear`, because engines that defaulted
 to the process config baked it in at trace time.  Explicitly-threaded
 configs need no cache clearing: a different resolved config is a different
@@ -33,12 +42,20 @@ static jit argument.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 
 import jax
 
 BACKENDS = ("pallas", "pallas_interpret", "jnp")
 _INPUT_BACKENDS = BACKENDS + ("auto",)
+_FUSED_SUFFIX = "+fused"
+
+
+def _parse_spec(name: str):
+    """Split an input spec into (base backend name, fused flag)."""
+    fused = name.endswith(_FUSED_SUFFIX)
+    return (name[:-len(_FUSED_SUFFIX)] if fused else name), fused
 
 
 def _resolve_name(name: str) -> str:
@@ -55,12 +72,21 @@ class KernelConfig:
     Frozen + hashable so it can ride as a static jit argument and as an
     ``lru_cache`` key for the shard_map executors.  ``backend`` is always a
     concrete member of :data:`BACKENDS` — construct via :func:`resolve` (or
-    pass ``"auto"`` to ``KernelConfig`` itself, which resolves eagerly).
+    pass ``"auto"`` to ``KernelConfig`` itself, which resolves eagerly; a
+    ``"+fused"`` suffix on the name sets ``fused``).
+
+    ``fused`` selects the single-launch ``ops.wave_commit`` read-phase
+    megakernel over the three-dispatch route; it composes with any backend
+    (the jnp leg runs the fused reference composition in ``kernels.ref``).
     """
     backend: str = "auto"
+    fused: bool = False
 
     def __post_init__(self):
-        object.__setattr__(self, "backend", _resolve_name(self.backend))
+        base, fused = _parse_spec(self.backend)
+        object.__setattr__(self, "backend", _resolve_name(base))
+        if fused:
+            object.__setattr__(self, "fused", True)
 
     @property
     def use_pallas(self) -> bool:
@@ -71,6 +97,11 @@ class KernelConfig:
     def interpret(self) -> bool:
         """The ``interpret`` flag of the ``kernels.ops`` wrappers."""
         return self.backend == "pallas_interpret"
+
+    @property
+    def name(self) -> str:
+        """Round-trippable spec string (``resolve(cfg.name) == cfg``)."""
+        return self.backend + (_FUSED_SUFFIX if self.fused else "")
 
 
 def resolve(spec=None) -> KernelConfig:
@@ -84,12 +115,49 @@ def resolve(spec=None) -> KernelConfig:
 
 
 # ---------------------------------------------------------------------------
+# capability probe: can THIS process actually compile-and-run a Mosaic
+# Pallas kernel?  The mesh path (``substrate.mesh_kernels``) degrades
+# ``pallas`` to the bit-identical ``jnp`` reference only when this says no —
+# per-shard block shapes are static under shard_map, so compiled kernels are
+# legal whenever the platform can lower them at all.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def can_compile_pallas() -> bool:
+    """True iff a non-interpret ``pl.pallas_call`` compiles AND runs here.
+
+    Probes by executing a tiny aligned kernel once per process (cached).
+    On CPU this fails (Mosaic needs a TPU target), which is exactly the
+    signal the mesh dispatch uses to gate its explicit jnp fallback.
+    """
+    try:
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _probe(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1
+
+        out = pl.pallas_call(
+            _probe,
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.int32),
+        )(jnp.zeros((8, 128), jnp.int32))
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
+
+
+# ---------------------------------------------------------------------------
 # process default + jit-cache invalidation for engines that bake it in
 # ---------------------------------------------------------------------------
 
 _default = os.environ.get(
     "REPRO_KERNEL_BACKEND",
     os.environ.get("REPRO_POTENTIAL_BACKEND", "auto"))
+if os.environ.get("REPRO_KERNEL_FUSED", "") not in ("", "0") \
+        and not _default.endswith(_FUSED_SUFFIX):
+    _default = _default + _FUSED_SUFFIX
 _clear_hooks: list = []
 
 
@@ -101,10 +169,11 @@ def register_cache_clear(jitted) -> None:
 
 
 def set_default_backend(name: str) -> None:
-    """Switch the process-default backend (accepts ``auto``) and clear the
-    registered jit caches."""
+    """Switch the process-default backend (accepts ``auto`` and a
+    ``"+fused"`` suffix) and clear the registered jit caches."""
     global _default
-    assert name in _INPUT_BACKENDS, (name, _INPUT_BACKENDS)
+    base, _ = _parse_spec(name)
+    assert base in _INPUT_BACKENDS, (name, _INPUT_BACKENDS)
     _default = name
     for fn in _clear_hooks:
         try:
@@ -114,5 +183,7 @@ def set_default_backend(name: str) -> None:
 
 
 def default_backend() -> str:
-    """The resolved (never ``auto``) process-default backend name."""
-    return _resolve_name(_default)
+    """The resolved (never ``auto``) process-default backend spec — the
+    backend name plus an optional ``"+fused"`` suffix."""
+    base, fused = _parse_spec(_default)
+    return _resolve_name(base) + (_FUSED_SUFFIX if fused else "")

@@ -22,6 +22,7 @@ from .flash_attention import flash_attention_pallas
 from .interval_negotiate import potential_matrix_pallas
 from .ssd_scan import ssd_scan_pallas
 from .version_scan import version_scan_pallas
+from .wave_commit import wave_commit_pallas
 
 
 def _pad_to(x, mult, axis, value=0):
@@ -140,6 +141,41 @@ def masked_sid_bump(sid, tid, *, mask, keys, slots, expect_tid, s_val):
     ok = mask & (tid[keys, slots] == expect_tid)
     k_sid = jnp.where(ok, keys, n_keys)
     return sid.at[k_sid, slots].max(s_val, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_t"))
+def wave_commit(cids, tids, sids, vals, max_cid, read_key, write_key, rvalid,
+                *, use_pallas=False, interpret=False, block_t=128):
+    """Fused wave read phase: version-scan slot selection + selected-version
+    gathers + PostSI rule-3 seed + anti-dependency build in ONE kernel
+    launch (DESIGN.md §7; bodies shared with ``version_scan`` /
+    ``potential_matrix``, validated bit-identical against their composition).
+
+    cids/tids/sids/vals: [T, O, V] int32 gathered rings; max_cid/read_key/
+    write_key: [T, O] int32 (-1 key sentinel = inactive op); rvalid: [T, O]
+    bool — the s_lo0 seed mask (read AND owned, so the mesh substrate can
+    pmax-merge per-node partial maxima).  Returns (slot, r_val, r_tid,
+    r_cid, r_sid [T, O] int32, s_lo0 [T] int32, potential [T, T] int8).
+    """
+    if not use_pallas:
+        return ref.wave_commit_ref(cids, tids, sids, vals, max_cid,
+                                   read_key, write_key, rvalid)
+    T, O, V = cids.shape
+    assert V <= 128, V                 # ring fits one lane register
+    bt = min(block_t, T)
+    # rings: V -> 128 lanes, O -> 8 sublanes, T -> block multiple; padded
+    # slots carry tid=-1 (never visible), padded rows/ops are sliced off
+    pad3 = lambda a, v: _pad_to(_pad_to(_pad_to(a, 128, 2, value=v),
+                                        8, 1, value=v), bt, 0, value=v)
+    pad2 = lambda a, v: _pad_to(_pad_to(a, 8, 1, value=v), bt, 0, value=v)
+    slot, r_val, r_tid, r_cid, r_sid, slo, pot = wave_commit_pallas(
+        pad3(cids, 0), pad3(tids, -1), pad3(sids, 0), pad3(vals, 0),
+        pad2(max_cid, 0), pad2(read_key, -1), pad2(write_key, -1),
+        pad2(rvalid.astype(jnp.int32), 0), block_t=bt, interpret=interpret)
+    return (slot[:T, :O], r_val[:T, :O], r_tid[:T, :O], r_cid[:T, :O],
+            r_sid[:T, :O], slo[:T, 0], pot[:T, :T])
 
 
 # ---------------------------------------------------------------------------

@@ -60,10 +60,40 @@ def version_scan_ref(cids: jax.Array, tids: jax.Array, max_cid: jax.Array):
 
 
 def potential_matrix_ref(read_key: jax.Array, write_key: jax.Array) -> jax.Array:
-    """[T,O] x [T,O] -> [T,T] int8 rw-candidate matrix (diagonal zero)."""
+    """[T,O] x [T,O] -> [T,T] int8 rw-candidate matrix (diagonal zero).
+
+    The ONLY jnp home of the anti-dependency build: ``commit_phase
+    .build_potential`` routes its jnp leg here and the Pallas kernel
+    (`interval_negotiate`) is validated against it.  Distinct negative
+    sentinels (-1 reads, -2 writes) keep masked/NOP ops — which may share a
+    padding key — from ever matching each other.
+    """
     rk = jnp.where(read_key >= 0, read_key, -1)
     wk = jnp.where(write_key >= 0, write_key, -2)
     eq = rk[:, None, :, None] == wk[None, :, None, :]
     pot = eq.any(axis=(2, 3))
     T = read_key.shape[0]
     return (pot & ~jnp.eye(T, dtype=bool)).astype(jnp.int8)
+
+
+def wave_commit_ref(cids: jax.Array, tids: jax.Array, sids: jax.Array,
+                    vals: jax.Array, max_cid: jax.Array, read_key: jax.Array,
+                    write_key: jax.Array, rvalid: jax.Array):
+    """Fused wave read-phase oracle: the exact composition of
+    ``version_scan_ref`` + slot gathers + the rule-3 seed reduction +
+    ``potential_matrix_ref`` that the unfused engine path runs.
+
+    cids/tids/sids/vals: [T, O, V] gathered rings; max_cid/read_key/
+    write_key: [T, O]; rvalid: [T, O] bool (read AND owned — the s_lo0
+    seed mask).  Returns (slot, r_val, r_tid, r_cid, r_sid [T, O] int32,
+    s_lo0 [T] int32, potential [T, T] int8).
+    """
+    T, O, V = cids.shape
+    slot, _ = version_scan_ref(cids.reshape(-1, V), tids.reshape(-1, V),
+                               max_cid.reshape(-1))
+    slot = slot.reshape(T, O)
+    take = lambda a: jnp.take_along_axis(a, slot[..., None], axis=-1)[..., 0]
+    r_val, r_tid, r_cid, r_sid = take(vals), take(tids), take(cids), take(sids)
+    s_lo0 = jnp.where(rvalid, r_cid, 0).max(axis=1).astype(jnp.int32)
+    pot = potential_matrix_ref(read_key, write_key)
+    return (slot.astype(jnp.int32), r_val, r_tid, r_cid, r_sid, s_lo0, pot)

@@ -1,0 +1,129 @@
+"""Fused wave-commit Pallas kernel: the whole wave read phase in ONE launch.
+
+The unfused engine pays three dispatches per wave before the commit loop —
+``version_scan`` (latest-visible slot per gathered ring, paper §IV-B CID
+rule), a jnp reduction for the PostSI rule-3 negotiation seed
+``s_lo0 = max(cid of versions read)``, and ``potential_matrix`` (the
+anti-dependency candidate build, CV rule 6 / PostSI rule 4 feed) — with the
+selected ``r_cid`` round-tripping through HBM between them.  This kernel
+fuses all three bodies over the same VMEM-resident blocks:
+
+  inputs   gathered rings  cid/tid/sid/val  [T, O, Vp]   (Vp = 128 lanes)
+           per-op ceiling  max_cid          [T, O]
+           masked keys     rk / wk          [T, O]       (-1 = inactive)
+           seed mask       rvalid           [T, O]       (read AND owned)
+  outputs  slot, r_val, r_tid, r_cid, r_sid [T, O]
+           s_lo0                            [T, 128]     (lane-broadcast)
+           potential                        [T, T] int8
+
+Tiling follows ``interval_negotiate``: a 2-D (reader-block i, writer-block
+j) grid over [BT x BT] potential tiles with static O^2 broadcast-compare
+accumulation.  The read-phase blocks (rings, scan outputs, s_lo0) use
+index maps that ignore ``j``, so they are revisited across the inner grid
+dimension and stay resident in VMEM for the whole reader row — the
+``flash_attention``/``ssd_scan`` revisited-block idiom.
+
+The ``rvalid`` mask (rather than ``rk >= 0``) feeds the s_lo0 seed so the
+mesh substrate can pass ``is_read & mine`` and merge per-node partial
+maxima with ``lax.pmax`` — bit-identical to the unfused merge-then-reduce
+order because every contribution is a non-negative CID.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cid_ref, tid_ref, sid_ref, val_ref, mc_ref, rk_ref, wk_ref,
+            rv_ref, slot_ref, rval_ref, rtid_ref, rcid_ref, rsid_ref,
+            slo_ref, pot_ref, *, block_t: int, n_ops: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    # ---- anti-dependency tile (potential_matrix body) ---------------------
+    # potential[i, j] = "txn i read a key txn j writes"; -1 sentinels carry
+    # both the op masks and any NOP padding, guarded by r >= 0
+    rk = rk_ref[...]                                    # [BT, O] reader keys
+    wk = wk_ref[...]                                    # [BT, O] writer keys
+    acc = jnp.zeros((block_t, block_t), jnp.bool_)
+    for o1 in range(n_ops):
+        r = rk[:, o1]
+        for o2 in range(n_ops):
+            w = wk[:, o2]
+            acc = acc | ((r[:, None] == w[None, :]) & (r[:, None] >= 0))
+    gi = i * block_t + jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+    gj = j * block_t + jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+    pot_ref[...] = (acc & (gi != gj)).astype(jnp.int8)
+
+    # ---- read phase (version_scan body over the gathered rings) -----------
+    cids = cid_ref[...]                                 # [BT, O, Vp]
+    tids = tid_ref[...]
+    ceil = mc_ref[...]                                  # [BT, O]
+    ok = (tids != -1) & (cids <= ceil[:, :, None])
+    masked = jnp.where(ok, cids, -1)
+    best = masked.max(axis=2)                           # [BT, O]
+    Vp = cids.shape[2]
+    lane = jax.lax.broadcasted_iota(jnp.int32, masked.shape, 2)
+    # argmax via equality with the max (first match wins, matching jnp.argmax
+    # tie-break because per-key CIDs are unique; all-invisible rows hit 0)
+    hit = jnp.where(masked == best[:, :, None], lane, Vp)
+    slot = hit.min(axis=2)                              # [BT, O]
+    sel = lane == slot[:, :, None]
+    pick = lambda a: jnp.where(sel, a, 0).sum(axis=2)   # exact: one lane set
+    r_cid = pick(cids)                                  # RAW cid at slot
+    slot_ref[...] = slot.astype(jnp.int32)
+    rval_ref[...] = pick(val_ref[...]).astype(jnp.int32)
+    rtid_ref[...] = pick(tids).astype(jnp.int32)
+    rcid_ref[...] = r_cid.astype(jnp.int32)
+    rsid_ref[...] = pick(sid_ref[...]).astype(jnp.int32)
+
+    # ---- PostSI rule-3 seed: s_lo0 = max CID over valid reads -------------
+    rv = rv_ref[...]                                    # [BT, O]
+    slo = jnp.where(rv != 0, r_cid, 0).max(axis=1)      # [BT]
+    slo_ref[...] = jnp.broadcast_to(slo[:, None],
+                                    slo_ref.shape).astype(jnp.int32)
+
+
+def wave_commit_pallas(cids, tids, sids, vals, max_cid, read_key, write_key,
+                       rvalid, *, block_t: int = 128,
+                       interpret: bool = False):
+    """cids/tids/sids/vals: [T, O, Vp] int32 gathered rings (Vp lane-padded
+    to 128; empty/padded slots tid=-1); max_cid/read_key/write_key/rvalid:
+    [T, O] int32.  Returns (slot, r_val, r_tid, r_cid, r_sid [T, O],
+    s_lo0 [T, 128] lane-broadcast, potential [T, T] int8)."""
+    T, O, Vp = cids.shape
+    assert T % block_t == 0, (T, block_t)
+    kern = functools.partial(_kernel, block_t=block_t, n_ops=O)
+    grid = (T // block_t, T // block_t)
+    ring = pl.BlockSpec((block_t, O, Vp), lambda i, j: (i, 0, 0))
+    row2d = pl.BlockSpec((block_t, O), lambda i, j: (i, 0))
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            ring, ring, ring, ring,                     # cid/tid/sid/val
+            row2d,                                      # max_cid
+            row2d,                                      # read_key (block i)
+            pl.BlockSpec((block_t, O), lambda i, j: (j, 0)),  # write_key (j)
+            row2d,                                      # rvalid
+        ],
+        out_specs=[
+            row2d, row2d, row2d, row2d, row2d,          # slot + r_* gathers
+            pl.BlockSpec((block_t, 128), lambda i, j: (i, 0)),  # s_lo0
+            pl.BlockSpec((block_t, block_t), lambda i, j: (i, j)),  # potential
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, O), jnp.int32),
+            jax.ShapeDtypeStruct((T, O), jnp.int32),
+            jax.ShapeDtypeStruct((T, O), jnp.int32),
+            jax.ShapeDtypeStruct((T, O), jnp.int32),
+            jax.ShapeDtypeStruct((T, O), jnp.int32),
+            jax.ShapeDtypeStruct((T, 128), jnp.int32),
+            jax.ShapeDtypeStruct((T, T), jnp.int8),
+        ],
+        interpret=interpret,
+    )(cids, tids, sids, vals, max_cid, read_key, write_key, rvalid)
+    return outs

@@ -250,21 +250,26 @@ print("DIST-HYPOTHESIS-OK")
 
 
 def test_dist_engine_kernel_backends_bit_identical():
-    """The kernel-backend plane on the mesh: all six schedulers produce
-    bit-identical WaveOut under ``jnp`` vs ``pallas_interpret`` on the
-    MeshSubstrate, per-wave AND fused — and both match the LocalSubstrate
-    under either backend (acceptance gate of the backend refactor; the
-    version_scan kernel runs on each node's local block inside shard_map)."""
+    """The kernel-backend plane on the mesh: all SEVEN schedulers (the six
+    optimistic ones plus "planned") produce bit-identical WaveOut under
+    ``jnp`` vs ``pallas_interpret``, three-dispatch vs fused megakernel, on
+    the MeshSubstrate, per-wave AND scan-fused — and all match the
+    LocalSubstrate (acceptance gate of the backend refactor; the
+    version_scan / wave_commit kernels run on each node's local block
+    inside shard_map).  The pallas_interpret configs must dispatch real
+    (interpreted) Pallas on the mesh: the degrade counter stays ZERO."""
     print(_run(r"""
 import numpy as np
 from repro.core import SCHEDULERS, make_store, run_workload
 from repro.core.dist_engine import (make_node_mesh, run_workload_dist,
                                     run_workload_fused_dist, shard_store)
+from repro.core.substrate import mesh_degrade_count
 from repro.core.workloads import smallbank_waves
+from repro.planner import run_workload_planned
 
 n_nodes, kpn, W, T = 4, 16, 2, 12
 mesh = make_node_mesh(n_nodes)
-BACKENDS = ("jnp", "pallas_interpret")
+CONFIGS = ("jnp", "pallas_interpret", "jnp+fused", "pallas_interpret+fused")
 
 for sched in SCHEDULERS:
     waves = smallbank_waves(np.random.RandomState(13), W, T, n_nodes, kpn,
@@ -273,7 +278,7 @@ for sched in SCHEDULERS:
     ref = run_workload(make_store(n_nodes*kpn, 8), waves, sched=sched,
                        n_nodes=n_nodes, host_skew=hs, gc_track=True,
                        kernels="jnp")
-    for bk in BACKENDS:
+    for bk in CONFIGS:
         for drv, runner in (("perwave", run_workload_dist),
                             ("fused", run_workload_fused_dist)):
             st, h, s = runner(shard_store(make_store(n_nodes*kpn, 8), mesh),
@@ -290,6 +295,36 @@ for sched in SCHEDULERS:
                     np.asarray(f1), np.asarray(f2),
                     err_msg=f"{sched}.{bk}.{drv}.store.{name}")
     print(f"DIST-BACKEND-{sched}-OK")
+
+# the seventh scheduler: planned lane dispatch on the mesh, every config
+waves = smallbank_waves(np.random.RandomState(29), 2, 12, n_nodes, kpn,
+                        dist_frac=0.5, hot_frac=0.5, hot_per_node=3)
+ref = None
+for bk in CONFIGS:
+    st, h, s = run_workload_planned(
+        shard_store(make_store(n_nodes*kpn, 8), mesh), waves, sched="postsi",
+        n_nodes=n_nodes, mesh=mesh, kernels=bk)
+    assert s.aborted == 0, (bk, s)
+    if ref is None:
+        ref = (st, h, s)
+        continue
+    assert s._replace(plan_s=0) == ref[2]._replace(plan_s=0), (bk, s, ref[2])
+    for (t1, o1), (t2, o2) in zip(ref[1], h):
+        np.testing.assert_array_equal(t1, t2)
+        for name, f1, f2 in zip(o1._fields, o1, o2):
+            np.testing.assert_array_equal(f1, f2,
+                                          err_msg=f"planned.{bk}.{name}")
+    for name, f1, f2 in zip(ref[0]._fields, ref[0], st):
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
+                                      err_msg=f"planned.{bk}.store.{name}")
+print("DIST-BACKEND-planned-OK")
+
+# degrade gate: no config above may have been served by a silent jnp
+# fallback — pallas_interpret passes through shard_map as real
+# (interpreted) Pallas, and only a true compiled-'pallas' request on a
+# probe-failing platform is allowed to degrade (none was made here)
+assert mesh_degrade_count() == 0, mesh_degrade_count()
+print("DIST-DEGRADE-ZERO-OK")
 """))
 
 

@@ -1,8 +1,9 @@
 """Fused-executor and shared-commit-phase tests (DESIGN.md §7).
 
 * the Pallas anti-dependency kernel (interpret=True on CPU) against the
-  engine's dense jnp reference on randomized key sets, including all-NOP
-  rows and the diagonal mask;
+  jnp oracle ``kernels.ref.potential_matrix_ref`` (the only jnp copy of the
+  build) on randomized key sets, including all-NOP rows and the diagonal
+  mask;
 * the single-dispatch lax.scan executor against the per-wave debug driver:
   bit-identical WaveOut history over a multi-wave SmallBank workload for
   every scheduler.
@@ -13,10 +14,16 @@ import pytest
 
 from repro.core import (SCHEDULERS, make_store, run_workload,
                         run_workload_fused)
-from repro.core.commit_phase import build_potential, potential_matrix_jnp
-from repro.core.engine import _potential_antidep
+from repro.core.commit_phase import build_potential
 from repro.core.workloads import smallbank_waves
 from repro.kernels.interval_negotiate import potential_matrix_pallas
+from repro.kernels.ref import potential_matrix_ref
+
+
+def _oracle(keys, is_r, is_w):
+    """bool oracle with the engine's mask convention."""
+    return np.asarray(potential_matrix_ref(
+        jnp.where(is_r, keys, -1), jnp.where(is_w, keys, -1))).astype(bool)
 
 
 # ------------------------------------------------------- potential matrix
@@ -32,7 +39,7 @@ def test_potential_pallas_vs_engine_reference(T, O, n_keys):
     is_r = is_r.at[nop_rows].set(False)
     is_w = is_w.at[nop_rows].set(False)
 
-    ref = np.asarray(_potential_antidep(keys, keys, is_r, is_w))
+    ref = _oracle(keys, is_r, is_w)
     rk = jnp.where(is_r, keys, -1)
     wk = jnp.where(is_w, keys, -1)
     krn = np.asarray(potential_matrix_pallas(rk, wk, block_t=T // 2,
@@ -54,8 +61,7 @@ def test_build_potential_backends_agree():
     b = np.asarray(build_potential(keys, is_r, is_w,
                                    backend="pallas_interpret"))
     np.testing.assert_array_equal(a, b)
-    np.testing.assert_array_equal(
-        a, np.asarray(potential_matrix_jnp(keys, keys, is_r, is_w)))
+    np.testing.assert_array_equal(a, _oracle(keys, is_r, is_w))
 
 
 # ------------------------------------------------- fused scan vs per-wave

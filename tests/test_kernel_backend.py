@@ -29,6 +29,8 @@ from repro.core.workloads import micro_waves, smallbank_waves
 from repro.kernels import ops
 
 BACKENDS = ("jnp", "pallas_interpret")
+# the four CPU-runnable configs: each backend, three-dispatch and fused
+CONFIGS = ("jnp", "pallas_interpret", "jnp+fused", "pallas_interpret+fused")
 
 
 # ------------------------------------------------------------------ config
@@ -44,6 +46,21 @@ def test_kernel_config_resolution():
     assert resolve(None).backend in ("pallas", "pallas_interpret", "jnp")
     with pytest.raises(AssertionError):
         KernelConfig("cuda")
+
+
+def test_kernel_config_fused_spec():
+    """The ``+fused`` suffix and the ``fused`` field are the same knob, it
+    survives resolution, and the spec string round-trips."""
+    cfg = KernelConfig("pallas_interpret+fused")
+    assert cfg.backend == "pallas_interpret" and cfg.fused
+    assert cfg == KernelConfig("pallas_interpret", fused=True)
+    assert cfg.name == "pallas_interpret+fused"
+    assert resolve(cfg.name) == cfg
+    assert KernelConfig("auto+fused").fused
+    assert not KernelConfig("jnp").fused
+    assert KernelConfig("jnp").name == "jnp"
+    with pytest.raises(AssertionError):
+        KernelConfig("cuda+fused")
 
 
 def test_set_potential_backend_shim_forwards_and_warns():
@@ -102,15 +119,16 @@ def _assert_same(h1, s1, st1, h2, s2, st2, tag):
 
 @pytest.mark.parametrize("sched", SCHEDULERS)
 def test_backends_bit_identical_local(sched):
-    """jnp vs pallas_interpret: same WaveOut history and final store for
-    every scheduler, on both the per-wave and the fused driver."""
+    """jnp vs pallas_interpret, three-dispatch vs fused megakernel: same
+    WaveOut history and final store for every scheduler, on both the
+    per-wave and the scan driver."""
     rng = np.random.RandomState(1)
     n_nodes, kpn, W, T = 4, 60, 4, 16
     waves = smallbank_waves(rng, W, T, n_nodes, kpn, dist_frac=0.5,
                             hot_frac=0.4, hot_per_node=4)
     hs = np.array([0, 1, 1, 2], np.int32) if sched == "clocksi" else None
     runs = {}
-    for bk in BACKENDS:
+    for bk in CONFIGS:
         runs[bk] = {
             "perwave": run_workload(
                 make_store(n_nodes * kpn, 8), waves, sched=sched,
@@ -120,15 +138,44 @@ def test_backends_bit_identical_local(sched):
                 n_nodes=n_nodes, host_skew=hs, gc_track=True, kernels=bk),
         }
     for driver in ("perwave", "fused"):
-        st1, h1, s1 = runs["jnp"][driver]
-        st2, h2, s2 = runs["pallas_interpret"][driver]
-        _assert_same(h1, s1, st1, h2, s2, st2, f"{sched}.{driver}")
-    # and fused == perwave within each backend (the §7 contract holds per
-    # backend, not just for the default)
-    for bk in BACKENDS:
+        st1, h1, s1 = runs[CONFIGS[0]][driver]
+        for bk in CONFIGS[1:]:
+            st2, h2, s2 = runs[bk][driver]
+            _assert_same(h1, s1, st1, h2, s2, st2, f"{sched}.{driver}.{bk}")
+    # and fused == perwave within each config (the §7 contract holds per
+    # config, not just for the default)
+    for bk in CONFIGS:
         st1, h1, s1 = runs[bk]["perwave"]
         st2, h2, s2 = runs[bk]["fused"]
         _assert_same(h1, s1, st1, h2, s2, st2, f"{sched}.{bk}.fusedvswave")
+
+
+def test_planned_scheduler_fused_kernel_bit_identical():
+    """The seventh scheduler ("planned", PR 7) dispatches through
+    ``step_block``; the fused megakernel must leave its lane execution
+    bit-identical too — outcomes, stores, and the zero-abort invariant."""
+    from repro.planner import run_workload_planned
+    rng = np.random.RandomState(5)
+    n_nodes, kpn, W, T = 4, 16, 3, 16
+    waves = smallbank_waves(rng, W, T, n_nodes, kpn, dist_frac=0.5,
+                            hot_frac=0.5, hot_per_node=3)
+    runs = [run_workload_planned(make_store(n_nodes * kpn, 8), waves,
+                                 sched="postsi", n_nodes=n_nodes, kernels=bk)
+            for bk in CONFIGS]
+    st1, h1, s1 = runs[0]
+    assert s1.aborted == 0
+    for (st2, h2, s2), bk in zip(runs[1:], CONFIGS[1:]):
+        # plan_s is host wall-clock — everything else must match exactly
+        assert s1._replace(plan_s=0) == s2._replace(plan_s=0), (bk, s1, s2)
+        for (t1, o1), (t2, o2) in zip(h1, h2):
+            np.testing.assert_array_equal(t1, t2)
+            for name, f1, f2 in zip(o1._fields, o1, o2):
+                np.testing.assert_array_equal(f1, f2,
+                                              err_msg=f"planned.{bk}.{name}")
+        for name, f1, f2 in zip(st1._fields, st1, st2):
+            np.testing.assert_array_equal(
+                np.asarray(f1), np.asarray(f2),
+                err_msg=f"planned.{bk}.store.{name}")
 
 
 def test_backends_hypothesis_random_waves():
@@ -178,14 +225,16 @@ def _nop_padded_wave(pad_key: int, T: int = 8, O: int = 3) -> Wave:
                          op_val=jnp.asarray(val))
 
 
-@pytest.mark.parametrize("kernels", BACKENDS)
+@pytest.mark.parametrize("kernels", CONFIGS)
 def test_negative_key_nop_padding_regression(kernels):
     """A wave NOP-padded with key -1 (negative padding would wrap to the
-    LAST key under minimum-clamping) must produce the exact same WaveOut,
-    final store and GC accounting as one padded with key 0."""
+    LAST key under minimum-clamping) or with a HOT real key (the clamp
+    sentinel collision the fused-kernel audit guards) must produce the
+    exact same WaveOut, final store and GC accounting as one padded with
+    key 0 — on every backend x fusion config."""
     n_keys = 16
     outs = []
-    for pad_key in (0, -1):
+    for pad_key in (0, -1, 3):
         wave = _nop_padded_wave(pad_key)
         store = make_store(n_keys, 2)      # V=2: wraps fast, GC check live
         # wrap every ring so evicting_visible has real evictions to see
@@ -197,13 +246,14 @@ def test_negative_key_nop_padding_regression(kernels):
                               jnp.int32(2), sched="postsi", gc_track=True,
                               watermark=jnp.int32(0), kernels=kernels)
         outs.append((st, out))
-    (st0, o0), (st1, o1) = outs
-    for name, f1, f2 in zip(o0._fields, o0, o1):
-        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
-                                      err_msg=f"padkey.{name}")
-    for name, f1, f2 in zip(st0._fields, st0, st1):
-        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
-                                      err_msg=f"padkey.store.{name}")
+    (st0, o0) = outs[0]
+    for st1, o1 in outs[1:]:
+        for name, f1, f2 in zip(o0._fields, o0, o1):
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
+                                          err_msg=f"padkey.{name}")
+        for name, f1, f2 in zip(st0._fields, st0, st1):
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
+                                          err_msg=f"padkey.store.{name}")
 
 
 def test_evicting_visible_clamps_negative_keys():

@@ -131,15 +131,160 @@ def test_potential_matrix_vs_ref(T, O):
 
 
 def test_potential_matrix_matches_engine():
-    from repro.core.engine import _potential_antidep
+    """The engine's build route (``commit_phase.build_potential`` on the jnp
+    leg — which is just ``ref.potential_matrix_ref``, the only jnp copy) must
+    equal the kernel."""
+    from repro.core.commit_phase import build_potential
     rng = np.random.RandomState(6)
     T, O = 64, 4
     keys = jnp.asarray(rng.randint(0, 30, (T, O)), jnp.int32)
     is_r = jnp.asarray(rng.rand(T, O) < 0.5)
     is_w = jnp.asarray(rng.rand(T, O) < 0.5)
-    eng = _potential_antidep(keys, keys, is_r, is_w)
+    eng = build_potential(keys, is_r, is_w, backend="jnp")
     rk = jnp.where(is_r, keys, -1)
     wk = jnp.where(is_w, keys, -1)
     krn = ops.potential_matrix(rk, wk, use_pallas=True, interpret=True,
                                block_t=64)
     np.testing.assert_array_equal(np.asarray(eng), np.asarray(krn).astype(bool))
+
+
+# ---------------------------------------------------- fused wave-commit kernel
+def _ring_inputs(seed, T, O, V, n_keys=64):
+    """Random gathered-ring inputs with the store invariants the kernel
+    relies on: per-ring CIDs unique and >= 0, empty slots tid = -1."""
+    rng = np.random.RandomState(seed)
+    # unique cids per (t, o) ring via a shuffled base sequence
+    cids = np.argsort(rng.rand(T, O, V), axis=2) * 3 + \
+        rng.randint(0, 3, (T, O, 1))
+    tids = np.where(rng.rand(T, O, V) < 0.3, -1, rng.randint(1, 99, (T, O, V)))
+    sids = rng.randint(0, 40, (T, O, V))
+    vals = rng.randint(-100, 100, (T, O, V))
+    mc = rng.randint(-1, 3 * V, (T, O))     # includes all-invisible ceilings
+    keys = rng.randint(0, n_keys, (T, O))
+    is_r = rng.rand(T, O) < 0.5
+    is_w = rng.rand(T, O) < 0.4
+    to = lambda a: jnp.asarray(a, jnp.int32)
+    return (to(cids), to(tids), to(sids), to(vals), to(mc),
+            jnp.where(jnp.asarray(is_r), to(keys), -1),
+            jnp.where(jnp.asarray(is_w), to(keys), -1), jnp.asarray(is_r))
+
+
+@pytest.mark.parametrize("T,O,V", [(16, 3, 4), (64, 8, 8), (130, 5, 6)])
+def test_wave_commit_vs_ref(T, O, V):
+    """Fused megakernel (interpret) == the jnp oracle composition, every
+    output, including non-aligned T/O shapes the wrapper pads."""
+    args = _ring_inputs(7, T, O, V)
+    out_p = ops.wave_commit(*args, use_pallas=True, interpret=True)
+    out_r = ops.wave_commit(*args, use_pallas=False)
+    names = ("slot", "r_val", "r_tid", "r_cid", "r_sid", "s_lo0", "potential")
+    for name, a, b in zip(names, out_p, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_wave_commit_vs_unfused_composition():
+    """Fused == the exact three-op route it replaces (same backend): the
+    version_scan slots, the slot gathers, the rule-3 seed reduction and the
+    potential tile, dispatched separately."""
+    T, O, V = 48, 4, 6
+    cids, tids, sids, vals, mc, rk, wk, rvalid = _ring_inputs(11, T, O, V)
+    (slot, r_val, r_tid, r_cid, r_sid, s_lo0, pot) = ops.wave_commit(
+        cids, tids, sids, vals, mc, rk, wk, rvalid,
+        use_pallas=True, interpret=True)
+    slot_u, _ = ops.version_scan(cids.reshape(-1, V), tids.reshape(-1, V),
+                                 mc.reshape(-1), use_pallas=True,
+                                 interpret=True)
+    slot_u = slot_u.reshape(T, O)
+    take = lambda a: jnp.take_along_axis(a, slot_u[..., None], -1)[..., 0]
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_u))
+    np.testing.assert_array_equal(np.asarray(r_cid), np.asarray(take(cids)))
+    np.testing.assert_array_equal(np.asarray(r_val), np.asarray(take(vals)))
+    np.testing.assert_array_equal(np.asarray(r_tid), np.asarray(take(tids)))
+    np.testing.assert_array_equal(np.asarray(r_sid), np.asarray(take(sids)))
+    s_lo0_u = jnp.where(rvalid, take(cids), 0).max(axis=1)
+    np.testing.assert_array_equal(np.asarray(s_lo0), np.asarray(s_lo0_u))
+    pot_u = ops.potential_matrix(rk, wk, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pot), np.asarray(pot_u))
+
+
+def test_wave_commit_hypothesis_random_waves():
+    """Property sweep: for random live waves on a live store, the fused and
+    unfused read phases agree on every substrate output (the satellite-4
+    random-wave differential at the kernel seam)."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core import make_store
+    from repro.core.engine import run_wave
+    from repro.core.substrate import LocalSubstrate
+    from repro.core.workloads import micro_waves
+    from repro.kernels import KernelConfig
+
+    n_nodes, kpn, T = 4, 16, 12
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 2 ** 16),
+           read_ratio=st.sampled_from([0.2, 0.7]),
+           ceiling=st.sampled_from([0, 2, 1 << 30]))
+    def check(seed, read_ratio, ceiling):
+        waves = micro_waves(np.random.RandomState(seed), 2, T, n_nodes, kpn,
+                            n_ops=3, read_ratio=read_ratio, dist_frac=0.5,
+                            hot_frac=0.6, hot_per_node=2)
+        # a populated store: run the first wave through the engine
+        store = make_store(n_nodes * kpn, 4)
+        store, _, _ = run_wave(store, waves[0], jnp.int32(1), jnp.int32(1),
+                               jnp.int32(n_nodes), kernels="jnp")
+        wave = waves[1]
+        is_r = (wave.op_kind == 1) | (wave.op_kind == 3)
+        is_w = (wave.op_kind == 2) | (wave.op_kind == 3)
+        mc = jnp.broadcast_to(jnp.int32(ceiling), wave.op_key.shape)
+        outs = [LocalSubstrate(cfg).read_phase(store, wave.op_key, mc,
+                                               is_r, is_w)
+                for cfg in (KernelConfig("pallas_interpret"),
+                            KernelConfig("pallas_interpret", fused=True),
+                            KernelConfig("jnp", fused=True))]
+        names = ("r_val", "r_tid", "r_cid", "r_sid", "r_slot", "s_lo0",
+                 "potential")
+        for got in outs[1:]:
+            for name, a, b in zip(names, outs[0], got):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                              err_msg=f"{seed}.{name}")
+
+    check()
+
+
+@pytest.mark.parametrize("pad_key", [0, -1, 5])
+def test_wave_commit_nop_padding_no_false_edges(pad_key):
+    """Satellite audit: two NOP-padded txns sharing the clamp sentinel key
+    (0, -1, or a HOT real key) must not grow a false anti-dependency edge in
+    any of the three fused bodies — adversarial placement interleaves the
+    NOP rows with real txns instead of suffix-padding them."""
+    T, O, V = 16, 3, 4
+    cids, tids, sids, vals, mc, rk, wk, rvalid = _ring_inputs(13, T, O, V,
+                                                              n_keys=8)
+    # interleaved NOP rows: every third txn is padding, all ops masked off
+    # but the raw key column set to the adversarial pad_key
+    nop_rows = np.arange(0, T, 3)
+    rk = rk.at[nop_rows].set(-1)          # NOP => not a read
+    wk = wk.at[nop_rows].set(-1)          # NOP => not a write
+    rvalid = rvalid.at[nop_rows].set(False)
+    # real txn 1 reads AND writes pad_key's clamped target to maximize the
+    # chance a sentinel mixup would connect it to the padding rows
+    hot = max(pad_key, 0)
+    rk = rk.at[1, 0].set(hot)
+    wk = wk.at[1, 1].set(hot)
+    rvalid = rvalid.at[1, 0].set(True)
+    for use_pallas in (False, True):
+        _, _, _, _, _, s_lo0, pot = ops.wave_commit(
+            cids, tids, sids, vals, mc, rk, wk, rvalid,
+            use_pallas=use_pallas, interpret=use_pallas)
+        pot = np.asarray(pot).astype(bool)
+        assert not pot[nop_rows].any(), "NOP row grew outgoing rw edges"
+        assert not pot[:, nop_rows].any(), "NOP row grew incoming rw edges"
+        # the three bodies separately: version scan and potential directly,
+        # the seed via the rvalid mask — NOP rows contribute exactly 0
+        assert (np.asarray(s_lo0)[nop_rows] == 0).all()
+        pot_u = np.asarray(ops.potential_matrix(
+            rk, wk, use_pallas=use_pallas,
+            interpret=use_pallas)).astype(bool)
+        np.testing.assert_array_equal(pot, pot_u)
