@@ -78,6 +78,28 @@ def _timed(setup, fn, reps: int = 3):
     return out, best, warmup
 
 
+def _history_occupancy(history, n_nodes: int, kpn: int):
+    """Per-node committed-txn occupancy from a driver/service history:
+    each committed txn is attributed to the PHYSICAL block owner
+    (``key // kpn``) of its first touched key — the node whose version
+    rings its commit actually landed on under the static block layout."""
+    import numpy as np
+    occ = np.zeros(n_nodes, np.int64)
+    for _, out in history:
+        st = np.asarray(out.status)
+        rk, wk = np.asarray(out.read_key), np.asarray(out.write_key)
+        keys = np.where(rk >= 0, rk, wk)              # [T, O], -1 = no op
+        for t in np.nonzero(st == 1)[0]:              # COMMITTED
+            touched = keys[t][keys[t] >= 0]
+            if touched.size:
+                occ[int(touched[0]) // kpn] += 1
+    return occ
+
+
+def _imbalance(occ) -> float:
+    return round(float(occ.max() / occ.mean()), 4) if occ.sum() else 0.0
+
+
 def _scaling(scheds, node_counts, n_waves, T) -> Dict:
     from repro.core import make_store
     from repro.core.dist_engine import (make_node_mesh, run_workload_fused_dist,
@@ -96,8 +118,9 @@ def _scaling(scheds, node_counts, n_waves, T) -> Dict:
                 return run_workload_fused_dist(st, waves, mesh, sched=sched,
                                                n_nodes=n, host_skew=hs)
 
-            (_, _, stats), wall, warm = _timed(setup, run)
+            (_, hist, stats), wall, warm = _timed(setup, run)
             n_txn = stats.committed + stats.aborted
+            occ = _history_occupancy(hist, n, N_KEYS // n)
             rows.append({
                 "sched": sched, "n_nodes": n, "wall_s": round(wall, 6),
                 "warmup_s": round(warm, 6),
@@ -105,6 +128,8 @@ def _scaling(scheds, node_counts, n_waves, T) -> Dict:
                 "goodput_tps": round(stats.committed / wall, 1),
                 "txns_per_sec": round(n_txn / wall, 1),
                 "msgs_cross": stats.msgs_cross,
+                "occupancy": occ.tolist(),
+                "imbalance": _imbalance(occ),
             })
     return {"rows": rows}
 
@@ -168,6 +193,123 @@ def _service(n, T, n_ticks, sched: str = "postsi") -> Dict:
     return out
 
 
+ELASTIC_THETA = 0.99
+ELASTIC_READ_FRAC = 0.97
+ELASTIC_N_OPS = 2
+ELASTIC_TICKS = 20
+ELASTIC_REFRESH = 8
+ELASTIC_LOAD = 3         # arrivals per tick = LOAD * T: offer more than the
+                         # engine's admission cap (4T queue) can absorb, the
+                         # open-system regime where static load-shedding
+                         # starts rejecting but replica-served reads never
+                         # enter the queue at all
+ELASTIC_MASS = 0.95      # replica hot set: rank prefix covering this much
+ELASTIC_MAX_FRAC = 0.4   # of the zipf mass, capped at 40% of the key space
+
+
+def _elastic(node_counts, T, n_ticks) -> Dict:
+    """Static vs elastic service pairs on IDENTICAL zipf θ=0.99 read-heavy
+    streams (paper §V-D's hot-shard regime: the interleaved key encoding
+    lands every node's rank-0 hot keys in node 0's physical block, so the
+    static mesh serializes on one node while the others idle).
+
+    Two goodput columns per row, honestly labeled:
+
+    * ``goodput_tps`` — MEASURED committed/s on the virtual-device mesh.
+      The elastic lever that moves this number is real: hot-key read-only
+      txns are answered from the visibility-floor replicas at submit time
+      and never enter the engine, so the elastic service dispatches roughly
+      half the waves for the same committed work.
+    * ``modeled_goodput_tps`` — simcost.py's cluster cost model (T_OP per
+      executed op on the OWNING node) with the makespan taken as the MAX
+      per-node busy time from measured occupancy, not the perfect-balance
+      ``/ n_nodes`` the static model assumes.  Replica-served reads cost
+      the engine nothing (a host hashmap hit at submit).  Cross-node
+      message latency is excluded (the service report does not split
+      messages per node); the column isolates the load-balance axis.
+    """
+    import numpy as np
+    from repro.core.dist_engine import make_node_mesh
+    from repro.core.workloads import zipf_hot_keys
+    from repro.placement import PlacementMap
+    from repro.service import TxnService, ycsb_txn_gen
+    from .simcost import T_OP
+    rows = []
+    for n in node_counts:
+        kpn = N_KEYS // n
+        mesh = make_node_mesh(n)
+        row = {"n_nodes": n, "theta": ELASTIC_THETA}
+
+        def make_svc(elastic: bool) -> TxnService:
+            return TxnService(
+                n_keys=N_KEYS, n_versions=8, T=T, O=ELASTIC_N_OPS,
+                sched="postsi", n_nodes=n, seed=0, mesh=mesh,
+                placement=(PlacementMap(N_KEYS, n, headroom=2)
+                           if elastic else None),
+                replicas=(zipf_hot_keys(n, kpn, ELASTIC_THETA,
+                                        mass=ELASTIC_MASS,
+                                        max_frac=ELASTIC_MAX_FRAC)
+                          if elastic else None),
+                balancer=elastic or None, replica_refresh=ELASTIC_REFRESH)
+
+        def stream():
+            return ycsb_txn_gen(np.random.RandomState(31), n, kpn,
+                                theta=ELASTIC_THETA,
+                                read_frac=ELASTIC_READ_FRAC,
+                                n_ops=ELASTIC_N_OPS)
+
+        for tag in ("static", "elastic"):
+            elastic = tag == "elastic"
+            # _timed's policy applied to service sessions: XLA compiles
+            # (wave fn, replica-refresh gather, move kernel pad sizes) are
+            # paid by a discarded warmup session, the measured run is
+            # steady-state.  The jitted fns are lru-cached per mesh/shape,
+            # so a fresh service reuses them.
+            warm = make_svc(elastic)
+            warm.run_stream([ELASTIC_LOAD * T] * 4, stream())
+            if elastic:
+                for m in (5, 10, 20, 40):    # move pads 8/16/32/64
+                    lo = int(np.argmax(warm.placement.owner
+                                       == warm.placement.owner[0]))
+                    warm.move_range(lo, lo + m,
+                                    (int(warm.placement.owner[lo]) + 1) % n)
+            svc = rep = None
+            for _ in range(3):               # _timed's reps policy: best of 3
+                cand = make_svc(elastic)
+                r = cand.run_stream([ELASTIC_LOAD * T] * n_ticks, stream())
+                if rep is None or r.wall_s < rep.wall_s:
+                    svc, rep = cand, r
+            occ = (np.asarray(rep.occupancy, np.int64) if elastic
+                   else _history_occupancy(svc.history, n, kpn))
+            busy_us = occ * ELASTIC_N_OPS * T_OP
+            makespan_us = float(busy_us.max()) or T_OP
+            row[tag] = {
+                "committed": rep.committed,
+                "offered": rep.offered,
+                "rejected": rep.rejected,
+                "wall_s": round(rep.wall_s, 6),
+                "goodput_tps": round(rep.goodput_tps, 1),
+                "modeled_goodput_tps": round(
+                    rep.committed / makespan_us * 1e6, 1),
+                "waves": rep.waves,
+                "occupancy": occ.tolist(),
+                "imbalance": _imbalance(occ),
+                "replica_commits": rep.replica_commits,
+                "placement_moves": rep.placement_moves,
+                "moved_keys": rep.moved_keys,
+                "verify_errors": len(svc.verify()),
+            }
+        row["goodput_ratio"] = round(
+            row["elastic"]["goodput_tps"]
+            / max(row["static"]["goodput_tps"], 1e-9), 2)
+        row["modeled_ratio"] = round(
+            row["elastic"]["modeled_goodput_tps"]
+            / max(row["static"]["modeled_goodput_tps"], 1e-9), 2)
+        rows.append(row)
+    return {"read_frac": ELASTIC_READ_FRAC, "n_ops": ELASTIC_N_OPS,
+            "ticks": n_ticks, "wave_T": T, "rows": rows}
+
+
 def run(smoke: bool = False) -> Dict:
     import jax
     from repro.core import SCHEDULERS
@@ -193,6 +335,9 @@ def run(smoke: bool = False) -> Dict:
         "scaling": _scaling(scheds, node_counts, n_waves, T),
         "executor": _executor(scheds, n_max, n_waves, T),
         "service": _service(n_max, T, svc_ticks),
+        "elastic": _elastic(node_counts, T,
+                            max(3, ELASTIC_TICKS // 2) if smoke
+                            else ELASTIC_TICKS),
     }
 
 
@@ -221,10 +366,60 @@ def print_csv(report: Dict) -> None:
               f"{r['wall_s'] * 1e6 / max(r['executions'], 1):.2f},"
               f"goodput={r['goodput_tps']:.0f}tps committed={r['committed']} "
               f"verify_errors={r['verify_errors']}", flush=True)
+    for row in report.get("elastic", {}).get("rows", []):
+        for tag in ("static", "elastic"):
+            r = row[tag]
+            print(f"dist/elastic/{tag}/n{row['n_nodes']},"
+                  f"{r['wall_s'] * 1e6 / max(r['committed'], 1):.2f},"
+                  f"goodput={r['goodput_tps']:.0f}tps "
+                  f"modeled={r['modeled_goodput_tps']:.0f}tps "
+                  f"imbalance={r['imbalance']:.2f} "
+                  f"replica_commits={r['replica_commits']} "
+                  f"moves={r['placement_moves']}", flush=True)
+
+
+def elastic_smoke() -> Dict:
+    """CI gate (the ``elastic-smoke`` workflow leg): elastic must beat
+    static at the paper's hardest skew on the full 8-virtual-device mesh,
+    with zero silent kernel degrades, and the artifacts go to
+    ``artifacts/elastic_smoke`` for the run page."""
+    from repro.core.substrate import mesh_degrade_count
+    import jax
+    n = min(8, jax.device_count())
+    report = {"config": {"n_nodes": n, "theta": ELASTIC_THETA,
+                         "device_count": jax.device_count()},
+              "elastic": _elastic((1, n), WAVE_T, ELASTIC_TICKS)}
+    rows = report["elastic"]["rows"]
+    by_n = {r["n_nodes"]: r for r in rows}
+    top = by_n[n]
+    assert top["elastic"]["goodput_tps"] >= top["static"]["goodput_tps"], top
+    modeled = [r["elastic"]["modeled_goodput_tps"] for r in rows]
+    assert modeled == sorted(modeled), \
+        f"elastic modeled goodput not non-decreasing 1->{n}: {modeled}"
+    assert top["elastic"]["verify_errors"] == 0, top
+    assert mesh_degrade_count() == 0, mesh_degrade_count()
+    out_dir = os.path.join(os.path.dirname(OUT_PATH), "artifacts",
+                           "elastic_smoke")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "elastic_smoke.json"), "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    for row in rows:
+        print(f"elastic-smoke n={row['n_nodes']}: "
+              f"static={row['static']['goodput_tps']:.0f}tps "
+              f"elastic={row['elastic']['goodput_tps']:.0f}tps "
+              f"(x{row['goodput_ratio']:.2f} measured, "
+              f"x{row['modeled_ratio']:.2f} modeled) "
+              f"replica_commits={row['elastic']['replica_commits']} "
+              f"moves={row['elastic']['placement_moves']}", flush=True)
+    print("ELASTIC-SMOKE-OK", flush=True)
+    return report
 
 
 def main(argv=None) -> Dict:
     argv = sys.argv[1:] if argv is None else argv
+    if "--elastic-smoke" in argv:
+        return elastic_smoke()
     report = run(smoke="--smoke" in argv)
     write_report(report)
     print_csv(report)

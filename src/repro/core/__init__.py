@@ -10,7 +10,8 @@ from .engine import (NOP, READ, RMW, WRITE, RUNNING, COMMITTED, ABORTED,
                      SCHEDULERS, Wave, WaveOut, RunStats, run_block,
                      run_wave, run_wave_on, run_workload,
                      run_workload_fused, stack_waves, step_block, step_wave)
-from .store import (MVStore, evicting_visible, make_store, read_newest,
+from .store import (MVStore, PlacementArrays, as_placement_arrays,
+                    evicting_visible, make_store, read_newest,
                     read_visible, node_of_key)
 from .substrate import LocalSubstrate, MeshSubstrate
 from .verify import verify_cv, verify_si
@@ -23,6 +24,7 @@ __all__ = [
     "step_block", "step_wave",
     "KernelConfig", "default_backend", "resolve", "set_default_backend",
     "potential_backend", "set_potential_backend", "MVStore",
+    "PlacementArrays", "as_placement_arrays",
     "evicting_visible", "make_store", "read_newest", "read_visible",
     "node_of_key", "LocalSubstrate", "MeshSubstrate", "verify_cv",
     "verify_si", "workloads",

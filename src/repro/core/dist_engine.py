@@ -35,6 +35,7 @@ per-wave and fused paths (tests/test_distribution.py).
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -46,7 +47,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import KernelConfig
 from .engine import Wave, WaveOut, _stats_of, run_wave_on
-from .store import MVStore
+from .store import MVStore, PlacementArrays, as_placement_arrays, make_store
 from .substrate import MeshSubstrate, mesh_kernels
 
 
@@ -66,19 +67,38 @@ def make_node_mesh(n_nodes: int) -> Mesh:
     return Mesh(np.array(devs[:n_nodes]), ("node",))
 
 
-def shard_store(store: MVStore, mesh: Mesh) -> MVStore:
+def shard_store(store: MVStore, mesh: Mesh,
+                n_slots: int | None = None) -> MVStore:
     """Block-partition a store over the mesh's ``node`` axis.
 
-    Raises ``ValueError`` when ``n_keys`` does not divide the node count —
-    JAX would otherwise shard unevenly/pad and the substrate's
-    ``base = axis_index * n_local`` block arithmetic would resolve keys to
-    the wrong owner (silent corruption, not an error).
+    A key space that does not divide the node count is PADDED: trailing
+    empty rows (all ``tid == NO_TID`` — never visible, never routed to by
+    any valid key or placement) bring the row count up to the next multiple
+    of ``n_nodes``, so the substrate's ``base = axis_index * n_local`` block
+    arithmetic stays exact.  (This used to be a hard ``ValueError``; padding
+    is strictly better — the pad rows are unreachable by construction.)
+
+    ``n_slots`` (elastic placement) requests a specific padded row count —
+    ``PlacementMap.n_slots``, i.e. ``capacity * n_nodes`` with headroom for
+    range moves; it must be a multiple of ``n_nodes`` and >= the store's
+    current rows.
     """
     n_nodes = mesh.devices.size
-    if store.n_keys % n_nodes != 0:
-        raise ValueError(
-            f"shard_store: n_keys={store.n_keys} is not divisible by the "
-            f"mesh's {n_nodes} node(s); pad the key space or resize the mesh")
+    n_rows = store.n_keys
+    if n_slots is None:
+        n_slots = -(-n_rows // n_nodes) * n_nodes        # ceil to a multiple
+    if n_slots % n_nodes != 0:
+        raise ValueError(f"shard_store: n_slots={n_slots} is not a multiple "
+                         f"of the mesh's {n_nodes} node(s)")
+    if n_slots < n_rows:
+        raise ValueError(f"shard_store: n_slots={n_slots} < store rows "
+                         f"{n_rows}; the store does not shrink")
+    if n_slots > n_rows:
+        pad = make_store(n_slots - n_rows, store.n_versions)
+        # pad rows are EMPTY, not bootstrap rows: no key maps to them
+        pad = pad._replace(tid=jnp.full_like(pad.tid, -1))
+        store = MVStore(*(jnp.concatenate([a, b])
+                          for a, b in zip(store, pad)))
     sh = NamedSharding(mesh, P("node"))
     return MVStore(*(jax.device_put(a, sh) for a in store))
 
@@ -90,6 +110,34 @@ def shard_store(store: MVStore, mesh: Mesh) -> MVStore:
 _N_STORE = len(MVStore._fields)
 _N_WAVE = len(Wave._fields)
 _N_OUT = len(WaveOut._fields)
+
+
+def _norm_placement(placement) -> Tuple[jax.Array, jax.Array]:
+    """Placement tables as two replicated leaves for the shard_map boundary
+    (None cannot cross it): empty ``(0,)`` arrays are the no-placement
+    sentinel — a STATIC shape, so the placement-free trace stays exactly
+    the historical program."""
+    p = as_placement_arrays(placement)
+    if p is None:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z
+    return p.owner, p.slot
+
+
+def _denorm_placement(owner: jax.Array, slot: jax.Array):
+    return (None if owner.shape[0] == 0
+            else PlacementArrays(owner, slot))
+
+
+def _placement_check(store: MVStore, mesh: Mesh, placement, op_key) -> None:
+    """REPRO_PLACEMENT_CHECK=1: validate owner/slot routing against the
+    sharded store's block layout before dispatching (host-side, off the hot
+    path unless the env knob is set)."""
+    if os.environ.get("REPRO_PLACEMENT_CHECK", "0") in ("", "0"):
+        return
+    from repro.placement.map import validate_routing
+    validate_routing(int(store.head.shape[0]), mesh.devices.size,
+                     as_placement_arrays(placement), op_key)
 
 
 @functools.lru_cache(maxsize=None)
@@ -109,16 +157,18 @@ def _wave_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
     def node_fn(*args):
         st = MVStore(*args[:_N_STORE])
         wave = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])
-        wave_idx, clock, n_nodes, hs, wm = args[_N_STORE + _N_WAVE:]
+        wave_idx, clock, n_nodes, hs, wm, p_own, p_slot = \
+            args[_N_STORE + _N_WAVE:]
         st, out, clk = run_wave_on(sub, st, wave, wave_idx, clock, n_nodes,
                                    sched=sched, skew=skew, host_skew=hs,
                                    watermark=wm, gc_track=gc_track,
-                                   gc_block=gc_block)
+                                   gc_block=gc_block,
+                                   placement=_denorm_placement(p_own, p_slot))
         return (*st, *out, clk)
 
     mapped = shard_map(
         node_fn, mesh=mesh,
-        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 5),
+        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 7),
         out_specs=(P("node"),) * _N_STORE + (P(),) * (_N_OUT + 1),
         check_rep=False,
     )
@@ -137,15 +187,17 @@ def _scan_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
     def node_fn(*args):
         st = MVStore(*args[:_N_STORE])
         stacked = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])   # [W, ...] leaves
-        clock, n_nodes, hs = args[_N_STORE + _N_WAVE:]
+        clock, n_nodes, hs, p_own, p_slot = args[_N_STORE + _N_WAVE:]
         W = stacked.op_kind.shape[0]
+        pl = _denorm_placement(p_own, p_slot)
 
         def body(carry, xs):
             st, clk = carry
             wave, w_idx = xs
             st, out, clk = run_wave_on(sub, st, wave, w_idx, clk, n_nodes,
                                        sched=sched, skew=skew, host_skew=hs,
-                                       gc_track=gc_track, gc_block=gc_block)
+                                       gc_track=gc_track, gc_block=gc_block,
+                                       placement=pl)
             return (st, clk), out
 
         (st, clock), outs = lax.scan(
@@ -155,7 +207,7 @@ def _scan_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
 
     mapped = shard_map(
         node_fn, mesh=mesh,
-        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 3),
+        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 5),
         out_specs=(P("node"),) * _N_STORE + (P(),) * (_N_OUT + 1),
         check_rep=False,
     )
@@ -175,8 +227,10 @@ def _block_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
     def node_fn(*args):
         st = MVStore(*args[:_N_STORE])
         stacked = Wave(*args[_N_STORE:_N_STORE + _N_WAVE])   # [B, ...] leaves
-        wave_idx0, clock, n_nodes, hs, wm = args[_N_STORE + _N_WAVE:]
+        wave_idx0, clock, n_nodes, hs, wm, p_own, p_slot = \
+            args[_N_STORE + _N_WAVE:]
         B = stacked.op_kind.shape[0]
+        pl = _denorm_placement(p_own, p_slot)
 
         def body(carry, xs):
             st, clk = carry
@@ -188,7 +242,7 @@ def _block_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
             st, out, clk = run_wave_on(sub, st, wave, w_idx, clk, n_nodes,
                                        sched=sched, skew=skew, host_skew=hs,
                                        watermark=wm_i, gc_track=gc_track,
-                                       gc_block=gc_block)
+                                       gc_block=gc_block, placement=pl)
             return (st, clk), out
 
         (st, clock), outs = lax.scan(
@@ -198,7 +252,7 @@ def _block_fn(mesh: Mesh, sched: str, skew: int, gc_track: bool,
 
     mapped = shard_map(
         node_fn, mesh=mesh,
-        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 5),
+        in_specs=(P("node"),) * _N_STORE + (P(),) * (_N_WAVE + 7),
         out_specs=(P("node"),) * _N_STORE + (P(),) * (_N_OUT + 1),
         check_rep=False,
     )
@@ -224,10 +278,11 @@ def dist_wave_traceable(mesh: Mesh, sched: str = "postsi", skew: int = 0,
                   mesh_kernels(kernels), jit=False)
 
     def call(store, wave, wave_idx, clock, n_nodes, host_skew=None,
-             watermark=None):
+             watermark=None, placement=None):
         wm = clock if watermark is None else watermark
         out = fn(*store, *wave, jnp.int32(wave_idx), jnp.int32(clock),
-                 jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
+                 jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm),
+                 *_norm_placement(placement))
         return (MVStore(*out[:_N_STORE]),
                 WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]), out[-1])
 
@@ -237,8 +292,8 @@ def dist_wave_traceable(mesh: Mesh, sched: str = "postsi", skew: int = 0,
 def run_wave_dist(store: MVStore, wave: Wave, wave_idx, clock, mesh: Mesh,
                   n_nodes=None, sched: str = "postsi", skew: int = 0,
                   host_skew=None, watermark=None, gc_track: bool = False,
-                  gc_block: bool = False,
-                  kernels=None) -> Tuple[MVStore, WaveOut, jax.Array]:
+                  gc_block: bool = False, kernels=None,
+                  placement=None) -> Tuple[MVStore, WaveOut, jax.Array]:
     """One wave on the node mesh, any scheduler; mesh twin of
     ``engine.run_wave`` (same contract: (store', WaveOut, clock')).
 
@@ -252,10 +307,12 @@ def run_wave_dist(store: MVStore, wave: Wave, wave_idx, clock, mesh: Mesh,
     build) per ``repro.kernels.resolve`` — same knob as ``engine.run_wave``."""
     n_nodes = mesh.devices.size if n_nodes is None else n_nodes
     wm = clock if watermark is None else watermark
+    _placement_check(store, mesh, placement, np.asarray(wave.op_key))
     out = _wave_fn(mesh, sched, skew, gc_track, gc_block,
                    mesh_kernels(kernels))(
         *store, *wave, jnp.int32(wave_idx), jnp.int32(clock),
-        jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
+        jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm),
+        *_norm_placement(placement))
     return (MVStore(*out[:_N_STORE]),
             WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]), out[-1])
 
@@ -264,7 +321,7 @@ def step_wave_dist(store: MVStore, wave: Wave, wave_idx: int, clock,
                    mesh: Mesh, *, sched: str = "postsi",
                    n_nodes: int | None = None, skew: int = 0, host_skew=None,
                    watermark=None, gc_track: bool = True,
-                   gc_block: bool = False, kernels=None):
+                   gc_block: bool = False, kernels=None, placement=None):
     """Closed-loop step API on the mesh (DESIGN.md §8): one wave in, numpy
     per-txn outcomes out, store/clock kept device-resident (sharded)
     between steps — drop-in for ``engine.step_wave`` so ``TxnService``
@@ -272,7 +329,8 @@ def step_wave_dist(store: MVStore, wave: Wave, wave_idx: int, clock,
     store, out, clock = run_wave_dist(
         store, wave, wave_idx, clock, mesh, n_nodes=n_nodes, sched=sched,
         skew=skew, host_skew=host_skew, watermark=watermark,
-        gc_track=gc_track, gc_block=gc_block, kernels=kernels)
+        gc_track=gc_track, gc_block=gc_block, kernels=kernels,
+        placement=placement)
     return store, jax.tree_util.tree_map(np.asarray, out), clock
 
 
@@ -280,17 +338,19 @@ def run_block_dist(store: MVStore, stacked: Wave, wave_idx0: int, clock,
                    mesh: Mesh, *, sched: str = "postsi",
                    n_nodes: int | None = None, skew: int = 0, host_skew=None,
                    watermark=None, gc_track: bool = True,
-                   gc_block: bool = False, kernels=None):
+                   gc_block: bool = False, kernels=None, placement=None):
     """Dispatch a [B]-stacked wave block as one shard_map device program;
     mesh twin of ``engine.run_block`` (same contract: device-resident
     ``(store', outs[B], clock')``, nothing blocks on the device — the
     streaming driver materializes outcomes when it retires the block)."""
     n_nodes = mesh.devices.size if n_nodes is None else n_nodes
     wm = -1 if watermark is None else watermark
+    _placement_check(store, mesh, placement, np.asarray(stacked.op_key))
     out = _block_fn(mesh, sched, skew, gc_track, gc_block,
                     mesh_kernels(kernels))(
         *store, *stacked, jnp.int32(wave_idx0), jnp.int32(clock),
-        jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm))
+        jnp.int32(n_nodes), _norm_hs(host_skew), jnp.int32(wm),
+        *_norm_placement(placement))
     return (MVStore(*out[:_N_STORE]),
             WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]), out[-1])
 
@@ -307,7 +367,7 @@ def step_block_dist(store: MVStore, stacked: Wave, wave_idx0: int, clock,
 def run_workload_dist(store: MVStore, waves, mesh: Mesh,
                       sched: str = "postsi", skew: int = 0, host_skew=None,
                       n_nodes: int | None = None, gc_track: bool = False,
-                      gc_block: bool = False, kernels=None):
+                      gc_block: bool = False, kernels=None, placement=None):
     """Per-wave mesh driver (debug/differential twin of
     ``engine.run_workload``): one dispatch + host sync per wave.
     Returns (store, history, stats)."""
@@ -317,7 +377,7 @@ def run_workload_dist(store: MVStore, waves, mesh: Mesh,
         store, out, clock = run_wave_dist(
             store, wave, w_idx + 1, clock, mesh, n_nodes=n_nodes, sched=sched,
             skew=skew, host_skew=host_skew, gc_track=gc_track,
-            gc_block=gc_block, kernels=kernels)
+            gc_block=gc_block, kernels=kernels, placement=placement)
         history.append((np.asarray(wave.tid),
                         jax.tree_util.tree_map(np.asarray, out)))
     return store, history, _stats_of(history)
@@ -327,17 +387,18 @@ def run_workload_fused_dist(store: MVStore, waves, mesh: Mesh,
                             sched: str = "postsi", skew: int = 0,
                             host_skew=None, n_nodes: int | None = None,
                             gc_track: bool = False, gc_block: bool = False,
-                            kernels=None):
+                            kernels=None, placement=None):
     """Fused mesh driver: the whole workload as a single jitted shard_map
     dispatch (scan-over-waves inside).  Same (store, history, stats)
     contract and bit-identical history to every other driver."""
     from .engine import stack_waves
     n_nodes = mesh.devices.size if n_nodes is None else n_nodes
     stacked = stack_waves(waves)
+    _placement_check(store, mesh, placement, np.asarray(stacked.op_key))
     out = _scan_fn(mesh, sched, skew, gc_track, gc_block,
                    mesh_kernels(kernels))(
         *store, *stacked, jnp.int32(1), jnp.int32(n_nodes),
-        _norm_hs(host_skew))
+        _norm_hs(host_skew), *_norm_placement(placement))
     store = MVStore(*out[:_N_STORE])
     outs = jax.tree_util.tree_map(
         np.asarray, WaveOut(*out[_N_STORE:_N_STORE + _N_OUT]))

@@ -55,7 +55,8 @@ from repro.kernels import KernelConfig, register_cache_clear, resolve
 from .commit_phase import (ABORTED, COMMITTED, NOP, READ, RMW, RUNNING, WRITE,
                            creator_slots, lost_update, ongoing_readers_of,
                            postsi_bounds, push_bounds, rw_edge_to_creator)
-from .store import INF, MVStore, node_of_key
+from .store import (INF, MVStore, PlacementArrays, as_placement_arrays,
+                    node_of_key)
 from .substrate import LocalSubstrate
 
 SCHEDULERS = ("postsi", "cv", "si", "optimal", "dsi", "clocksi")
@@ -91,7 +92,9 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
                 sched: str = "postsi", skew: int = 0,
                 host_skew: jax.Array | None = None,
                 watermark: jax.Array | None = None, gc_track: bool = False,
-                gc_block: bool = False) -> Tuple[MVStore, WaveOut, jax.Array]:
+                gc_block: bool = False,
+                placement: PlacementArrays | None = None,
+                ) -> Tuple[MVStore, WaveOut, jax.Array]:
     """Execute one wave on a data-access substrate (DESIGN.md §4).
 
     This function is the ONLY copy of the concurrency-control rules for all
@@ -101,7 +104,21 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
     single-device ``run_wave`` below, or ``substrate.MeshSubstrate`` inside
     the ``shard_map`` bodies of ``dist_engine``, which is how one commit
     loop serves every placement.  Pure trace-level function: callers own
-    jit / shard_map / scan wrapping.  Returns (store', out, clock')."""
+    jit / shard_map / scan wrapping.  Returns (store', out, clock').
+
+    ``placement`` (elastic routing, DESIGN.md §11): when given, logical
+    keys are translated ONCE here — ``pkeys = slot[key]`` is the physical
+    store row every substrate access uses.  Placement changes WHERE a ring
+    lives, never WHAT the schedulers decide: the locality model the rules
+    and message stats consult (dsi remoteness, clocksi node skew,
+    msgs_cross) stays the logical ``key % n_nodes``, so any injective slot
+    map — including one that changes mid-stream via range moves — yields
+    bit-identical statuses/timestamps/history to ``placement=None``.  That
+    invariance is what makes live repartitioning a pure data-plane
+    operation (and what the static-vs-elastic differentials pin).
+    Placement-aware load/occupancy accounting is host-side, from
+    ``PlacementMap.owner`` (repro.placement).  Everything the caller sees
+    (``read_key``/``write_key``, statuses, timestamps) stays LOGICAL."""
     assert sched in SCHEDULERS, sched
     T, O = wave.op_kind.shape
     clock0 = clock          # wave-entry clock = snapshot time for clocked scheds
@@ -110,6 +127,14 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
     is_read = (wave.op_kind == READ) | (wave.op_kind == RMW)
     is_write = (wave.op_kind == WRITE) | (wave.op_kind == RMW)
     keys = wave.op_key
+    if placement is None:
+        pkeys = keys                                   # slot[k] == k
+    else:
+        nk = placement.slot.shape[0]
+        kc = jnp.clip(keys, 0, nk - 1)
+        # negative NOP sentinels pass through untranslated — the substrates'
+        # sentinel-drop / clamp handling must keep seeing them
+        pkeys = jnp.where(keys >= 0, placement.slot[kc], keys)
 
     # ------------------------------------------------------------------ reads
     if sched == "clocksi":
@@ -117,7 +142,7 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
         my_skew = hs[wave.host]                                   # [T]
         cutoff_wave = wave_idx - my_skew                          # snapshot wave
         # visible: newest version whose wave tag < cutoff (stale snapshot)
-        key_wave, head_cid = sub.key_staleness(store, keys)       # [T,O] each
+        key_wave, head_cid = sub.key_staleness(store, pkeys)      # [T,O] each
         stale = key_wave >= cutoff_wave[:, None]
         max_cid = jnp.where(stale, head_cid - 1, INF)
     else:
@@ -128,8 +153,10 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
     # candidate build — is one substrate call, so the fused ``wave_commit``
     # megakernel and the three-dispatch route swap under the engine without
     # the rules seeing a difference (DESIGN.md §7)
+    # the potential matrix only needs key EQUALITY, which the injective slot
+    # map preserves — so building it over pkeys is identical to logical keys
     (r_val, r_tid, r_cid, r_sid, r_slot, s_lo0,
-     potential) = sub.read_phase(store, keys, max_cid, is_read, is_write)
+     potential) = sub.read_phase(store, pkeys, max_cid, is_read, is_write)
 
     read_key = jnp.where(is_read, keys, -1)
     read_cid = jnp.where(is_read, r_cid, -1)
@@ -142,10 +169,11 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
         (st, s_lo, s_hi, c_lo, status, s_arr, c_arr, wcid, clk, ev_cnt) = carry
         active = status[i] == RUNNING
 
-        k_i = keys[i]                                             # [O]
+        k_i = keys[i]                                             # [O] logical
+        pk_i = pkeys[i]                                           # [O] physical
         w_i = is_write[i]
         r_i = is_read[i]
-        nv_val, nv_tid, nv_cid, nv_sid, nv_slot = sub.read_newest(st, k_i)
+        nv_val, nv_tid, nv_cid, nv_sid, nv_slot = sub.read_newest(st, pk_i)
 
         # map newest creators to wave-local ids (or -1 if older wave)
         local, creator_committed = creator_slots(nv_tid, wave.tid[0], T, status)
@@ -178,7 +206,7 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
         if sched == "postsi":
             # rules 3/4(a)/5 (commit_phase.postsi_bounds); SIDs of read slots
             # are re-gathered: peers may have bumped them while we ran
-            cur_sid = sub.read_sid(st, k_i, r_slot[i])
+            cur_sid = sub.read_sid(st, pk_i, r_slot[i])
             ongoing_reader = ongoing_readers_of(i, potential, status)
             s_i, c_i, iv_abort = postsi_bounds(
                 s_lo[i], s_hi[i], c_lo[i], r_i, w_i, nv_cid, nv_sid, cur_sid,
@@ -192,7 +220,7 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
         # GC watermark consult (DESIGN.md §8): does any write reuse a ring
         # slot whose version is still visible above the watermark?
         if track_gc:
-            evict_unsafe = w_i & sub.evicting_visible(st, k_i, wm)    # [O]
+            evict_unsafe = w_i & sub.evicting_visible(st, pk_i, wm)   # [O]
         if gc_block:
             # blocked install: abort instead of corrupting still-visible
             # reads; retried once the watermark passes the superseder
@@ -206,12 +234,12 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
         wmask = w_i & commit
         val_new = jnp.where(wave.op_kind[i] == RMW, r_val[i] + wave.op_val[i],
                             wave.op_val[i])
-        st = sub.install(st, wmask, k_i, val_new, wave.tid[i], c_i, wave_idx)
+        st = sub.install(st, wmask, pk_i, val_new, wave.tid[i], c_i, wave_idx)
         wcid = wcid.at[i].set(jnp.where(wmask, c_i, -1))
 
         # ---- rule 4(c): bump SIDs of read versions to my start time --------
         # guarded: skip if the ring slot was recycled since our wave-start read
-        st = sub.bump_sid(st, r_i & commit, k_i, r_slot[i], r_tid[i], s_i)
+        st = sub.bump_sid(st, r_i & commit, pk_i, r_slot[i], r_tid[i], s_i)
 
         # ---- rule 4(b): push bounds of conflicting *ongoing* transactions --
         if sched == "postsi":
@@ -303,11 +331,11 @@ def run_wave_on(sub, store: MVStore, wave: Wave, wave_idx: jax.Array,
                                     "kernels"))
 def _run_wave_jit(store, wave, wave_idx, clock, n_nodes, sched, skew,
                   host_skew, watermark, gc_track, gc_block,
-                  kernels: KernelConfig):
+                  kernels: KernelConfig, placement=None):
     return run_wave_on(LocalSubstrate(kernels), store, wave, wave_idx, clock,
                        n_nodes, sched=sched, skew=skew, host_skew=host_skew,
                        watermark=watermark, gc_track=gc_track,
-                       gc_block=gc_block)
+                       gc_block=gc_block, placement=placement)
 
 
 def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
@@ -316,7 +344,7 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
              watermark: jax.Array | None = None, gc_track: bool = False,
              gc_block: bool = False,
              kernels: KernelConfig | str | None = None,
-             ) -> Tuple[MVStore, WaveOut, jax.Array]:
+             placement=None) -> Tuple[MVStore, WaveOut, jax.Array]:
     """Execute one wave single-device. Returns (store', out, clock').
     ``n_nodes`` is traced, so scaling sweeps don't recompile.
 
@@ -348,7 +376,8 @@ def run_wave(store: MVStore, wave: Wave, wave_idx: jax.Array, clock: jax.Array,
     return _run_wave_jit(store, wave, wave_idx, clock, n_nodes, sched=sched,
                          skew=skew, host_skew=host_skew, watermark=watermark,
                          gc_track=gc_track, gc_block=gc_block,
-                         kernels=resolve(kernels))
+                         kernels=resolve(kernels),
+                         placement=as_placement_arrays(placement))
 
 
 class RunStats(NamedTuple):
@@ -365,7 +394,7 @@ def step_wave(store: MVStore, wave: Wave, wave_idx: int, clock,
               *, sched: str = "postsi", n_nodes: int = 8, skew: int = 0,
               host_skew: np.ndarray | None = None, watermark=None,
               gc_track: bool = True, gc_block: bool = False,
-              kernels: KernelConfig | str | None = None):
+              kernels: KernelConfig | str | None = None, placement=None):
     """Closed-loop step API (DESIGN.md §8): execute ONE wave and sync the
     per-txn outcomes to host so a caller can requeue aborted transactions.
 
@@ -384,14 +413,14 @@ def step_wave(store: MVStore, wave: Wave, wave_idx: int, clock,
                                  jnp.int32(n_nodes), sched=sched, skew=skew,
                                  host_skew=hs, watermark=wm,
                                  gc_track=gc_track, gc_block=gc_block,
-                                 kernels=kernels)
+                                 kernels=kernels, placement=placement)
     return store, jax.tree_util.tree_map(np.asarray, out), clock
 
 
 def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
                  host_skew: np.ndarray | None = None, n_nodes: int = 8,
                  gc_track: bool = False, gc_block: bool = False,
-                 kernels: KernelConfig | str | None = None):
+                 kernels: KernelConfig | str | None = None, placement=None):
     """Per-wave debug driver: one jitted dispatch + host sync per wave.
 
     Returns (store, history, stats); history is a list of numpy-ified
@@ -407,7 +436,7 @@ def run_workload(store: MVStore, waves, sched: str = "postsi", skew: int = 0,
                                      jnp.int32(n_nodes), sched=sched,
                                      skew=skew, host_skew=hs,
                                      gc_track=gc_track, gc_block=gc_block,
-                                     kernels=kernels)
+                                     kernels=kernels, placement=placement)
         history.append((np.asarray(wave.tid),
                         jax.tree_util.tree_map(np.asarray, out)))
     return store, history, _stats_of(history)
@@ -444,7 +473,7 @@ def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
                 n_nodes: jax.Array, sched: str = "postsi", skew: int = 0,
                 host_skew: jax.Array | None = None, gc_track: bool = False,
                 gc_block: bool = False,
-                kernels: KernelConfig | str | None = None):
+                kernels: KernelConfig | str | None = None, placement=None):
     """One device program for a whole workload: lax.scan over the wave axis
     carrying (store, clock); each step is the run_wave computation inlined.
     ``run_workload_fused`` resolves ``kernels`` before this jit boundary.
@@ -457,7 +486,7 @@ def _scan_waves(store: MVStore, stacked: Wave, clock: jax.Array,
         st, out, clk = run_wave(st, wave, w_idx, clk, n_nodes, sched=sched,
                                 skew=skew, host_skew=host_skew,
                                 gc_track=gc_track, gc_block=gc_block,
-                                kernels=kernels)
+                                kernels=kernels, placement=placement)
         return (st, clk), out
 
     (store, clock), outs = lax.scan(
@@ -469,7 +498,8 @@ def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
                        skew: int = 0, host_skew: np.ndarray | None = None,
                        n_nodes: int = 8, gc_track: bool = False,
                        gc_block: bool = False,
-                       kernels: KernelConfig | str | None = None):
+                       kernels: KernelConfig | str | None = None,
+                       placement=None):
     """Fused driver: the entire workload as a single jitted dispatch.
 
     Same signature and same (store, history, stats) contract as
@@ -481,7 +511,8 @@ def run_workload_fused(store: MVStore, waves, sched: str = "postsi",
     store, outs, _ = _scan_waves(store, stacked, jnp.int32(1),
                                  jnp.int32(n_nodes), sched=sched, skew=skew,
                                  host_skew=hs, gc_track=gc_track,
-                                 gc_block=gc_block, kernels=resolve(kernels))
+                                 gc_block=gc_block, kernels=resolve(kernels),
+                                 placement=as_placement_arrays(placement))
     outs = jax.tree_util.tree_map(np.asarray, outs)
     history = [(np.asarray(w.tid), WaveOut(*(f[i] for f in outs)))
                for i, w in enumerate(waves)]
@@ -499,7 +530,7 @@ def _scan_block(store: MVStore, stacked: Wave, wave_idx0: jax.Array,
                 clock: jax.Array, n_nodes: jax.Array, host_skew, watermark,
                 sched: str = "postsi", skew: int = 0, gc_track: bool = False,
                 gc_block: bool = False,
-                kernels: KernelConfig = KernelConfig("jnp")):
+                kernels: KernelConfig = KernelConfig("jnp"), placement=None):
     """One device program for a block of B pre-formed waves: lax.scan over
     the leading wave axis carrying (store, clock), exactly ``_scan_waves``
     but resumable — the caller owns the wave-index origin and the GC
@@ -517,7 +548,8 @@ def _scan_block(store: MVStore, stacked: Wave, wave_idx0: jax.Array,
         st, out, clk = run_wave_on(sub, st, wave, w_idx, clk, n_nodes,
                                    sched=sched, skew=skew,
                                    host_skew=host_skew, watermark=watermark,
-                                   gc_track=gc_track, gc_block=gc_block)
+                                   gc_track=gc_track, gc_block=gc_block,
+                                   placement=placement)
         return (st, clk), out
 
     (store, clock), outs = lax.scan(
@@ -530,7 +562,7 @@ def run_block(store: MVStore, stacked: Wave, wave_idx0: int, clock,
               *, sched: str = "postsi", n_nodes: int = 8, skew: int = 0,
               host_skew: np.ndarray | None = None, watermark=None,
               gc_track: bool = True, gc_block: bool = False,
-              kernels: KernelConfig | str | None = None):
+              kernels: KernelConfig | str | None = None, placement=None):
     """Dispatch a block of B formed waves (``stacked`` has leading [B] axis,
     from ``stack_waves``) as ONE device program and return device-resident
     results: ``(store', outs, clock')`` where ``outs`` is a ``WaveOut``
@@ -547,7 +579,8 @@ def run_block(store: MVStore, stacked: Wave, wave_idx0: int, clock,
     return _scan_block(store, stacked, jnp.int32(wave_idx0), clock,
                        jnp.int32(n_nodes), hs, wm, sched=sched, skew=skew,
                        gc_track=gc_track, gc_block=gc_block,
-                       kernels=resolve(kernels))
+                       kernels=resolve(kernels),
+                       placement=as_placement_arrays(placement))
 
 
 def step_block(store: MVStore, stacked: Wave, wave_idx0: int, clock, **kw):

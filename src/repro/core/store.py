@@ -55,6 +55,38 @@ def node_of_key(key: jax.Array, n_nodes: int) -> jax.Array:
     return key % n_nodes
 
 
+class PlacementArrays(NamedTuple):
+    """Device-resident placement tables for elastic key routing.
+
+    The engine stays SPMD-oblivious: a logical key ``k`` is translated ONCE
+    per wave into a physical store row (``slot[k]``) and an owning node
+    (``owner[k]``), and every downstream substrate/kernel call operates on
+    those.  Both tables are replicated on every node (they are tiny — one
+    int32 each per logical key) so lookups are local gathers.
+
+    ``None`` placement everywhere means the frozen ``key % n_nodes`` layout
+    with ``slot[k] == k`` — the engine's placement-free fast path, kept
+    bit-identical by construction.
+    """
+    owner: jax.Array   # [n_keys] int32 owning node of each logical key
+    slot: jax.Array    # [n_keys] int32 physical store row of each logical key
+
+
+def as_placement_arrays(p) -> PlacementArrays | None:
+    """Normalize ``None | PlacementArrays | PlacementMap-like`` to device
+    arrays (anything exposing ``.device_arrays()`` is accepted so callers can
+    hand the host-side map straight to the drivers)."""
+    if p is None:
+        return None
+    if isinstance(p, PlacementArrays):
+        return p
+    if hasattr(p, "device_arrays"):
+        return p.device_arrays()
+    owner, slot = p
+    return PlacementArrays(jnp.asarray(owner, jnp.int32),
+                           jnp.asarray(slot, jnp.int32))
+
+
 def read_visible(store: MVStore, keys: jax.Array, max_cid: jax.Array):
     """Latest visible version per key: newest version with CID <= max_cid.
 

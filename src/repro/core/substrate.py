@@ -29,6 +29,15 @@ the engines build one per trace with the config baked in.
 
 The mesh one derives its block base from ``lax.axis_index`` at trace time,
 so one traced program serves every node (SPMD).
+
+Slot-space contract (DESIGN.md §11): substrates index *physical store
+rows*, not logical keys.  Under the default identity placement the two
+coincide; under an elastic ``PlacementMap`` the engine translates each
+wave's logical keys through ``placement.slot`` ONCE at wave entry and hands
+the substrate physical rows only.  Because any placement is an injective
+key->row map, key-equality structure (the anti-dependency ``potential``)
+and per-row ring semantics are preserved — which is why outcomes are
+bit-identical under every placement, including mid-stream moves.
 ``tests/test_distribution.py`` pins the two substrates bit-identical for
 all six schedulers, per-wave and fused; ``tests/test_kernel_backend.py``
 pins every backend route bit-identical on both.

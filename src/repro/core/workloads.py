@@ -249,6 +249,23 @@ def zipf_rank(rng: np.random.RandomState, cdf: np.ndarray) -> int:
     return int(np.searchsorted(cdf, rng.rand(), side="right"))
 
 
+def zipf_hot_keys(n_nodes: int, keys_per_node: int, theta: float,
+                  mass: float = 0.5, max_frac: float = 0.25) -> np.ndarray:
+    """The hot-key set a zipfian YCSB stream concentrates on: the smallest
+    rank prefix covering ``mass`` of the per-node popularity curve, expanded
+    across every host's partition via the interleaved key encoding
+    (``_key(rank, node, n) = rank * n_nodes + node``) — i.e. the LOW keys
+    ``arange(R * n_nodes)``.  Because the physical store is partitioned in
+    contiguous blocks, this entire set lands in node 0's block: the hot
+    shard the elastic plane replicates and splits.  ``max_frac`` caps the
+    set at that fraction of the key space (replicating everything is not a
+    replica strategy)."""
+    cdf = zipf_cdf(keys_per_node, theta)
+    ranks = int(np.searchsorted(cdf, mass, side="left")) + 1
+    ranks = max(1, min(ranks, int(keys_per_node * max_frac) or 1))
+    return np.arange(ranks * n_nodes, dtype=np.int64)
+
+
 def ycsb_txn(rng: np.random.RandomState, host: int, n_nodes: int,
              keys_per_node: int, theta: float = 0.9, read_frac: float = 0.8,
              dist_frac: float = 0.1, n_ops: int = YCSB_O):

@@ -50,7 +50,7 @@ _FORMAT = 1
 # config fields that must match for replay to be meaningful; T is absent on
 # purpose (the adaptive sizer already varies it block to block)
 _REPLAY_FIELDS = ("sched", "n_nodes", "n_keys", "n_versions", "O",
-                  "gc_block")
+                  "gc_block", "n_slots", "placement")
 
 
 class RecoveryError(RuntimeError):
@@ -74,11 +74,15 @@ class RecoveredState:
     # verifiers' pre-boundary version lists (core/verify.py); None under
     # full replay (history is complete)
     base_store: Optional[Dict[str, np.ndarray]]
-    n_blocks: int                # durable blocks total (next WAL seq)
+    n_blocks: int                # durable blocks total
     n_replayed: int              # blocks replayed (rest came from snapshot)
     snapshot_seq: Optional[int]  # snapshot id used, or None
     torn_bytes: int              # damaged tail bytes the scan absorbed
     config: Dict[str, Any]
+    # elastic placement plane (DESIGN.md §11)
+    placement_map: Optional[Any] = None  # PlacementMap after the prefix
+    n_records: int = 0           # durable records total (next WAL seq —
+                                 # blocks AND moves share one seq space)
 
 
 def wal_path(directory: str) -> str:
@@ -89,17 +93,25 @@ def service_config(svc) -> Dict[str, Any]:
     """The replay-relevant configuration of a ``TxnService`` — the WAL's
     head record, written once and checked on every reattach."""
     hs = svc.host_skew
+    pm = getattr(svc, "placement", None)
     return {
         "format": _FORMAT, "sched": svc.sched, "n_nodes": svc.n_nodes,
         "n_keys": svc.n_keys, "n_versions": svc.store.n_versions,
         "T": svc.T, "O": svc.O, "gc_block": svc.gc.block,
         "host_skew": None if hs is None else np.asarray(hs, np.int32),
         "backend": svc.kernels.backend,
+        # elastic placement (DESIGN.md §11): the INITIAL layout identity;
+        # moves replay from explicit REC_MOVE records on top of it
+        "n_slots": int(svc.store.head.shape[0]),
+        "placement": None if pm is None else pm.to_config(),
     }
 
 
 def check_config(logged: Dict[str, Any], current: Dict[str, Any]) -> None:
     """Reject a reattach whose service would replay under different rules."""
+    logged = dict(logged)            # logs from before the elastic plane
+    logged.setdefault("n_slots", logged.get("n_keys"))
+    logged.setdefault("placement", None)
     for f in _REPLAY_FIELDS:
         if logged.get(f) != current.get(f):
             raise wal.WalError(
@@ -133,13 +145,15 @@ def _block_record(seq: int, stacked, wave_idx0: int, wm: Optional[int],
     }
 
 
-def _replay_block(store, rec: Dict, cfg: Dict, clock, mesh, kernels):
+def _replay_block(store, rec: Dict, cfg: Dict, clock, mesh, kernels,
+                  placement=None):
     """Re-execute one logged block on the chosen substrate."""
     stacked = Wave(op_kind=rec["op_kind"], op_key=rec["op_key"],
                    op_val=rec["op_val"], host=rec["host"], tid=rec["tid"])
     kw = dict(sched=cfg["sched"], n_nodes=cfg["n_nodes"],
               host_skew=cfg["host_skew"], watermark=rec["wm"],
-              gc_block=cfg["gc_block"], kernels=kernels)
+              gc_block=cfg["gc_block"], kernels=kernels,
+              placement=placement)
     if mesh is None:
         return run_block(store, stacked, rec["wave_idx0"], clock, **kw)
     from repro.core.dist_engine import run_block_dist
@@ -161,21 +175,29 @@ def recover(directory: str, mesh=None, kernels=None,
         return None
     cfg = scan.config
     n_keys, n_versions = cfg["n_keys"], cfg["n_versions"]
+    n_slots = cfg.get("n_slots") or n_keys
+    pm = None
+    if cfg.get("placement") is not None:
+        from repro.placement import PlacementMap
+        pm = PlacementMap.from_config(cfg["placement"])
 
     snap = None
     if use_snapshot:
         if snaps is None:
-            snaps = SnapshotStore(directory, n_keys, n_versions)
+            snaps = SnapshotStore(directory, n_slots, n_versions)
         snap = snaps.restore_latest()
-    if snap is not None and snap.wal_seq > len(scan.blocks):
+    if snap is not None and snap.wal_seq > len(scan.records):
         # a snapshot may only lag the durable log (the writer syncs before
         # every save); running ahead of it means the directory was tampered
         raise RecoveryError(
             f"snapshot claims wal_seq={snap.wal_seq} but only "
-            f"{len(scan.blocks)} durable block(s) exist")
+            f"{len(scan.records)} durable record(s) exist")
 
     if snap is None:
         store = make_store(n_keys, n_versions)
+        if pm is not None:
+            from repro.placement import physical_store
+            store = physical_store(store, pm)
         clock = jnp.int32(1)
         wave_idx, gc_clock, next_tid, start = 0, 0, 1, 0
     else:
@@ -184,15 +206,35 @@ def recover(directory: str, mesh=None, kernels=None,
         clock = jnp.int32(snap.clock)
         wave_idx, gc_clock = snap.wave_idx, snap.gc_clock
         next_tid, start = snap.next_tid, snap.wal_seq
+        if pm is not None:
+            # fold pre-snapshot moves into the map ONLY — the snapshot
+            # store already holds the rings at their moved slots
+            from repro.placement import record_from_payload
+            for rt, rec in scan.records[:start]:
+                if rt == wal.REC_MOVE:
+                    pm.apply_record(record_from_payload(rec))
     if mesh is not None:
         from repro.core.dist_engine import shard_store
         store = shard_store(store, mesh)
+    # the snapshot's rings are in PHYSICAL slot order; the verifiers speak
+    # logical keys — capture the snapshot-time permutation before suffix
+    # moves mutate the map
+    snap_perm = None if pm is None else np.asarray(pm.slot).copy()
 
     history: List[Tuple[np.ndarray, WaveOut]] = []
     evicted = 0
-    for rec in scan.blocks[start:]:
-        store, outs, clock = _replay_block(store, rec, cfg, clock, mesh,
-                                           kernels)
+    n_replayed = 0
+    for rt, rec in scan.records[start:]:
+        if rt == wal.REC_MOVE:
+            from repro.placement import apply_move, record_from_payload
+            mrec = record_from_payload(rec)
+            store = apply_move(store, mrec, mesh=mesh)
+            pm.apply_record(mrec)
+            continue
+        store, outs, clock = _replay_block(
+            store, rec, cfg, clock, mesh, kernels,
+            placement=None if pm is None else pm.device_arrays())
+        n_replayed += 1
         outs = jax.tree_util.tree_map(np.asarray, outs)
         if verify_outcomes:
             for name in ("status", "s", "c"):
@@ -209,15 +251,20 @@ def recover(directory: str, mesh=None, kernels=None,
         gc_clock = rec["gc_clock"]
         next_tid = max(next_tid, int(rec["tid"].max()) + 1)
 
+    base_store = None if snap is None else snap.store
+    if base_store is not None and snap_perm is not None:
+        base_store = {f: np.asarray(a)[snap_perm]
+                      for f, a in snap.store.items()}
     return RecoveredState(
         store=store, clock=int(jnp.asarray(clock)), wave_idx=wave_idx,
         gc_clock=gc_clock, next_tid=next_tid, evicted_visible=evicted,
         history=history,
-        base_store=None if snap is None else snap.store,
+        base_store=base_store,
         n_blocks=len(scan.blocks),
-        n_replayed=len(scan.blocks) - start,
+        n_replayed=n_replayed,
         snapshot_seq=None if snap is None else snap.snap_id,
-        torn_bytes=scan.torn_bytes, config=cfg)
+        torn_bytes=scan.torn_bytes, config=cfg,
+        placement_map=pm, n_records=len(scan.records))
 
 
 class DurabilityManager:
@@ -256,7 +303,10 @@ class DurabilityManager:
         cfg = service_config(svc)
         scan = wal.scan(self.wal_path)
         if self.snaps is None:
-            self.snaps = SnapshotStore(self.dir, cfg["n_keys"],
+            # snapshots hold PHYSICAL rows: size them by n_slots (== n_keys
+            # under the static identity placement)
+            self.snaps = SnapshotStore(self.dir,
+                                       cfg.get("n_slots") or cfg["n_keys"],
                                        cfg["n_versions"],
                                        keep_latest=self.keep_snapshots)
         if scan.config is not None:
@@ -271,7 +321,11 @@ class DurabilityManager:
             svc.former.next_tid = state.next_tid
             svc.history = list(state.history)
             svc.base_store = state.base_store
-            self.seq = state.n_blocks
+            if state.placement_map is not None:
+                # adopt the replayed map (same initial layout + all logged
+                # moves) so routing resumes exactly where the crash left it
+                svc.placement = state.placement_map
+            self.seq = state.n_records
             self.last_recovery = state
         self.writer = wal.WalWriter(self.wal_path, self.fsync_every,
                                     valid_bytes=scan.valid_bytes)
@@ -289,6 +343,17 @@ class DurabilityManager:
         self.writer.append(wal.REC_BLOCK, rec)
         self.seq += 1
         self._since_snap += 1
+
+    def log_move(self, rec, clock: int = 0) -> None:
+        """Append one executed placement range move (DESIGN.md §11) with
+        its explicit slot arrays — replay applies the arrays verbatim and
+        never re-runs the allocator.  Moves share the block seq space and
+        are synced immediately: a move is a placement commit point, and
+        every block logged after it replays under the moved layout."""
+        from repro.placement import move_payload
+        self.writer.append(wal.REC_MOVE, move_payload(rec, self.seq, clock))
+        self.writer.sync()
+        self.seq += 1
 
     def maybe_snapshot(self, svc, pipeline_empty: bool) -> bool:
         """Snapshot when the cadence is due AND the device store is exactly

@@ -46,6 +46,9 @@ MAGIC = b"VWAL"
 _HDR = struct.Struct("<4sBII")        # magic, rtype, payload_len, crc32
 REC_CONFIG = 1
 REC_BLOCK = 2
+REC_MOVE = 3      # placement range move (DESIGN.md §11): explicit slot
+                  # arrays, shares the block seq space so replay interleaves
+                  # moves and blocks in the exact retire order
 
 
 class WalError(RuntimeError):
@@ -60,6 +63,12 @@ class WalScan:
     blocks: List[Dict[str, Any]]          # intact BLOCK records, in order
     valid_bytes: int                      # offset of the intact prefix
     torn_bytes: int                       # damaged/incomplete trailing bytes
+    # elastic placement plane (DESIGN.md §11): MOVE records, and the merged
+    # (rtype, record) stream in file order — blocks and moves share ONE seq
+    # space, so replay walks ``records`` to interleave them exactly
+    moves: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    records: List[Tuple[int, Dict[str, Any]]] = \
+        dataclasses.field(default_factory=list)
 
 
 def _frame(rtype: int, payload: Dict[str, Any]) -> bytes:
@@ -80,6 +89,8 @@ def scan(path: str) -> WalScan:
         data = f.read()
     config: Optional[Dict[str, Any]] = None
     blocks: List[Dict[str, Any]] = []
+    moves: List[Dict[str, Any]] = []
+    records: List[Tuple[int, Dict[str, Any]]] = []
     off = 0
     while off + _HDR.size <= len(data):
         magic, rtype, ln, crc = _HDR.unpack_from(data, off)
@@ -91,21 +102,27 @@ def scan(path: str) -> WalScan:
             break                                  # bit-rot or partial write
         rec = pickle.loads(payload)
         if rtype == REC_CONFIG:
-            if config is not None or blocks:
+            if config is not None or records:
                 raise WalError(f"{path}: CONFIG record not at log head "
                                f"(offset {off})")
             config = rec
         elif rtype == REC_BLOCK:
             blocks.append(rec)
+            records.append((REC_BLOCK, rec))
+        elif rtype == REC_MOVE:
+            moves.append(rec)
+            records.append((REC_MOVE, rec))
         else:
             raise WalError(f"{path}: unknown record type {rtype} at "
                            f"offset {off}")
         off = end
-    for i, rec in enumerate(blocks):
+    # one seq space over blocks AND moves: position in the file IS the seq
+    for i, (_, rec) in enumerate(records):
         if rec["seq"] != i:
-            raise WalError(f"{path}: block seq {rec['seq']} at position {i} "
+            raise WalError(f"{path}: record seq {rec['seq']} at position {i} "
                            f"— the log is not a contiguous retire order")
-    return WalScan(config, blocks, off, len(data) - off)
+    return WalScan(config, blocks, off, len(data) - off,
+                   moves=moves, records=records)
 
 
 class WalWriter:

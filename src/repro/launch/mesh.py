@@ -35,3 +35,13 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     devs = jax.devices()[:n]
     arr = np.array(devs).reshape(shape)
     return Mesh(arr, axes)
+
+
+def make_cc_node_mesh(n_nodes: int = 8) -> Mesh:
+    """1-D ``("node",)`` mesh for the concurrency-control data plane — the
+    launch-layer name for ``dist_engine.make_node_mesh`` (lazy import so
+    this module keeps touching no jax device state at import time).  Pair
+    with a ``PlacementMap(n_keys, n_nodes)`` for the elastic layout
+    (DESIGN.md §11) or pass ``placement=None`` for the frozen blocks."""
+    from repro.core.dist_engine import make_node_mesh
+    return make_node_mesh(n_nodes)

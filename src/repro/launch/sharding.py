@@ -90,6 +90,16 @@ def _leaf_pspec(name: str, shape: Tuple[int, ...], mesh: Mesh,
     return P(_fit(mesh, shape[0], DP), *([None] * (len(shape) - 1)))
 
 
+def version_store_pspec() -> P:
+    """PartitionSpec of every MVStore leaf on the CC node mesh: rows (one
+    per physical key slot) shard over the 1-D ``"node"`` axis, trailing
+    dims (the version ring) stay local.  ``dist_engine.shard_store`` pads
+    the row count to a multiple of the mesh so this spec always divides —
+    including elastic ``PlacementMap`` layouts, whose ``n_slots`` is
+    ``capacity * n_nodes`` by construction."""
+    return P("node")
+
+
 def input_shardings(tree, mesh: Mesh, seq_shard_kv: bool = False):
     """Same-structure tree of NamedShardings for a batch/cache dict."""
     def walk(name, node):

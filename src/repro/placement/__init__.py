@@ -1,0 +1,31 @@
+"""Elastic placement plane (DESIGN.md §11).
+
+Replaces the frozen ``key % n_nodes`` layout with a host-side
+``PlacementMap`` (contiguous key ranges -> nodes, with per-key physical
+slot assignments), live range moves executed under the GC watermark and
+WAL-logged for bit-identical replay, hot-key read replicas whose
+visibility floor is the ``lax.pmin`` watermark, and a load balancer that
+plans splits off per-node commit/abort counters.
+"""
+from .balancer import LoadBalancer
+from .map import (MoveRecord, PlacementError, PlacementMap, logical_store,
+                  physical_store, validate_routing)
+from .move import (apply_move, apply_move_local, apply_move_mesh,
+                   move_payload, record_from_payload)
+from .replica import HotKeyReplicas
+
+__all__ = [
+    "HotKeyReplicas",
+    "LoadBalancer",
+    "MoveRecord",
+    "PlacementError",
+    "PlacementMap",
+    "apply_move",
+    "apply_move_local",
+    "apply_move_mesh",
+    "logical_store",
+    "move_payload",
+    "physical_store",
+    "record_from_payload",
+    "validate_routing",
+]

@@ -1,0 +1,259 @@
+"""PlacementMap: host-side owner/slot tables for elastic key routing.
+
+The contract (DESIGN.md §11):
+
+* every logical key ``k in [0, n_keys)`` has exactly one owning node
+  ``owner[k]`` and one physical store row ``slot[k]``;
+* ``slot`` is injective, and ``slot[k] // capacity == owner[k]`` — a key's
+  ring lives inside its owner's block of the sharded store, so the mesh
+  substrate's block arithmetic (``base = axis_index * n_local``) needs no
+  change: the engine translates logical keys to slots ONCE per wave and
+  everything downstream is slot-space;
+* ownership is maintained as contiguous logical ranges (splits/merges move
+  range boundaries), but the representation of record is the per-key
+  ``owner``/``slot`` arrays — ``ranges()`` is *derived* from them, so live
+  state and WAL-replayed state are structurally identical by construction.
+
+``move()`` only plans: it returns a :class:`MoveRecord` naming the exact
+keys, source slots and destination slots.  Applying the record to the
+store (copy rings, clear sources) is ``placement.move.apply_move``;
+applying it to this map is :meth:`PlacementMap.apply_record`.  Replay from
+the WAL re-applies the explicit arrays, never re-runs the allocator — so
+recovery is bit-identical even if allocator heuristics change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class PlacementError(AssertionError):
+    """Routing/placement invariant violation (raised by validate_routing)."""
+
+
+@dataclass(frozen=True)
+class MoveRecord:
+    """One executed (or planned) key-range move, fully explicit for replay."""
+    lo: int                 # logical range [lo, hi) that moved
+    hi: int
+    dst: int                # destination node
+    keys: np.ndarray        # [m] int32 logical keys (== arange(lo, hi))
+    old_slots: np.ndarray   # [m] int32 source store rows
+    new_slots: np.ndarray   # [m] int32 destination store rows
+
+    def as_dict(self) -> Dict:
+        return {"lo": int(self.lo), "hi": int(self.hi), "dst": int(self.dst),
+                "keys": self.keys.tolist(),
+                "old_slots": self.old_slots.tolist(),
+                "new_slots": self.new_slots.tolist()}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "MoveRecord":
+        arr = lambda x: np.asarray(x, np.int32)
+        return MoveRecord(int(d["lo"]), int(d["hi"]), int(d["dst"]),
+                          arr(d["keys"]), arr(d["old_slots"]),
+                          arr(d["new_slots"]))
+
+
+class PlacementMap:
+    """Mutable host-side placement state; device tables via device_arrays().
+
+    The initial layout is *block* placement: key ``k`` is owned by node
+    ``k // ceil(n_keys / n_nodes)`` at slot ``owner * capacity + offset``.
+    With ``headroom=1`` and a dividing key space this is the identity slot
+    map over ``n_slots == n_keys`` — bit-identical to no placement at all
+    (the differential tests pin this).  ``headroom > 1`` reserves free
+    slots per node so ranges can move in.
+    """
+
+    def __init__(self, n_keys: int, n_nodes: int, *, headroom: int = 1):
+        if n_nodes < 1 or n_keys < 1:
+            raise ValueError(f"need n_keys,n_nodes >= 1, got {n_keys},{n_nodes}")
+        if headroom < 1:
+            raise ValueError(f"headroom must be >= 1, got {headroom}")
+        self.n_keys = int(n_keys)
+        self.n_nodes = int(n_nodes)
+        base = -(-n_keys // n_nodes)            # ceil: block size per node
+        self.capacity = int(base * headroom)    # slots per node
+        self.owner = np.empty(n_keys, np.int32)
+        self.slot = np.empty(n_keys, np.int32)
+        for node in range(n_nodes):
+            lo, hi = node * base, min((node + 1) * base, n_keys)
+            if lo >= hi:
+                continue
+            self.owner[lo:hi] = node
+            self.slot[lo:hi] = node * self.capacity + np.arange(hi - lo)
+        self._cache = None      # invalidated device_arrays cache
+        self._rebuild()
+
+    # -- derived state -----------------------------------------------------
+
+    def _rebuild(self) -> None:
+        """Recompute free-slot lists from owner/slot occupancy.  Derived, not
+        tracked: live mutation and WAL replay land in identical state."""
+        used = np.zeros(self.n_slots, bool)
+        used[self.slot] = True
+        self._free: List[List[int]] = []
+        for node in range(self.n_nodes):
+            blk = slice(node * self.capacity, (node + 1) * self.capacity)
+            self._free.append(
+                (np.nonzero(~used[blk])[0] + node * self.capacity).tolist())
+        self._cache = None
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_nodes * self.capacity
+
+    def ranges(self) -> List[Tuple[int, int, int]]:
+        """Contiguous ownership ranges [(lo, hi, node), ...], derived."""
+        out, lo = [], 0
+        for k in range(1, self.n_keys + 1):
+            if k == self.n_keys or self.owner[k] != self.owner[lo]:
+                out.append((lo, k, int(self.owner[lo])))
+                lo = k
+        return out
+
+    def owner_of(self, key: int) -> int:
+        return int(self.owner[key])
+
+    def slot_of(self, keys):
+        return self.slot[np.asarray(keys, np.int64)]
+
+    def free_slots(self, node: int) -> int:
+        return len(self._free[node])
+
+    def device_arrays(self):
+        """Replicated int32 device tables (cached until the next mutation)."""
+        if self._cache is None:
+            import jax.numpy as jnp
+            from repro.core.store import PlacementArrays
+            self._cache = PlacementArrays(jnp.asarray(self.owner),
+                                          jnp.asarray(self.slot))
+        return self._cache
+
+    # -- mutation ----------------------------------------------------------
+
+    def move(self, lo: int, hi: int, dst: int) -> MoveRecord:
+        """Plan moving logical range [lo, hi) to node ``dst``: allocate
+        destination slots (smallest free offsets first, so replayed and live
+        allocation agree) and return the explicit record.  Does NOT mutate
+        this map — call :meth:`apply_record` once the store move committed."""
+        if not (0 <= lo < hi <= self.n_keys):
+            raise ValueError(f"bad range [{lo}, {hi}) for n_keys={self.n_keys}")
+        if not (0 <= dst < self.n_nodes):
+            raise ValueError(f"bad destination node {dst}")
+        keys = np.arange(lo, hi, dtype=np.int32)
+        moving = self.owner[lo:hi] != dst
+        keys = keys[moving]
+        if keys.size > len(self._free[dst]):
+            raise PlacementError(
+                f"node {dst} has {len(self._free[dst])} free slots, "
+                f"range [{lo},{hi}) needs {keys.size}; raise headroom")
+        new_slots = np.asarray(sorted(self._free[dst])[:keys.size], np.int32)
+        return MoveRecord(lo, hi, dst, keys,
+                          self.slot[keys].astype(np.int32), new_slots)
+
+    def apply_record(self, rec: MoveRecord) -> None:
+        """Apply an executed move to the map (live or WAL replay — same path)."""
+        self.owner[rec.keys] = rec.dst
+        self.slot[rec.keys] = rec.new_slots
+        self._rebuild()
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_config(self) -> Dict:
+        """Durable identity of the *initial* layout (moves replay on top)."""
+        return {"n_keys": self.n_keys, "n_nodes": self.n_nodes,
+                "capacity": self.capacity}
+
+    @staticmethod
+    def from_config(cfg: Dict) -> "PlacementMap":
+        pm = PlacementMap(int(cfg["n_keys"]), int(cfg["n_nodes"]), headroom=1)
+        cap = int(cfg["capacity"])
+        if cap != pm.capacity:
+            # re-derive headroom'd layout: same block assignment, wider blocks
+            base = -(-pm.n_keys // pm.n_nodes)
+            if cap % base:
+                raise ValueError(f"capacity {cap} not a multiple of base {base}")
+            pm = PlacementMap(pm.n_keys, pm.n_nodes, headroom=cap // base)
+        return pm
+
+    def validate(self) -> None:
+        """Full invariant check (tests + REPRO_PLACEMENT_CHECK)."""
+        if np.unique(self.slot).size != self.n_keys:
+            raise PlacementError("slot map is not injective")
+        if (self.slot < 0).any() or (self.slot >= self.n_slots).any():
+            raise PlacementError("slot out of store range")
+        if ((self.owner < 0) | (self.owner >= self.n_nodes)).any():
+            raise PlacementError("owner out of node range")
+        if (self.slot // self.capacity != self.owner).any():
+            raise PlacementError("slot block does not match owner")
+
+
+def validate_routing(n_slots: int, n_nodes: int, placement,
+                     op_key=None) -> None:
+    """REPRO_PLACEMENT_CHECK=1 gate: assert the owner/slot tables route every
+    (touched) key into its owner's physical block before a mesh dispatch.
+
+    This closes the documented silent-corruption hole in ``shard_store``:
+    a visitor read routed to the wrong owner under static modulo sharding
+    was "not an error" — with placement tables it IS detectable, because
+    ``slot // n_local`` must equal ``owner`` for every key the wave touches.
+    """
+    if placement is None:
+        return
+    owner = np.asarray(placement.owner)
+    slot = np.asarray(placement.slot)
+    if n_slots % n_nodes:
+        raise PlacementError(f"n_slots {n_slots} not divisible by {n_nodes}")
+    n_local = n_slots // n_nodes
+    if op_key is None:
+        keys = np.arange(owner.shape[0])
+    else:
+        keys = np.unique(np.asarray(op_key).reshape(-1))
+        keys = keys[(keys >= 0) & (keys < owner.shape[0])]
+    s, o = slot[keys], owner[keys]
+    if (s < 0).any() or (s >= n_slots).any():
+        bad = keys[(s < 0) | (s >= n_slots)]
+        raise PlacementError(f"slots out of range for keys {bad[:8].tolist()}")
+    mis = s // n_local != o
+    if mis.any():
+        bad = keys[mis]
+        raise PlacementError(
+            f"mis-routed keys {bad[:8].tolist()}: slot block "
+            f"{(s[mis] // n_local)[:8].tolist()} != owner {o[mis][:8].tolist()}")
+    if np.unique(s).size != s.size:
+        raise PlacementError("duplicate physical slots across touched keys")
+
+
+def logical_store(store, placement: Optional["PlacementMap"]):
+    """View a (possibly padded, possibly permuted) physical store in LOGICAL
+    key order — row ``k`` is logical key ``k``'s ring.  Used by verify() and
+    final-state differentials; ``placement=None`` is the identity layout."""
+    if placement is None:
+        return store
+    perm = placement.slot_of(np.arange(placement.n_keys))
+    return store._replace(**{f: getattr(store, f)[perm]
+                             for f in store._fields})
+
+
+def physical_store(store, placement: "PlacementMap"):
+    """Inverse of :func:`logical_store`: lay a logical store (row ``k`` =
+    key ``k``) out in SLOT order — key ``k``'s ring lands at physical row
+    ``slot[k]``, every unmapped (free/headroom) row is EMPTY (``tid ==
+    NO_TID``: answers no read, ready to receive a move-in).  This is how an
+    elastic service builds its initial placed store before sharding."""
+    import jax.numpy as jnp
+    if store.val.shape[0] != placement.n_keys:
+        raise ValueError(f"store has {store.val.shape[0]} rows, placement "
+                         f"maps {placement.n_keys} keys")
+    perm = jnp.asarray(placement.slot)
+    out = {}
+    for name in store._fields:
+        a = getattr(store, name)
+        fill = -1 if name == "tid" else 0        # NO_TID marks rows empty
+        e = jnp.full((placement.n_slots,) + a.shape[1:], fill, a.dtype)
+        out[name] = e.at[perm].set(a)
+    return store._replace(**out)

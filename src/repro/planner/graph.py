@@ -147,3 +147,39 @@ def conflict_graph(op_kind: np.ndarray, op_key: np.ndarray,
     conflict = rw | rw.T | ww
     return ConflictGraph(rw=rw, ww=ww, conflict=conflict,
                          active=(op_kind != NOP).any(axis=1))
+
+
+def footprint_nodes(op_kind: np.ndarray, op_key: np.ndarray,
+                    owner: np.ndarray, n_nodes: int) -> np.ndarray:
+    """Placement-aware node footprint of a wave: boolean ``[T, n_nodes]``
+    where ``[t, n]`` means transaction ``t`` touches at least one key whose
+    ring physically lives on node ``n`` under the given placement
+    (``owner`` = ``PlacementMap.owner``, or any ``[n_keys]`` node vector).
+
+    This is the planner/balancer's locality view: lanes whose union
+    footprint stays on one node are candidates for node-local dispatch, and
+    ``cross_node_frac`` below is the honest "how much of this wave is
+    visitor traffic under the CURRENT placement" measure the bench reports
+    next to the engine's logical ``msgs_cross``."""
+    op_kind = np.asarray(op_kind)
+    op_key = np.asarray(op_key)
+    owner = np.asarray(owner)
+    T = op_kind.shape[0]
+    out = np.zeros((T, n_nodes), bool)
+    active = op_kind != NOP
+    valid = active & (op_key >= 0) & (op_key < owner.shape[0])
+    t_idx, o_idx = np.nonzero(valid)
+    out[t_idx, owner[op_key[t_idx, o_idx]]] = True
+    return out
+
+
+def cross_node_frac(op_kind: np.ndarray, op_key: np.ndarray,
+                    owner: np.ndarray, n_nodes: int) -> float:
+    """Fraction of active transactions whose footprint spans > 1 physical
+    node under the given placement."""
+    fp = footprint_nodes(op_kind, op_key, owner, n_nodes)
+    spans = fp.sum(axis=1)
+    active = spans > 0
+    if not active.any():
+        return 0.0
+    return float((spans[active] > 1).mean())

@@ -160,7 +160,8 @@ def run_wave_planned(store, wave: Wave, clock, *, wave_idx0: int,
                      mesh=None, kernels=None, watermark=None,
                      host_skew=None, gc_track: bool = True,
                      gc_block: bool = False,
-                     max_lanes: Optional[int] = DEFAULT_MAX_LANES):
+                     max_lanes: Optional[int] = DEFAULT_MAX_LANES,
+                     placement=None):
     """Execute one wave under the planned scheduler.
 
     Plans on the host (graph → lanes → pow2 block), relabels every row with
@@ -182,7 +183,7 @@ def run_wave_planned(store, wave: Wave, clock, *, wave_idx0: int,
     n_real = plan.n_lanes + (1 if plan.n_spilled else 0)
     kw = dict(sched=sched, n_nodes=n_nodes, host_skew=host_skew,
               watermark=watermark, gc_track=gc_track, gc_block=gc_block,
-              kernels=kernels)
+              kernels=kernels, placement=placement)
     if mesh is None:
         store, outs, clock = step_block(store, stacked, wave_idx0, clock,
                                         **kw)
@@ -236,7 +237,7 @@ def run_workload_planned(store, waves, sched: str = "postsi",
                          n_nodes: int = 8, mesh=None, kernels=None,
                          host_skew=None, gc_track: bool = False,
                          gc_block: bool = False,
-                         max_lanes: Optional[int] = None):
+                         max_lanes: Optional[int] = None, placement=None):
     """Replay driver for the planned scheduler (mirror of
     ``engine.run_workload``): plans and executes each wave in order.
 
@@ -258,7 +259,7 @@ def run_workload_planned(store, waves, sched: str = "postsi",
             store, wave, clock, wave_idx0=wave_idx0, next_tid=next_tid,
             sched=sched, n_nodes=n_nodes, mesh=mesh, kernels=kernels,
             host_skew=host_skew, gc_track=gc_track, gc_block=gc_block,
-            max_lanes=max_lanes)
+            max_lanes=max_lanes, placement=placement)
         plan_s += time.perf_counter() - t0
         wave_idx0 += pw.waves_consumed
         next_tid += pw.tids_consumed

@@ -45,6 +45,9 @@ class TxnRequest:
     commit_tick: int = -1
     s: int = -1                  # induced interval of the committed run
     c: int = -1
+    replica: bool = False        # served from a hot-key read replica
+                                 # (s == c == replica floor, never entered
+                                 # the engine)
 
     @property
     def latency(self) -> int:

@@ -55,6 +55,8 @@ class VisibilityGC:
         self.n_nodes = n_nodes            # mesh node-id bound for pins (opt.)
         self.clock = 0                    # engine clock after the last wave
         self.evicted_visible = 0          # cumulative watermark violations
+        self.replica_reads = 0            # reads served at a replica floor
+        self.replica_floor = 0            # lowest floor a replica served at
         self._pins: Dict[int, int] = {}   # handle -> pinned snapshot floor
         self._pin_node: Dict[int, int] = {}  # handle -> hosting mesh node
         self._handles = itertools.count(1)
@@ -119,10 +121,21 @@ class VisibilityGC:
         self.clock = int(clock)
         self.evicted_visible += int(out_np.evicted_visible)
 
+    def observe_replica(self, floor: int, n_reads: int = 1) -> None:
+        """Account reads served from a hot-key replica at visibility floor
+        ``floor`` (DESIGN.md §11): the replica reader's snapshot equals the
+        GC watermark, so it needs no pin — versions visible at the floor are
+        frozen by the watermark invariant and can never be reclaimed out
+        from under it.  Pure accounting; the watermark is unaffected."""
+        self.replica_reads += int(n_reads)
+        self.replica_floor = int(floor)
+
     def report(self) -> Dict[str, int]:
         return {
             "evicted_visible": self.evicted_visible,
             "pins": len(self._pins),
             "watermark": self.watermark() if self._pins else self.clock,
             "blocking": int(self.block),
+            "replica_reads": self.replica_reads,
+            "replica_floor": self.replica_floor,
         }

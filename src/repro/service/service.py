@@ -32,10 +32,12 @@ from typing import Callable, Dict, Iterable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ABORTED, COMMITTED, Wave, WaveOut, make_store, \
+from repro.core import ABORTED, COMMITTED, NOP, Wave, WaveOut, make_store, \
     run_block, step_wave
 from repro.core.verify import final_values_ok, verify_cv, verify_si
 from repro.core.workloads import SMALLBANK_O, smallbank_txn, ycsb_txn
+from repro.placement import (HotKeyReplicas, LoadBalancer, apply_move,
+                             logical_store, physical_store)
 
 from .former import TxnRequest, WaveFormer
 from .gc import VisibilityGC
@@ -75,6 +77,13 @@ class ServiceReport:
     planned_lane_waves: int = 0  # lane + spill waves they expanded to
     planned_spilled: int = 0     # txns spilled past the lane budget
     planner_switches: int = 0    # hybrid mode flips (either direction)
+    # elastic placement plane (DESIGN.md §11): all 0/empty when static
+    replica_commits: int = 0     # read-only txns answered from replicas
+    replica_refreshes: int = 0   # replica snapshot refreshes
+    placement_moves: int = 0     # executed live range moves
+    moved_keys: int = 0          # keys relocated across all moves
+    imbalance: float = 0.0       # max/mean per-node committed-txn occupancy
+    occupancy: List[int] = dataclasses.field(default_factory=list)
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -99,7 +108,8 @@ class TxnService:
                  gc_block: bool = False, max_queue: Optional[int] = None,
                  host_skew: Optional[np.ndarray] = None, seed: int = 0,
                  mesh=None, kernels=None, durability=None, faults=None,
-                 planner=None):
+                 planner=None, placement=None, replicas=None, balancer=None,
+                 replica_refresh: int = 1):
         from repro.core.substrate import mesh_kernels
         from repro.kernels import resolve
         from repro.planner import HybridSwitch
@@ -113,12 +123,44 @@ class TxnService:
         # through the shard_map degrade so it reports what actually runs
         self.kernels = resolve(kernels) if mesh is None else \
             mesh_kernels(kernels)
+        # elastic placement plane (DESIGN.md §11): when a PlacementMap is
+        # given, rings live at physical rows ``placement.slot[key]`` and
+        # every engine dispatch translates logical keys through it; the
+        # default (None) is the frozen identity layout
+        self.placement = placement
+        if placement is not None:
+            if placement.n_keys != n_keys:
+                raise ValueError(f"placement covers {placement.n_keys} keys, "
+                                 f"service has {n_keys}")
+            if mesh is not None and placement.n_nodes != mesh.devices.size:
+                raise ValueError(f"placement is laid out for "
+                                 f"{placement.n_nodes} nodes, mesh has "
+                                 f"{mesh.devices.size}")
+        base = make_store(n_keys, n_versions)
+        if placement is not None:
+            base = physical_store(base, placement)
         if mesh is None:
-            self.store = make_store(n_keys, n_versions)
+            self.store = base
         else:
             from repro.core.dist_engine import shard_store
-            self.store = shard_store(make_store(n_keys, n_versions), mesh)
+            self.store = shard_store(base, mesh)
         self.n_keys = n_keys
+        if replicas is not None and not isinstance(replicas, HotKeyReplicas):
+            replicas = HotKeyReplicas(replicas)
+        self.replicas = replicas
+        self.replica_refresh = max(1, int(replica_refresh))
+        self.replica_commits = 0
+        if balancer is True:
+            if placement is None:
+                raise ValueError("balancer=True needs an elastic placement")
+            balancer = LoadBalancer(n_keys, placement.n_nodes)
+        if balancer is not None and placement is None:
+            raise ValueError("a balancer needs an elastic placement to move")
+        self.balancer = balancer
+        self.placement_moves = 0
+        self.moved_keys = 0
+        self._occupancy = (np.zeros(placement.n_nodes, np.int64)
+                          if placement is not None else None)
         self.clock = jnp.int32(1)
         self.former = WaveFormer(T, O, max_queue=max_queue)
         self.retry = retry or RetryPolicy()
@@ -159,6 +201,10 @@ class TxnService:
         self.durability = durability
         if durability is not None:
             durability.attach(self)
+        if self.replicas is not None:
+            # bootstrap snapshot at floor 0 so pre-first-tick submits can
+            # already be answered (every ring starts with the cid-0 version)
+            self._refresh_replicas()
 
     # ------------------------------------------------------------ intake
     def submit(self, op_kind: np.ndarray, op_key: np.ndarray,
@@ -169,6 +215,26 @@ class TxnService:
                          np.asarray(op_key, np.int32),
                          np.asarray(op_val, np.int32), int(host))
         self.requests.append(req)
+        if (self.replicas is not None
+                and self.replicas.can_serve(req.op_kind, req.op_key)):
+            # visibility-cheap replica read (DESIGN.md §11.3): a read-only
+            # txn over replicated keys commits AT SUBMIT TIME with
+            # s = c = the replica's visibility floor — zero coordination,
+            # never enters the engine; validity is the watermark-freeze
+            # invariant (versions visible at the floor are immutable)
+            _, floor = self.replicas.serve(req.op_kind, req.op_key)
+            req.status = "committed"
+            req.replica = True
+            req.arrive_tick = self.tick
+            req.commit_tick = self.tick
+            req.s = req.c = int(floor)
+            req.attempts = 1
+            self.committed += 1
+            self.replica_commits += 1
+            self.latencies.append(req.latency)
+            self.gc.observe_replica(
+                floor, n_reads=int((req.op_kind != NOP).sum()))
+            return req
         self.former.offer(req, self.tick + 1)     # eligible from next tick
         return req
 
@@ -178,6 +244,9 @@ class TxnService:
         Returns the numpy ``WaveOut`` or ``None`` for an idle tick."""
         self.tick += 1
         t0 = time.perf_counter()
+        if (self.replicas is not None
+                and self.tick % self.replica_refresh == 0):
+            self._refresh_replicas()
         formed = self.former.form(self.tick)
         if formed is None:
             self.idle_ticks += 1
@@ -208,6 +277,7 @@ class TxnService:
             if self.faults is not None:
                 self.faults.post_log(self)
         self._route(out, slots)
+        self._observe_placement(wave, out, slots)
         if self.planner is not None:
             self.planner.observe_optimistic(
                 len(slots), int((out.status[:len(slots)] == ABORTED).sum()))
@@ -233,7 +303,8 @@ class TxnService:
             next_tid=self.former.next_tid, sched=self.sched,
             n_nodes=self.n_nodes, mesh=self.mesh, kernels=self.kernels,
             watermark=wm, host_skew=self.host_skew, gc_block=self.gc.block,
-            max_lanes=self.planner.max_lanes)
+            max_lanes=self.planner.max_lanes,
+            placement=self._placement_arrays())
         if self.faults is not None:
             self.faults.at_retire(self)
         # the planner relabeled every row with fresh contiguous tids (lane
@@ -259,6 +330,7 @@ class TxnService:
             req.tid = int(pw.exec_tid[i])
             req.tids[-1] = req.tid
         self._route(out, slots)
+        self._observe_placement(wave, out, slots)
         self.planner.observe_planned(
             len(slots), pw.plan.conflicted + pw.plan.n_spilled)
         if self.durability is not None:
@@ -313,13 +385,13 @@ class TxnService:
                 self.store, wave, self.wave_idx, self.clock, sched=self.sched,
                 n_nodes=self.n_nodes, host_skew=self.host_skew,
                 watermark=wm, gc_block=self.gc.block,
-                kernels=self.kernels)
+                kernels=self.kernels, placement=self._placement_arrays())
         from repro.core.dist_engine import step_wave_dist
         return step_wave_dist(
             self.store, wave, self.wave_idx, self.clock, self.mesh,
             sched=self.sched, n_nodes=self.n_nodes, host_skew=self.host_skew,
             watermark=wm, gc_block=self.gc.block,
-            kernels=self.kernels)
+            kernels=self.kernels, placement=self._placement_arrays())
 
     def _run_block(self, stacked):
         """Dispatch a [B]-stacked wave block to the configured data plane
@@ -338,15 +410,83 @@ class TxnService:
                 self.store, stacked, wave_idx0, self.clock, sched=self.sched,
                 n_nodes=self.n_nodes, host_skew=self.host_skew,
                 watermark=wm, gc_block=self.gc.block,
-                kernels=self.kernels)
+                kernels=self.kernels, placement=self._placement_arrays())
         else:
             from repro.core.dist_engine import run_block_dist
             self.store, outs, self.clock = run_block_dist(
                 self.store, stacked, wave_idx0, self.clock, self.mesh,
                 sched=self.sched, n_nodes=self.n_nodes,
                 host_skew=self.host_skew, watermark=wm,
-                gc_block=self.gc.block, kernels=self.kernels)
+                gc_block=self.gc.block, kernels=self.kernels,
+                placement=self._placement_arrays())
         return outs, self.clock
+
+    # ------------------------------------------------- elastic placement
+    def _placement_arrays(self):
+        """Device-side (owner, slot) arrays of the current placement, or
+        ``None`` when static (cached by the PlacementMap until a move)."""
+        return (None if self.placement is None
+                else self.placement.device_arrays())
+
+    def _refresh_replicas(self):
+        """Re-snapshot the hot-key replicas at the current visibility floor
+        (the merged GC watermark; the engine's boundary-collapse clock when
+        no pins exist).  The floor only moves forward, so no invalidation
+        traffic exists — one batched gather IS the replication protocol."""
+        wm = self._watermark()
+        floor = int(self.gc.clock) if wm is None else int(wm)
+        slot_of = None if self.placement is None else self.placement.slot
+        self.replicas.refresh(self.store, floor, slot_of=slot_of)
+
+    def _observe_placement(self, wave, out, slots):
+        """Fold one retired wave into placement-plane accounting (per-node
+        committed-txn occupancy under the CURRENT placement) and let the
+        balancer trigger live range moves at its block boundary."""
+        if self.placement is None:
+            return
+        T = len(slots)
+        kinds = np.asarray(wave.op_kind)[:T]
+        keys = np.asarray(wave.op_key)[:T]
+        status = np.asarray(out.status)[:T]
+        owner = self.placement.owner
+        active = kinds != NOP
+        committed = status == COMMITTED
+        sel = committed & active.any(axis=1)
+        if sel.any():
+            first = np.argmax(active, axis=1)
+            np.add.at(self._occupancy,
+                      owner[keys[np.arange(T), first][sel]], 1)
+        if self.balancer is None:
+            return
+        self.balancer.observe(keys, active, committed, owner)
+        if self.balancer.end_block():
+            for lo, hi, dst in self.balancer.plan(self.placement):
+                self.move_range(lo, hi, dst)
+
+    def move_range(self, lo: int, hi: int, dst: int):
+        """Live-repartition logical keys ``[lo, hi)`` onto node ``dst`` at a
+        wave boundary: plan slot assignments on the PlacementMap, relocate
+        the version rings in one device program (psum gather + owner-masked
+        scatter on the mesh), commit the map mutation, and WAL-log the
+        explicit record so recovery replays the move bit-identically.
+        Between waves no transaction is in flight, every retired outcome is
+        durable, and the engine's outcomes are placement-invariant — so the
+        move needs no quiescence protocol beyond the boundary itself.
+        Returns the applied ``MoveRecord`` (``None`` if nothing moved)."""
+        if self.placement is None:
+            raise ValueError("move_range needs an elastic placement")
+        if self.stream is not None:
+            self.stream.flush()          # no dispatched block may be in flight
+        rec = self.placement.move(lo, hi, dst)
+        if rec.keys.size == 0:
+            return None
+        self.store = apply_move(self.store, rec, mesh=self.mesh)
+        self.placement.apply_record(rec)
+        self.placement_moves += 1
+        self.moved_keys += int(rec.keys.size)
+        if self.durability is not None:
+            self.durability.log_move(rec, int(self.clock))
+        return rec
 
     def drain(self, max_ticks: Optional[int] = None) -> int:
         """Run ticks until no request is pending (or the safety cap).
@@ -436,14 +576,35 @@ class TxnService:
             planned_spilled=self.planned_spilled,
             planner_switches=(self.planner.switches
                               if self.planner is not None else 0),
+            replica_commits=self.replica_commits,
+            replica_refreshes=(self.replicas.refreshes
+                               if self.replicas is not None else 0),
+            placement_moves=self.placement_moves,
+            moved_keys=self.moved_keys,
+            imbalance=self._imbalance(),
+            occupancy=([] if self._occupancy is None
+                       else self._occupancy.tolist()),
         )
+
+    def _imbalance(self) -> float:
+        """Max/mean per-node committed-txn occupancy under the current
+        placement (1.0 = perfectly balanced; 0.0 when static or empty)."""
+        if self._occupancy is None or self._occupancy.sum() == 0:
+            return 0.0
+        occ = self._occupancy.astype(np.float64)
+        return round(float(occ.max() / occ.mean()), 4)
 
     def verify(self) -> List[str]:
         """Post-hoc correctness of the served history: SI (or CV) validity
         plus final-store-matches-serial-replay, via ``repro.core.verify``."""
         check = verify_cv if self.sched == "cv" else verify_si
         errors = check(self.history, base_store=self.base_store)
-        errors += final_values_ok(self.store, self.history, self.n_keys)
+        # the history speaks logical keys; under an elastic placement the
+        # final store is in physical slot order — permute it back before
+        # the serial-replay comparison (moves don't change ring contents)
+        store = (self.store if self.placement is None
+                 else logical_store(self.store, self.placement))
+        errors += final_values_ok(store, self.history, self.n_keys)
         return errors
 
 

@@ -1,0 +1,335 @@
+"""Elastic placement plane tests (DESIGN.md §11) — single-device.
+
+The load-bearing claim: the engine consumes a placement ONLY as an
+injective logical-key -> physical-slot translation, so ANY placement —
+identity, headroom'd blocks, or a layout mutated by live range moves
+mid-workload — yields bit-identical outcomes (statuses, intervals,
+history, logical store) to the static run, for every scheduler.  The
+mesh twin of these tests lives in tests/test_distribution.py (needs 8
+virtual devices); everything here runs in-process on one device.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULERS, make_store, run_workload
+from repro.core.store import read_visible
+from repro.core.workloads import micro_waves, zipf_hot_keys
+from repro.placement import (HotKeyReplicas, LoadBalancer, PlacementError,
+                             PlacementMap, apply_move, logical_store,
+                             physical_store, validate_routing)
+
+N_KEYS, N_NODES, V = 64, 4, 8
+
+
+def _stores_equal(a, b, msg=""):
+    for name, fa, fb in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb),
+                                      err_msg=f"{msg}.{name}")
+
+
+def _histories_equal(h1, h2, msg=""):
+    assert len(h1) == len(h2), msg
+    for (t1, o1), (t2, o2) in zip(h1, h2):
+        np.testing.assert_array_equal(t1, t2, err_msg=msg)
+        for name, f1, f2 in zip(o1._fields, o1, o2):
+            np.testing.assert_array_equal(f1, f2, err_msg=f"{msg}.{name}")
+
+
+# --------------------------------------------------------------- map basics
+
+def test_placement_map_invariants_and_ranges():
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+    pm.validate()
+    assert pm.n_slots == N_KEYS * 2
+    # initial layout: contiguous blocks, one range per node
+    assert pm.ranges() == [(0, 16, 0), (16, 32, 1), (32, 48, 2), (48, 64, 3)]
+    assert pm.owner_of(0) == 0 and pm.owner_of(63) == 3
+    # headroom=1 with a dividing key space is the identity layout
+    pm1 = PlacementMap(N_KEYS, N_NODES, headroom=1)
+    np.testing.assert_array_equal(pm1.slot, np.arange(N_KEYS))
+    # a move splits the range and re-derives contiguous runs
+    rec = pm.move(0, 8, 3)
+    assert rec.keys.size == 8
+    pm.apply_record(rec)
+    pm.validate()
+    assert pm.ranges()[0] == (0, 8, 3)
+    assert (pm.owner[:8] == 3).all() and (pm.slot[:8] // pm.capacity == 3).all()
+    # round-trip through the durable config (initial layout only)
+    pm2 = PlacementMap.from_config(pm.to_config())
+    assert pm2.capacity == pm.capacity and pm2.n_keys == pm.n_keys
+
+
+def test_placement_map_capacity_exhaustion_is_loud():
+    pm = PlacementMap(8, 2, headroom=1)      # 4 slots per node, all occupied
+    with pytest.raises(PlacementError):
+        pm.move(0, 2, 1)                     # node 1 has zero free slots
+
+
+def test_validate_routing_detects_corruption():
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=1)
+    p = pm.device_arrays()
+    validate_routing(pm.n_slots, N_NODES, p)           # clean map passes
+    # a slot on the wrong node's block (owner says 0, slot says node 3)
+    bad_slot = np.asarray(p.slot).copy()
+    bad_slot[0] = pm.n_slots - 1
+    bad_slot[N_KEYS - 1] = 0
+    broken = type(p)(p.owner, np.asarray(bad_slot))
+    with pytest.raises(PlacementError):
+        validate_routing(pm.n_slots, N_NODES, broken)
+    # a duplicated slot (non-injective map) is also loud
+    dup = np.asarray(p.slot).copy()
+    dup[1] = dup[0]
+    with pytest.raises(PlacementError):
+        validate_routing(pm.n_slots, N_NODES, type(p)(p.owner, dup))
+
+
+def test_physical_logical_store_roundtrip():
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+    pm.apply_record(pm.move(4, 12, 2))
+    store = make_store(N_KEYS, V)
+    phys = physical_store(store, pm)
+    assert phys.head.shape[0] == pm.n_slots
+    # unmapped rows are EMPTY (tid == NO_TID), mapped rows hold the rings
+    occupied = np.zeros(pm.n_slots, bool)
+    occupied[pm.slot] = True
+    assert (np.asarray(phys.tid)[~occupied] == -1).all()
+    _stores_equal(logical_store(phys, pm), store, "roundtrip")
+
+
+# ------------------------------------------------- engine placement-invariance
+
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_any_placement_bit_identical_per_sched(sched):
+    """Identity, headroom'd blocks, and a post-move layout all reproduce the
+    static run exactly: history AND logical final store."""
+    rng = np.random.RandomState(5)
+    waves = micro_waves(rng, 3, 12, N_NODES, N_KEYS // N_NODES, n_ops=3,
+                        read_ratio=0.5, dist_frac=0.5, hot_frac=0.6,
+                        hot_per_node=2)
+    hs = (np.array([0, 1, 0, 2], np.int32) if sched == "clocksi" else None)
+    ref_store, ref_h, ref_s = run_workload(
+        make_store(N_KEYS, V), waves, sched=sched, n_nodes=N_NODES,
+        host_skew=hs, gc_track=True)
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+    pm.apply_record(pm.move(0, 6, 3))        # a pre-moved, non-trivial layout
+    st, h, s = run_workload(
+        physical_store(make_store(N_KEYS, V), pm), waves, sched=sched,
+        n_nodes=N_NODES, host_skew=hs, gc_track=True,
+        placement=pm.device_arrays())
+    assert s == ref_s, (sched, s, ref_s)
+    _histories_equal(ref_h, h, sched)
+    _stores_equal(ref_store, logical_store(st, pm), sched)
+
+
+def test_live_move_mid_workload_bit_identical():
+    """Moving a key range BETWEEN waves leaves every subsequent outcome and
+    the final logical store bit-identical to the uninterrupted static run —
+    the correctness core of live repartitioning."""
+    from repro.core import step_wave
+    rng = np.random.RandomState(11)
+    waves = micro_waves(rng, 6, 12, N_NODES, N_KEYS // N_NODES, n_ops=3,
+                        read_ratio=0.4, dist_frac=0.5, hot_frac=0.7,
+                        hot_per_node=2)
+    ref_store, ref_h, _ = run_workload(make_store(N_KEYS, V), waves,
+                                       sched="postsi", n_nodes=N_NODES)
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+    store = physical_store(make_store(N_KEYS, V), pm)
+    import jax.numpy as jnp
+    clock = jnp.int32(1)
+    h = []
+    for w, wave in enumerate(waves):
+        if w == 2:                            # live move at a wave boundary
+            rec = pm.move(0, 10, 2)
+            store = apply_move(store, rec)
+            pm.apply_record(rec)
+        if w == 4:                            # and a second one later
+            rec = pm.move(32, 40, 0)
+            store = apply_move(store, rec)
+            pm.apply_record(rec)
+        store, out, clock = step_wave(store, wave, w + 1, clock,
+                                      sched="postsi", n_nodes=N_NODES,
+                                      placement=pm.device_arrays())
+        h.append((np.asarray(wave.tid), out))
+    _histories_equal(ref_h, h, "live-move")
+    _stores_equal(ref_store, logical_store(store, pm), "live-move")
+    pm.validate()
+
+
+# ----------------------------------------------------------------- balancer
+
+def test_balancer_converges_on_skewed_load():
+    """Synthetic zipfian per-key traffic: repeated plan/apply rounds drive
+    the max/mean imbalance below the trigger, moves are contiguous range
+    splits, and the hot node always keeps at least one key."""
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+    lb = LoadBalancer(N_KEYS, N_NODES, every=1, trigger=1.25, max_moves=2,
+                      decay=1.0)
+    # zipf-ish: key k draws ~1/(k+1) of the traffic -> node 0 is scorching
+    lb.key_ops = 1000.0 / (np.arange(N_KEYS) + 1.0)
+    start = lb.imbalance(pm)
+    assert start > 2.0, start
+    for _ in range(12):
+        moves = lb.plan(pm)
+        if not moves:
+            break
+        for lo, hi, dst in moves:
+            assert 0 <= lo < hi <= N_KEYS
+            pm.apply_record(pm.move(lo, hi, dst))
+            pm.validate()
+        assert all((pm.owner == n).sum() >= 1 for n in range(N_NODES))
+    assert lb.imbalance(pm) < start
+    assert lb.imbalance(pm) < 1.25 + 0.35, lb.imbalance(pm)
+
+
+# ------------------------------------------------------------------ replicas
+
+def test_replica_staleness_property():
+    """Property over seeds: a replica NEVER serves state newer than its
+    visibility floor, the floor never exceeds the engine clock, and the
+    served values equal ``read_visible`` at the floor — stale but
+    consistent, by construction."""
+    from repro.service import TxnService
+    from repro.core.commit_phase import NOP, READ, RMW
+    for seed in (0, 3, 9):
+        rng = np.random.RandomState(seed)
+        hot = zipf_hot_keys(N_NODES, N_KEYS // N_NODES, theta=0.99)
+        pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+        svc = TxnService(n_keys=N_KEYS, n_versions=V, T=16, O=4,
+                         sched="postsi", n_nodes=N_NODES, placement=pm,
+                         replicas=hot, seed=seed)
+        for _ in range(150):
+            kind = np.full(4, NOP, np.int32)
+            key = np.zeros(4, np.int32)
+            val = np.zeros(4, np.int32)
+            ks = rng.choice(hot, size=2, replace=False)
+            if rng.rand() < 0.6:
+                kind[:2] = READ
+            else:
+                kind[:2] = RMW
+                val[:2] = rng.randint(1, 100, 2)
+            key[:2] = ks
+            svc.submit(kind, key, val, int(rng.randint(0, N_NODES)))
+            if rng.rand() < 0.3:
+                svc.step()
+        svc.drain()
+        assert svc.verify() == [], svc.verify()
+        rep = svc.replicas
+        assert svc.replica_commits > 0
+        assert rep.max_cid() <= rep.floor <= svc.gc.clock
+        for r in svc.requests:
+            if r.replica:
+                assert r.s == r.c <= svc.gc.clock
+        # consistency AT refresh time: immediately after a refresh, the
+        # snapshot equals read_visible at its floor.  (An OLD floor can't be
+        # re-read later — ring slots below the advancing watermark are
+        # reclaimable; the replica's host copy is exactly what makes the
+        # stale snapshot servable without pinning GC.)
+        svc._refresh_replicas()
+        import jax.numpy as jnp
+        rows = jnp.asarray(pm.slot[rep.keys], jnp.int32)
+        wm = jnp.broadcast_to(jnp.int32(rep.floor), rows.shape)
+        vals, _, cids, _, _ = read_visible(svc.store, rows, wm)
+        for i, k in enumerate(rep.keys.tolist()):
+            assert rep._val[k] == int(np.asarray(vals)[i]), (seed, k)
+            assert rep._cid[k] == int(np.asarray(cids)[i]), (seed, k)
+
+
+def test_replica_never_serves_writers_or_cold_keys():
+    from repro.core.commit_phase import NOP, READ, WRITE
+    rep = HotKeyReplicas([1, 2, 3])
+    assert not rep.can_serve(np.array([READ]), np.array([1]))  # no snapshot
+    rep.floor = 0
+    assert rep.can_serve(np.array([READ, NOP]), np.array([1, 0]))
+    assert not rep.can_serve(np.array([READ, WRITE]), np.array([1, 2]))
+    assert not rep.can_serve(np.array([READ]), np.array([7]))  # cold key
+    assert not rep.can_serve(np.array([NOP]), np.array([0]))   # empty txn
+
+
+# ----------------------------------------------- service + durability planes
+
+def _mixed_txns(seed, n, hot_n=16):
+    from repro.core.commit_phase import NOP, READ, RMW
+    rng = np.random.RandomState(seed)
+    out = []
+    for _ in range(n):
+        kind = np.full(4, NOP, np.int32)
+        key = np.zeros(4, np.int32)
+        val = np.zeros(4, np.int32)
+        ks = rng.choice(hot_n, size=2, replace=False)
+        if rng.rand() < 0.5:
+            kind[:2] = READ
+        else:
+            kind[:2] = RMW
+            val[:2] = rng.randint(1, 100, 2)
+        key[:2] = ks
+        out.append((kind, key, val, int(rng.randint(0, N_NODES))))
+    return out
+
+
+def test_elastic_service_commit_set_equals_static():
+    """TxnService with an elastic placement + live balancer moves commits
+    the EXACT same request set as the static service on the same stream
+    (replicas off — they intentionally change which txns reach the engine),
+    and the served history verifies."""
+    from repro.service import TxnService
+    txns = _mixed_txns(2, 150)
+
+    def run(**kw):
+        svc = TxnService(n_keys=N_KEYS, n_versions=V, T=16, O=4,
+                         sched="postsi", n_nodes=N_NODES, **kw)
+        for t in txns:
+            svc.submit(*t)
+        svc.drain()
+        return svc
+
+    s_static = run()
+    s_elastic = run(placement=PlacementMap(N_KEYS, N_NODES, headroom=2),
+                    balancer=True)
+    assert s_elastic.report().placement_moves > 0
+    cs = lambda s: sorted(r.req_id for r in s.requests
+                          if r.status == "committed")
+    assert cs(s_static) == cs(s_elastic)
+    _histories_equal(s_static.history, s_elastic.history, "service")
+    assert s_elastic.verify() == []
+    rep = s_elastic.report()
+    assert rep.occupancy and sum(rep.occupancy) == rep.committed
+    assert rep.imbalance >= 1.0
+
+
+@pytest.mark.parametrize("snapshot_every", [None, 2])
+def test_move_recovery_replay(tmp_path, snapshot_every):
+    """Crash-restart of a durable elastic service with logged moves:
+    recovery interleaves REC_MOVE and REC_BLOCK records in seq order and
+    rebuilds the store, the PlacementMap and the history bit-identically —
+    with and without snapshots (a snapshot taken AFTER a move must not
+    re-apply it to the store, only to the map)."""
+    from repro.durability.recovery import DurabilityManager, recover
+    from repro.service import TxnService
+    d = str(tmp_path / f"dur_{snapshot_every}")
+    txns = _mixed_txns(4, 120)
+    mgr = DurabilityManager(d, fsync_every=1, snapshot_every=snapshot_every)
+    svc = TxnService(n_keys=N_KEYS, n_versions=V, T=16, O=4, sched="postsi",
+                     n_nodes=N_NODES,
+                     placement=PlacementMap(N_KEYS, N_NODES, headroom=2),
+                     balancer=True, durability=mgr)
+    for t in txns:
+        svc.submit(*t)
+    svc.drain()
+    assert svc.report().placement_moves > 0
+    mgr.crash()
+
+    state = recover(d)
+    _stores_equal(svc.store, state.store, "recovered")
+    np.testing.assert_array_equal(state.placement_map.slot,
+                                  svc.placement.slot)
+    np.testing.assert_array_equal(state.placement_map.owner,
+                                  svc.placement.owner)
+    assert state.clock == int(svc.clock)
+    # reattach: a fresh service adopts the replayed placement and verifies
+    svc2 = TxnService(n_keys=N_KEYS, n_versions=V, T=16, O=4, sched="postsi",
+                      n_nodes=N_NODES,
+                      placement=PlacementMap(N_KEYS, N_NODES, headroom=2),
+                      balancer=True,
+                      durability=DurabilityManager(d, fsync_every=1))
+    np.testing.assert_array_equal(svc2.placement.slot, svc.placement.slot)
+    assert svc2.verify() == [], svc2.verify()
