@@ -27,11 +27,19 @@ the block-retire point, reported relative to the wal-off row of the same
 served stream (an honest host-side overhead share: fsync + pickling on
 this host's filesystem, CPU backend — not a paper absolute).
 
+plus the **tenancy section** (DESIGN.md §12): a θ=0.99 write-hot tenant
+flooding next to a read-heavy light tenant, served solo / shared-FIFO /
+weighted-DRR (light-tenant p99, demand-aware Jain index) and the same-key
+RMW folding on/off pair on a single-op write-hot stream — commit-set
+equality between the folded and unfolded runs is checked, and the goodput
+ratio reported honestly as a CPU/jnp scheduling win.
+
 Writes ``BENCH_service.json`` at the repo root.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_service [--smoke]
       PYTHONPATH=src python -m benchmarks.bench_service --streaming-only
       PYTHONPATH=src python -m benchmarks.bench_service --durability-only
+      PYTHONPATH=src python -m benchmarks.bench_service --tenancy-only
 """
 from __future__ import annotations
 
@@ -45,7 +53,7 @@ import numpy as np
 from repro.core import SCHEDULERS, make_store, run_workload_fused
 from repro.core.workloads import micro_waves, poisson_arrivals
 from repro.service import (AdaptiveWaveSizer, RetryPolicy, TxnService,
-                           smallbank_txn_gen, ycsb_txn_gen)
+                           rmw_txn_gen, smallbank_txn_gen, ycsb_txn_gen)
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_service.json")
@@ -83,6 +91,19 @@ DUR_VARIANTS = (("wal-off", None, None),
                 ("wal-fsync1-snap8", 1, 8))
 ART_DIR = os.path.join(os.path.dirname(OUT_PATH),
                        "artifacts", "durability_smoke")
+
+# tenancy section (DESIGN.md §12): a θ=0.99 write-hot tenant flooding at
+# TEN_HOT_LOAD×T/tick next to a read-heavy light tenant at TEN_LIGHT_LOAD×T,
+# served solo / shared-FIFO / weighted-DRR — plus the same-key RMW folding
+# on/off pair on a single-op write-hot stream (commit-set equality is a gate,
+# not an assumption)
+TEN_CFG = dict(n_ticks=20, T=32, n_nodes=4, keys_per_node=50)
+TEN_SMOKE = dict(n_ticks=10, T=16, n_nodes=4, keys_per_node=40)
+TEN_HOT_LOAD = 2.5
+TEN_LIGHT_LOAD = 0.25
+TEN_THETA = 0.99
+TEN_ART_DIR = os.path.join(os.path.dirname(OUT_PATH),
+                           "artifacts", "tenancy_smoke")
 
 
 def _host_skew(sched: str, n_nodes: int):
@@ -317,6 +338,198 @@ def _durability_sweep(n_ticks: int, T: int, n_nodes: int, keys_per_node: int,
     }
 
 
+def _waterfill(demands: Dict[int, float], weights: Dict[int, float],
+               capacity: float) -> Dict[int, float]:
+    """Weighted max-min (water-filling) entitlements: each tenant's fair
+    share of ``capacity`` given its demand — an under-demand tenant is
+    capped at its demand and the surplus flows to the others."""
+    ent = dict.fromkeys(demands, 0.0)
+    active = {t for t in demands if demands[t] > 0}
+    cap = float(capacity)
+    while active and cap > 1e-9:
+        w_sum = sum(weights[t] for t in active)
+        sat = {t for t in active
+               if demands[t] - ent[t] <= cap * weights[t] / w_sum + 1e-9}
+        if sat:
+            for t in sat:
+                cap -= demands[t] - ent[t]
+                ent[t] = demands[t]
+            active -= sat
+        else:
+            for t in active:
+                ent[t] += cap * weights[t] / w_sum
+            cap = 0.0
+    return ent
+
+
+def _jain(xs) -> float:
+    xs = [float(x) for x in xs]
+    denom = len(xs) * sum(x * x for x in xs)
+    return round(sum(xs) ** 2 / denom, 4) if denom > 0 else 1.0
+
+
+def _fairness_run(mode: str, n_ticks: int, T: int, n_nodes: int,
+                  keys_per_node: int, seed: int = 0) -> Dict:
+    """One two-tenant session.  ``mode``: ``solo`` — the light tenant's
+    stream alone (its p99 baseline); ``fifo`` — both streams through the
+    single shared admission queue (everything tenant 0, arrival order);
+    ``drr`` — per-tenant queues at equal weight.  Arrival and request RNGs
+    depend only on ``seed``, so all three modes serve identical streams.
+    Light-tenant latency is attributed through the request handles that
+    ``submit`` returns — so the FIFO run needs no per-tenant queues to be
+    measured."""
+    tenants = {0: 1.0, 1: 1.0} if mode == "drr" else None
+    svc = TxnService(n_keys=n_nodes * keys_per_node, n_versions=8, T=T,
+                     sched="postsi", n_nodes=n_nodes,
+                     retry=RetryPolicy(max_attempts=12), max_queue=4 * T,
+                     tenants=tenants, seed=seed)
+    hot_arr = poisson_arrivals(np.random.RandomState(500 + seed),
+                               TEN_HOT_LOAD * T, n_ticks)
+    light_arr = poisson_arrivals(np.random.RandomState(501 + seed),
+                                 TEN_LIGHT_LOAD * T, n_ticks)
+    hot_gen = ycsb_txn_gen(np.random.RandomState(502 + seed), n_nodes,
+                           keys_per_node, theta=TEN_THETA, read_frac=0.1)
+    light_gen = ycsb_txn_gen(np.random.RandomState(503 + seed), n_nodes,
+                             keys_per_node, theta=TEN_THETA, read_frac=0.9)
+    by_tenant = {0: [], 1: []}
+    for t in range(n_ticks):
+        if mode != "solo":
+            for _ in range(int(hot_arr[t])):
+                by_tenant[0].append(svc.submit(*hot_gen(), tenant=0))
+        for _ in range(int(light_arr[t])):
+            by_tenant[1].append(svc.submit(
+                *light_gen(), tenant=1 if mode == "drr" else 0))
+        svc.step()
+    svc.drain()
+    row = svc.report().as_dict()
+    row.update(mode=mode, verify_errors=len(svc.verify()))
+    for tag, label in ((0, "hot"), (1, "light")):
+        reqs = by_tenant[tag]
+        lat = [r.latency for r in reqs if r.status == "committed"]
+        row[label] = {
+            "offered": len(reqs),
+            "committed": len(lat),
+            "rejected": sum(r.status == "rejected" for r in reqs),
+            "dropped": sum(r.status == "dropped" for r in reqs),
+            "latency_p50": round(float(np.percentile(lat, 50)), 1)
+            if lat else None,
+            "latency_p99": round(float(np.percentile(lat, 99)), 1)
+            if lat else None,
+        }
+    # demand-aware Jain: achieved commits vs weighted max-min entitlement
+    # of what the run actually delivered (a tenant fully served within its
+    # entitlement scores 1; a flood-squeezed one scores < 1)
+    demands = {t: row[l]["offered"] for t, l in ((0, "hot"), (1, "light"))}
+    achieved = {t: row[l]["committed"] for t, l in ((0, "hot"), (1, "light"))}
+    if mode != "solo":
+        ent = _waterfill(demands, {0: 1.0, 1: 1.0}, sum(achieved.values()))
+        row["jain"] = _jain([achieved[t] / max(ent[t], 1.0) for t in ent])
+    return row
+
+
+def _fold_run(fold: bool, n_ticks: int, T: int, keys_per_node: int,
+              seed: int = 0):
+    """One single-op RMW θ=0.99 write-hot session with folding on or off —
+    single-owner on purpose: the tentpole's batching is OWNER-SIDE, so the
+    stress case is one node's hot key range absorbing the whole stream
+    (spreading over hosts dilutes per-wave same-key multiplicity and with
+    it both the serialization pain and the fold win).  Generous retry
+    budget + deep queues so neither run sheds or drops — the commit SETS
+    must match, making the goodput ratio a pure scheduling comparison
+    (fold-off serializes the hot key through lost-update retries; fold-on
+    batches the same deltas into one engine txn)."""
+    n_keys = keys_per_node
+    svc = TxnService(n_keys=n_keys, n_versions=8, T=T, sched="postsi",
+                     n_nodes=1, fold_rmw=fold, max_queue=10_000,
+                     retry=RetryPolicy(max_attempts=30, jitter=False),
+                     seed=seed)
+    arr = poisson_arrivals(np.random.RandomState(600 + seed),
+                           TEN_HOT_LOAD * T, n_ticks)
+    gen = rmw_txn_gen(np.random.RandomState(601 + seed), 1,
+                      keys_per_node, theta=TEN_THETA)
+    rep = svc.run_stream(arr, gen)
+    row = rep.as_dict()
+    row.update(fold=fold, verify_errors=len(svc.verify()))
+    committed = sorted(r.req_id for r in svc.requests
+                       if r.status == "committed")
+    head = np.asarray(svc.store.head)
+    val = np.asarray(svc.store.val)
+    finals = [int(val[k, head[k]]) for k in range(n_keys)]
+    return row, committed, finals
+
+
+def _tenancy_section(n_ticks: int, T: int, n_nodes: int, keys_per_node: int,
+                     artifacts_dir: Optional[str] = None) -> Dict:
+    """Fairness (solo / shared-FIFO / weighted-DRR) + RMW-folding on/off,
+    with the acceptance gates evaluated and RECORDED (the --tenancy-only CI
+    leg additionally fails on them).  Kernel backend is the CPU jnp default
+    — the speedup is a scheduling win, not a device-compute claim."""
+    # warm the (T, O) jit signature so mode-to-mode wall clocks compare
+    TxnService(n_keys=n_nodes * keys_per_node, T=T, sched="postsi",
+               n_nodes=n_nodes).run_stream(
+        [T], ycsb_txn_gen(np.random.RandomState(0), n_nodes, keys_per_node))
+    modes = {m: _fairness_run(m, n_ticks, T, n_nodes, keys_per_node)
+             for m in ("solo", "fifo", "drr")}
+    solo_p99 = modes["solo"]["light"]["latency_p99"]
+    drr_p99 = modes["drr"]["light"]["latency_p99"]
+    # warm the single-node signature the fold pair dispatches
+    TxnService(n_keys=keys_per_node, T=T, sched="postsi",
+               n_nodes=1).run_stream(
+        [T], rmw_txn_gen(np.random.RandomState(0), 1, keys_per_node))
+    off, set_off, vals_off = _fold_run(False, n_ticks, T, keys_per_node)
+    on, set_on, vals_on = _fold_run(True, n_ticks, T, keys_per_node)
+    speedup = round(on["goodput_tps"] / max(off["goodput_tps"], 1e-9), 3)
+    equal = set_off == set_on and vals_off == vals_on
+    gates = {
+        "light_p99_le_2x_solo": (drr_p99 is not None and solo_p99 is not None
+                                 and drr_p99 <= 2.0 * solo_p99),
+        "goodput_within_10pct_of_fifo": (
+            modes["drr"]["goodput_tps"]
+            >= 0.9 * modes["fifo"]["goodput_tps"]),
+        "jain_drr_ge_0.9": modes["drr"]["jain"] >= 0.9,
+        "fold_speedup_ge_1.5x": speedup >= 1.5,
+        "fold_commit_set_equal": equal,
+    }
+    section = {
+        "config": {"n_ticks": n_ticks, "wave_size": T, "n_nodes": n_nodes,
+                   "keys_per_node": keys_per_node, "theta": TEN_THETA,
+                   "hot_load": TEN_HOT_LOAD, "light_load": TEN_LIGHT_LOAD,
+                   "weights": {"hot": 1.0, "light": 1.0},
+                   "fold_n_nodes": 1, "fold_n_keys": keys_per_node},
+        "fairness": modes,
+        "fold": {"off": off, "on": on, "speedup": speedup,
+                 "commit_set_equal": equal,
+                 "committed_each": [len(set_off), len(set_on)]},
+        "gates": gates,
+    }
+    if artifacts_dir is not None:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        with open(os.path.join(artifacts_dir, "tenancy.json"), "w") as f:
+            json.dump(section, f, indent=2)
+            f.write("\n")
+    return section
+
+
+def _print_tenancy(ten: Dict) -> None:
+    for mode, r in ten["fairness"].items():
+        light = r["light"]
+        print(f"bench_service/tenancy/{mode}: "
+              f"goodput {r['goodput_tps']:.0f}/s "
+              f"light p99 {light['latency_p99']} ticks "
+              f"(committed {light['committed']}/{light['offered']}, "
+              f"rejected {light['rejected']}) "
+              f"jain {r.get('jain', '-')} "
+              f"verify_errors {r['verify_errors']}")
+    f = ten["fold"]
+    print(f"bench_service/tenancy/fold: {f['speedup']:.2f}x goodput "
+          f"(on {f['on']['goodput_tps']:.0f}/s vs "
+          f"off {f['off']['goodput_tps']:.0f}/s) "
+          f"fold_groups {f['on']['fold_groups']} "
+          f"folded {f['on']['folded_requests']} "
+          f"commit_set_equal {f['commit_set_equal']}")
+    print(f"bench_service/tenancy/gates: {ten['gates']}")
+
+
 def run(smoke: bool = False) -> Dict:
     if smoke:
         n_ticks, T = SMOKE["n_ticks"], SMOKE["T"]
@@ -353,6 +566,7 @@ def run(smoke: bool = False) -> Dict:
         # durability shape, so these rows time the WAL, not the jit cache
         "durability": _durability_sweep(s_kw["n_ticks"], T, n_nodes, kpn,
                                         shape=(2, 2) if smoke else (4, 2)),
+        "tenancy": _tenancy_section(**(TEN_SMOKE if smoke else TEN_CFG)),
     }
 
 
@@ -391,7 +605,24 @@ def _print_durability(dur: Dict) -> None:
 
 
 def main(write_json: bool = True, smoke: bool = False,
-         streaming_only: bool = False, durability_only: bool = False) -> Dict:
+         streaming_only: bool = False, durability_only: bool = False,
+         tenancy_only: bool = False) -> Dict:
+    if tenancy_only:
+        # CI tenancy smoke: the section at smoke size with its JSON kept
+        # under artifacts/ (CI uploads it) and every acceptance gate
+        # enforced, not just recorded
+        ten = _tenancy_section(**TEN_SMOKE, artifacts_dir=TEN_ART_DIR)
+        _print_tenancy(ten)
+        bad_verify = [m for m, r in ten["fairness"].items()
+                      if r["verify_errors"]]
+        bad_verify += [f"fold-{k}" for k in ("off", "on")
+                       if ten["fold"][k]["verify_errors"]]
+        if bad_verify:
+            raise SystemExit(f"tenancy smoke: verify errors in {bad_verify}")
+        failed = [g for g, ok in ten["gates"].items() if not ok]
+        if failed:
+            raise SystemExit(f"tenancy smoke: gates failed: {failed}")
+        return {"tenancy": ten}
     if durability_only:
         # CI durability smoke: the sweep at smoke size with WAL + snapshot
         # directories kept under artifacts/ (CI uploads them) and every
@@ -444,10 +675,12 @@ def main(write_json: bool = True, smoke: bool = False,
           f"evicted_visible={b['evicted_visible']} aborted={b['aborted']}")
     _print_streaming(report["streaming"])
     _print_durability(report["durability"])
+    _print_tenancy(report["tenancy"])
     return report
 
 
 if __name__ == "__main__":
     main(smoke="--smoke" in sys.argv[1:],
          streaming_only="--streaming-only" in sys.argv[1:],
-         durability_only="--durability-only" in sys.argv[1:])
+         durability_only="--durability-only" in sys.argv[1:],
+         tenancy_only="--tenancy-only" in sys.argv[1:])

@@ -302,6 +302,28 @@ def ycsb_txn(rng: np.random.RandomState, host: int, n_nodes: int,
     return op_kind, op_key, op_val
 
 
+def rmw_hot_txn(rng: np.random.RandomState, host: int, n_nodes: int,
+                keys_per_node: int, theta: float = 0.99,
+                n_ops: int = YCSB_O, val_max: int = 8):
+    """One single-op zipfian RMW transaction on ``host``: op slot 0 carries
+    an RMW with a small positive delta on a zipf(``theta``)-ranked key of
+    the host's partition; slots 1.. stay NOP padding.  This is the
+    write-hot regime of DESIGN.md §12.2 — at θ=0.99 the stream piles onto
+    each host's rank-0 key, where unfolded same-key RMWs serialize one
+    commit per wave via lost-update retries and the former's commutative
+    fold turns the pile-up into a single delta-summed row.
+
+    Returns ``(op_kind, op_key, op_val)`` as ``[n_ops]`` int32 arrays."""
+    op_kind = np.zeros(n_ops, np.int32)
+    op_key = np.zeros(n_ops, np.int32)
+    op_val = np.zeros(n_ops, np.int32)
+    cdf = zipf_cdf(keys_per_node, theta)
+    op_kind[0] = RMW
+    op_key[0] = _key(zipf_rank(rng, cdf), host, n_nodes)
+    op_val[0] = rng.randint(1, val_max)
+    return op_kind, op_key, op_val
+
+
 def ycsb_waves(rng: np.random.RandomState, n_waves: int, T: int, n_nodes: int,
                keys_per_node: int, theta: float = 0.9, read_frac: float = 0.8,
                dist_frac: float = 0.1, n_ops: int = YCSB_O,
@@ -420,6 +442,17 @@ def poisson_arrivals(rng: np.random.RandomState, rate: float,
     """Open-system arrivals: i.i.d. ``Poisson(rate)`` new requests per
     scheduler tick (one tick = one wave slot of the closed-loop service)."""
     return rng.poisson(rate, size=n_ticks).astype(np.int64)
+
+
+def tenant_poisson_arrivals(rng: np.random.RandomState, rates,
+                            n_ticks: int) -> np.ndarray:
+    """Multi-tenant open-system arrivals: ``[n_ticks, n_tenants]`` i.i.d.
+    ``Poisson(rates[t])`` new requests per tenant per tick.  Feed the 2-D
+    array straight to ``TxnService.run_stream``/``run_streaming`` with a
+    ``tenant_txn_gen`` — column ``t`` arrives tagged as tenant ``t``
+    (DESIGN.md §12.1)."""
+    rates = np.asarray(rates, np.float64)
+    return rng.poisson(rates, size=(n_ticks, rates.size)).astype(np.int64)
 
 
 def bursty_arrivals(rng: np.random.RandomState, rate: float, n_ticks: int,

@@ -83,6 +83,10 @@ class RecoveredState:
     placement_map: Optional[Any] = None  # PlacementMap after the prefix
     n_records: int = 0           # durable records total (next WAL seq —
                                  # blocks AND moves share one seq space)
+    folded_requests: int = 0     # member requests that rode folded RMW rows
+                                 # in the replayed suffix (DESIGN.md §12.2);
+                                 # 0 for pre-fold logs or snapshot-covered
+                                 # blocks
 
 
 def wal_path(directory: str) -> str:
@@ -126,11 +130,15 @@ def check_config(logged: Dict[str, Any], current: Dict[str, Any]) -> None:
 
 
 def _block_record(seq: int, stacked, wave_idx0: int, wm: Optional[int],
-                  outs_np: WaveOut, clock: int, gc_clock: int) -> Dict:
+                  outs_np: WaveOut, clock: int, gc_clock: int,
+                  fold: Optional[np.ndarray] = None) -> Dict:
     """One retired block as a WAL payload: the full ``run_block`` input
     (replay) + the outcome digest (determinism cross-check) + the GC
-    watermark after retirement (monotonicity audit)."""
-    return {
+    watermark after retirement (monotonicity audit).  ``fold`` ([B, T]
+    request multiplicities, DESIGN.md §12.2) is pure accounting: the
+    folded row IS the executed input, so replay is bit-identical with or
+    without it, and logs from pre-fold services simply lack the key."""
+    rec = {
         "seq": seq, "wave_idx0": int(wave_idx0),
         "wm": None if wm is None else int(wm),
         "op_kind": np.asarray(stacked.op_kind, np.int32),
@@ -143,6 +151,9 @@ def _block_record(seq: int, stacked, wave_idx0: int, wm: Optional[int],
         "c": np.asarray(outs_np.c, np.int32),
         "clock": int(clock), "gc_clock": int(gc_clock),
     }
+    if fold is not None:
+        rec["fold"] = np.asarray(fold, np.int32)
+    return rec
 
 
 def _replay_block(store, rec: Dict, cfg: Dict, clock, mesh, kernels,
@@ -224,6 +235,7 @@ def recover(directory: str, mesh=None, kernels=None,
     history: List[Tuple[np.ndarray, WaveOut]] = []
     evicted = 0
     n_replayed = 0
+    folded = 0
     for rt, rec in scan.records[start:]:
         if rt == wal.REC_MOVE:
             from repro.placement import apply_move, record_from_payload
@@ -250,6 +262,10 @@ def recover(directory: str, mesh=None, kernels=None,
         wave_idx = rec["wave_idx0"] + B - 1
         gc_clock = rec["gc_clock"]
         next_tid = max(next_tid, int(rec["tid"].max()) + 1)
+        if rec.get("fold") is not None:
+            # members beyond the leader per row (rows with multiplicity 0
+            # are NOP padding, clip keeps them out of the count)
+            folded += int(np.clip(rec["fold"] - 1, 0, None).sum())
 
     base_store = None if snap is None else snap.store
     if base_store is not None and snap_perm is not None:
@@ -264,7 +280,8 @@ def recover(directory: str, mesh=None, kernels=None,
         n_replayed=n_replayed,
         snapshot_seq=None if snap is None else snap.snap_id,
         torn_bytes=scan.torn_bytes, config=cfg,
-        placement_map=pm, n_records=len(scan.records))
+        placement_map=pm, n_records=len(scan.records),
+        folded_requests=folded)
 
 
 class DurabilityManager:
@@ -335,11 +352,14 @@ class DurabilityManager:
 
     # ---------------------------------------------------------------- log
     def log_block(self, stacked, wave_idx0: int, wm: Optional[int],
-                  outs_np: WaveOut, clock: int, gc_clock: int) -> None:
+                  outs_np: WaveOut, clock: int, gc_clock: int,
+                  fold: Optional[np.ndarray] = None) -> None:
         """Append one retired block — called after the host sync, BEFORE
-        outcomes are routed (acked) to clients."""
+        outcomes are routed (acked) to clients.  ``fold`` carries the
+        per-row request multiplicities when the former batched same-key
+        RMWs into this block (DESIGN.md §12.2)."""
         rec = _block_record(self.seq, stacked, wave_idx0, wm, outs_np,
-                            clock, gc_clock)
+                            clock, gc_clock, fold=fold)
         self.writer.append(wal.REC_BLOCK, rec)
         self.seq += 1
         self._since_snap += 1

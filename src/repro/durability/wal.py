@@ -31,7 +31,12 @@ the honest model of losing the page cache.
 
 Payloads are pickled dicts of numpy arrays + scalars; the CRC is computed
 over the payload bytes, so bit-rot anywhere in a record is detected at
-scan time, not deep inside replay.
+scan time, not deep inside replay.  Dict payloads make record schemas
+forward-extensible: a block record logged by a folding former
+(DESIGN.md §12.2) carries an extra ``fold`` array of per-row request
+multiplicities, which old readers ignore and new readers ``.get`` —
+replay itself never consults it, because the delta-summed folded row IS
+the executed input and replays bit-identically.
 """
 from __future__ import annotations
 

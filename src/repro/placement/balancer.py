@@ -41,20 +41,32 @@ class LoadBalancer:
         """Fold one retired wave's outcomes into the counters.
 
         op_key/active: [T, O]; committed: [T] bool; owner: [n_keys] int.
-        Only committed transactions' active ops count — aborts are charged
-        to the owning node's abort counter instead (abort pressure is a
-        hot-shard symptom too, but moving keys on abort noise thrashes).
+        Per-key traffic (``key_ops``, what ``plan`` splits on) counts every
+        committed transaction's active ops; the per-node occupancy counters
+        (``node_commits``/``node_aborts``) count each transaction ONCE,
+        charged to the owner of its first active key — committed-TXN
+        occupancy, the same statistic DESIGN §11 and the service's
+        ``_observe_placement`` report (counting per op skews the balancer
+        toward wide-footprint ranges).  Aborts feed the abort counter only
+        (abort pressure is a hot-shard symptom too, but moving keys on
+        abort noise thrashes).
         """
         op_key = np.asarray(op_key)
-        mask = np.asarray(active, bool) & np.asarray(committed, bool)[:, None]
+        active = np.asarray(active, bool)
+        committed = np.asarray(committed, bool)
+        mask = active & committed[:, None]
         keys = op_key[mask]
         keys = keys[(keys >= 0) & (keys < self.n_keys)]
         np.add.at(self.key_ops, keys, 1.0)
-        np.add.at(self.node_commits, owner[keys], 1)
-        a_keys = op_key[np.asarray(active, bool)
-                        & ~np.asarray(committed, bool)[:, None]]
-        a_keys = a_keys[(a_keys >= 0) & (a_keys < self.n_keys)]
-        np.add.at(self.node_aborts, owner[a_keys], 1)
+        T = op_key.shape[0]
+        touched = active.any(axis=1)
+        first = np.argmax(active, axis=1)
+        fk = op_key[np.arange(T), first]
+        in_range = (fk >= 0) & (fk < self.n_keys)
+        np.add.at(self.node_commits,
+                  owner[fk[committed & touched & in_range]], 1)
+        np.add.at(self.node_aborts,
+                  owner[fk[~committed & touched & in_range]], 1)
 
     def end_block(self) -> bool:
         """Advance the block counter; True when a planning round is due."""
@@ -91,8 +103,13 @@ class LoadBalancer:
             if mean <= 0 or load.max() / mean < self.trigger:
                 break
             hot = int(load.argmax())
-            cold = int(load.argmin())
-            if hot == cold or free[cold] == 0:
+            # coldest node WITH free slots: the globally coldest node being
+            # full must not end the round while a cooler-than-hot node still
+            # has headroom (the fullest-cluster case is exactly when hot
+            # ranges most need to move)
+            cold = next((int(n) for n in np.argsort(load, kind="stable")
+                         if int(n) != hot and free[int(n)] > 0), None)
+            if cold is None or load[cold] >= load[hot]:
                 break
             split = self._split(owner, hot, cold, load, free[cold])
             if split is None:

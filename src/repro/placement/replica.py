@@ -61,8 +61,12 @@ class HotKeyReplicas:
         if not active.any() or (kinds[active] != READ).any():
             return False
         ka = keys[active]
-        return bool(((ka < self._member.size) & self._member[
-            np.minimum(ka, self._member.size - 1)]).all())
+        # clamp BOTH ends before indexing: a negative (padding/adversarial)
+        # key would wrap via Python negative indexing into ``_member`` and
+        # could report false membership, serving a garbage snapshot
+        ok = (ka >= 0) & (ka < self._member.size)
+        return bool((ok & self._member[
+            np.clip(ka, 0, self._member.size - 1)]).all())
 
     def serve(self, op_kind: np.ndarray, op_key: np.ndarray):
         """Answer a read-only txn from the replica snapshot.  Returns

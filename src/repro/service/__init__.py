@@ -8,15 +8,16 @@ the **visibility-based GC watermark** (decentralized min over live readers'
 streaming plane** (K-blocks-in-flight fused dispatch with bounded-AIMD
 contention-adaptive wave sizing).
 """
-from .former import TxnRequest, WaveFormer
+from .former import TxnRequest, WaveFormer, fold_counts
 from .gc import VisibilityGC, seq_watermark
 from .retry import RetryPolicy
-from .service import (ServiceReport, TxnService, smallbank_txn_gen,
-                      ycsb_txn_gen)
+from .service import (ServiceReport, TxnService, rmw_txn_gen,
+                      smallbank_txn_gen, tenant_txn_gen, ycsb_txn_gen)
 from .stream import AdaptiveWaveSizer, StreamingDriver
 
 __all__ = [
     "TxnRequest", "WaveFormer", "VisibilityGC", "RetryPolicy",
     "ServiceReport", "TxnService", "seq_watermark", "smallbank_txn_gen",
-    "ycsb_txn_gen", "AdaptiveWaveSizer", "StreamingDriver",
+    "ycsb_txn_gen", "rmw_txn_gen", "tenant_txn_gen", "fold_counts",
+    "AdaptiveWaveSizer", "StreamingDriver",
 ]

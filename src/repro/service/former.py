@@ -1,14 +1,30 @@
-"""Open-stream wave former (DESIGN.md §8).
+"""Open-stream wave former (DESIGN.md §8, §12).
 
 The fused engine consumes fixed-shape ``[T, O]`` waves; an open system
 produces a ragged request stream.  The wave former is the adapter: it holds
-a bounded ready queue (admission control — a request arriving to a full
-queue is **rejected**, the load-shedding answer an open system must give),
-a retry calendar ordered by earliest-eligible tick, and packs up to ``T``
-transactions per tick into a wave, padding the tail with NOP rows so the
-jitted engine never recompiles.  Due retries are packed **before** fresh
-arrivals: a transaction that already burned scheduler work has priority
-over new load (no starvation under saturation).
+bounded *per-tenant* ready queues (admission control — a request arriving
+to its tenant's full queue is **rejected**, the load-shedding answer an
+open system must give), per-tenant retry calendars ordered by
+earliest-eligible tick, and packs up to ``T`` transactions per tick into a
+wave, padding the tail with NOP rows so the jitted engine never recompiles.
+
+Fairness (DESIGN.md §12.1): slots are granted by deficit round-robin over
+weighted tenant quotas.  Each forming pass deals every backlogged tenant a
+quantum ``T * w_i / sum(w)``; a tenant spends whole-slot deficits in
+round-robin order, and leftover capacity is filled work-conservingly from
+any backlogged tenant (uncharged).  Due retries are packed **before**
+fresh arrivals *within* a tenant — a transaction that already burned
+scheduler work has priority over new load — but a tenant's retries can
+never overdraw another tenant's quota.  With a single (default) tenant the
+whole mechanism degenerates to the original global retries-first FIFO.
+
+Write-hot mitigation (DESIGN.md §12.2): when ``fold_rmw`` is on, requests
+whose single active op is an RMW on the same (tenant, host, key) are
+*folded* into one wave row carrying the summed delta — the engine's RMW is
+``val_new = r_val + op_val`` (commutative, associative), so one folded row
+commits the same final value the members would reach serially via
+lost-update retries.  Members ride free (no slot, no deficit charge) and
+fan back out on retire with the leader's outcome.
 
 TIDs are a contiguous ``arange`` per wave — the engine's commit phase maps
 newest-version creators to wave-local slots by ``tid - tid[0]``
@@ -20,13 +36,13 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from collections import deque
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 from dataclasses import field
 
 import numpy as np
 
 from repro.core.engine import Wave
-from repro.core.commit_phase import NOP
+from repro.core.commit_phase import NOP, RMW
 
 
 @dataclasses.dataclass
@@ -48,6 +64,10 @@ class TxnRequest:
     replica: bool = False        # served from a hot-key read replica
                                  # (s == c == replica floor, never entered
                                  # the engine)
+    tenant: int = 0              # admission/fairness class (DESIGN.md §12)
+    folded: List["TxnRequest"] = field(default_factory=list)
+                                 # same-key RMW members riding this leader's
+                                 # wave row; empty unless fold_rmw packed it
 
     @property
     def latency(self) -> int:
@@ -58,49 +78,162 @@ class TxnRequest:
         return self.commit_tick - self.arrive_tick + 1
 
 
+def fold_counts(slots: List["TxnRequest"], T: int) -> np.ndarray:
+    """[T] int32 request multiplicity per wave row: 1 + folded members for
+    occupied rows, 0 for NOP padding.  Logged alongside each WAL block so
+    recovery can account fan-out without re-deriving fold groups; replay
+    itself is untouched — the folded row IS what executed."""
+    fold = np.zeros(T, np.int32)
+    for i, req in enumerate(slots):
+        fold[i] = 1 + len(req.folded)
+    return fold
+
+
+class _TenantQueue:
+    """One tenant's admission queue + retry calendar + DRR deficit."""
+
+    __slots__ = ("weight", "max_queue", "ready", "retry", "deficit",
+                 "admitted", "rejected", "_seq")
+
+    def __init__(self, weight: float, max_queue: int):
+        self.weight = float(weight)
+        self.max_queue = int(max_queue)
+        self.ready: deque = deque()       # admitted, eligible now (FIFO)
+        self.retry: list = []             # heap: (eligible_tick, seq, req)
+        self.deficit = 0.0
+        self.admitted = 0
+        self.rejected = 0
+        self._seq = 0
+
+    def due(self, tick: int) -> bool:
+        return bool(self.ready) or bool(self.retry
+                                        and self.retry[0][0] <= tick)
+
+    def pop(self, tick: int) -> TxnRequest:
+        """Next eligible request: due retries before fresh arrivals."""
+        if self.retry and self.retry[0][0] <= tick:
+            return heapq.heappop(self.retry)[2]
+        return self.ready.popleft()
+
+    def push_retry(self, req: TxnRequest, eligible_tick: int) -> None:
+        self._seq += 1
+        heapq.heappush(self.retry, (eligible_tick, self._seq, req))
+
+    def backlog(self, tick: int) -> int:
+        return len(self.ready) + sum(1 for t, _, _ in self.retry if t <= tick)
+
+    def pending(self) -> int:
+        return len(self.ready) + len(self.retry)
+
+
 class WaveFormer:
-    """Admission control + retry calendar + fixed-shape wave packing."""
+    """Admission control + retry calendars + fixed-shape wave packing,
+    multiplexed over weighted tenants (deficit round-robin)."""
 
     def __init__(self, T: int, O: int, max_queue: Optional[int] = None,
-                 next_tid: int = 1):
+                 next_tid: int = 1,
+                 tenants: Optional[Dict[int, float]] = None,
+                 fold_rmw: bool = False, fold_max: int = 256):
         self.T, self.O = T, O
         self.max_queue = 4 * T if max_queue is None else max_queue
         self.next_tid = next_tid
-        self.ready: deque = deque()          # admitted, eligible now (FIFO)
-        self._retry: list = []               # heap: (eligible_tick, seq, req)
-        self._seq = 0
-        self.rejected = 0
-        self.admitted = 0
+        self.fold_rmw = bool(fold_rmw)
+        self.fold_max = int(fold_max)     # max requests per folded row
+        self.fold_groups = 0              # wave rows that carried a fold
+        self.folded_requests = 0          # member requests that rode free
+        self._tenants: Dict[int, _TenantQueue] = {}
+        self._order: List[int] = []       # round-robin rotation of tenant ids
+        self._rr = 0                      # rotation cursor (advances per form)
+        if tenants:
+            for t, w in tenants.items():
+                self._register(int(t), float(w))
+
+    # --------------------------------------------------------- tenants
+    def _register(self, tenant: int, weight: float = 1.0) -> _TenantQueue:
+        q = _TenantQueue(weight, self.max_queue)
+        self._tenants[tenant] = q
+        self._order.append(tenant)
+        return q
+
+    def _queue_of(self, tenant: int) -> _TenantQueue:
+        q = self._tenants.get(tenant)
+        if q is None:                     # unknown tenants join at weight 1
+            q = self._register(tenant)
+        return q
+
+    def tenant_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-tenant admission counters for ServiceReport."""
+        return {t: {"weight": q.weight, "admitted": q.admitted,
+                    "rejected": q.rejected, "pending": q.pending()}
+                for t, q in sorted(self._tenants.items())}
+
+    # aggregating views keep the single-tenant API of the original former
+    @property
+    def admitted(self) -> int:
+        return sum(q.admitted for q in self._tenants.values())
+
+    @property
+    def rejected(self) -> int:
+        return sum(q.rejected for q in self._tenants.values())
 
     # --------------------------------------------------------- admission
     def offer(self, req: TxnRequest, tick: int) -> bool:
-        """Admit a fresh arrival, or shed it when the queue is full."""
+        """Admit a fresh arrival, or shed it when its tenant's queue is
+        full.  Admission is judged per tenant: one tenant flooding its
+        bounded queue cannot evict or block another tenant's arrivals."""
         assert req.op_kind.shape == (self.O,), (req.op_kind.shape, self.O)
-        if len(self.ready) >= self.max_queue:
+        q = self._queue_of(req.tenant)
+        if len(q.ready) >= q.max_queue:
             req.status = "rejected"
-            self.rejected += 1
+            q.rejected += 1
             return False
         req.status = "queued"
         req.arrive_tick = tick
-        self.admitted += 1
-        self.ready.append(req)
+        q.admitted += 1
+        q.ready.append(req)
         return True
 
     def requeue(self, req: TxnRequest, eligible_tick: int) -> None:
-        """Put an aborted transaction on the retry calendar (no admission
-        check — it already holds a slot in the system)."""
+        """Put an aborted transaction on its tenant's retry calendar (no
+        admission check — it already holds a slot in the system)."""
         req.status = "queued"
-        self._seq += 1
-        heapq.heappush(self._retry, (eligible_tick, self._seq, req))
+        self._queue_of(req.tenant).push_retry(req, eligible_tick)
 
     # ----------------------------------------------------------- packing
     def backlog(self, tick: int) -> int:
         """Transactions eligible to run at ``tick`` (ready + due retries)."""
-        return len(self.ready) + sum(1 for t, _, _ in self._retry if t <= tick)
+        return sum(q.backlog(tick) for q in self._tenants.values())
 
     def pending(self) -> int:
         """All transactions still inside the former, due or not."""
-        return len(self.ready) + len(self._retry)
+        return sum(q.pending() for q in self._tenants.values())
+
+    def _fold_slot(self, req: TxnRequest) -> Optional[int]:
+        """Op index if ``req`` is foldable (exactly one active op, an RMW);
+        None otherwise."""
+        active = req.op_kind != NOP
+        n = int(active.sum())
+        if n != 1:
+            return None
+        o = int(np.argmax(active))
+        return o if int(req.op_kind[o]) == RMW else None
+
+    def _pack(self, req: TxnRequest, slots: List[TxnRequest],
+              folds: Dict[Tuple[int, int, int], int]) -> bool:
+        """Place ``req``: either fold it onto an existing leader (returns
+        False — no slot consumed) or append it as a new row (True)."""
+        if self.fold_rmw:
+            o = self._fold_slot(req)
+            if o is not None:
+                gk = (req.tenant, int(req.host), int(req.op_key[o]))
+                li = folds.get(gk)
+                if li is not None and len(slots[li].folded) + 1 < self.fold_max:
+                    slots[li].folded.append(req)
+                    return False
+                folds[gk] = len(slots)    # this row becomes the leader
+        req.folded = []
+        slots.append(req)
+        return True
 
     def form(self, tick: int,
              T: Optional[int] = None) -> Optional[Tuple[Wave, List[TxnRequest]]]:
@@ -108,17 +241,60 @@ class WaveFormer:
 
         Returns ``(wave, slots)``: ``slots[i]`` is the request in wave row
         ``i`` (the NOP padding rows have no request and always commit
-        vacuously — the service skips them when reading outcomes).
+        vacuously — the service skips them when reading outcomes).  When
+        folding is on, ``slots[i].folded`` lists member requests riding
+        that row; the service fans the row outcome out to them on retire.
 
         ``T`` overrides the wave size for this call — the contention-adaptive
         streaming driver resizes waves on a bounded ladder (DESIGN.md §8);
-        every distinct T is a distinct jitted engine shape."""
+        every distinct T is a distinct jitted engine shape.
+
+        Slot grant is deficit round-robin: backlogged tenants split ``T``
+        by weight (deficits bank across calls, capped at one wave), then a
+        work-conserving pass fills leftover rows from any backlog."""
         T = self.T if T is None else T
+        order = self._order
+        if not order:
+            return None
+        n = len(order)
+        rr = self._rr % n
+        rotation = [order[(rr + j) % n] for j in range(n)]
+        active = [t for t in rotation if self._tenants[t].due(tick)]
+        if not active:
+            return None
+        self._rr += 1
+
+        # deal quanta: backlogged tenants share T by weight; idle tenants
+        # forfeit their deficit (classic DRR — no banking while idle)
+        w_sum = sum(self._tenants[t].weight for t in active) or 1.0
+        for t in order:
+            q = self._tenants[t]
+            if q.due(tick):
+                q.deficit = min(q.deficit + T * q.weight / w_sum, float(T))
+            else:
+                q.deficit = 0.0
+
         slots: List[TxnRequest] = []
-        while len(slots) < T and self._retry and self._retry[0][0] <= tick:
-            slots.append(heapq.heappop(self._retry)[2])
-        while len(slots) < T and self.ready:
-            slots.append(self.ready.popleft())
+        folds: Dict[Tuple[int, int, int], int] = {}
+        # quota pass: spend whole-slot deficits in round-robin order
+        for t in active:
+            q = self._tenants[t]
+            while len(slots) < T and q.deficit >= 1.0 and q.due(tick):
+                if self._pack(q.pop(tick), slots, folds):
+                    q.deficit -= 1.0
+        # work-conserving pass: leftover rows go to any backlog, round-robin
+        # one request at a time, uncharged (spare capacity is nobody's quota)
+        while len(slots) < T:
+            served = False
+            for t in active:
+                if len(slots) >= T:
+                    break
+                q = self._tenants[t]
+                if q.due(tick):
+                    self._pack(q.pop(tick), slots, folds)
+                    served = True
+            if not served:
+                break
         if not slots:
             return None
 
@@ -134,10 +310,17 @@ class WaveFormer:
             op_key[i] = req.op_key
             op_val[i] = req.op_val
             host[i] = req.host
-            req.tid = tid0 + i
-            req.tids.append(req.tid)
-            req.attempts += 1
-            req.status = "inflight"
+            if req.folded:
+                o = self._fold_slot(req)
+                delta = sum(int(m.op_val[o]) for m in req.folded)
+                op_val[i, o] = np.int32(int(req.op_val[o]) + delta)
+                self.fold_groups += 1
+                self.folded_requests += len(req.folded)
+            for r in (req, *req.folded):
+                r.tid = tid0 + i
+                r.tids.append(r.tid)
+                r.attempts += 1
+                r.status = "inflight"
         # numpy leaves on purpose: the wave crosses to the device exactly
         # once — at the jit boundary of the step dispatch, or in one
         # [B,T,O] block transfer by the streaming driver's stacker; eager

@@ -39,7 +39,7 @@ from repro.core.workloads import SMALLBANK_O, smallbank_txn, ycsb_txn
 from repro.placement import (HotKeyReplicas, LoadBalancer, apply_move,
                              logical_store, physical_store)
 
-from .former import TxnRequest, WaveFormer
+from .former import TxnRequest, WaveFormer, fold_counts
 from .gc import VisibilityGC
 from .retry import RetryPolicy
 
@@ -84,6 +84,10 @@ class ServiceReport:
     moved_keys: int = 0          # keys relocated across all moves
     imbalance: float = 0.0       # max/mean per-node committed-txn occupancy
     occupancy: List[int] = dataclasses.field(default_factory=list)
+    # tenancy + write-hot mitigation plane (DESIGN.md §12)
+    tenants: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    fold_groups: int = 0         # wave rows that carried a same-key RMW fold
+    folded_requests: int = 0     # member requests that rode those rows free
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -109,7 +113,9 @@ class TxnService:
                  host_skew: Optional[np.ndarray] = None, seed: int = 0,
                  mesh=None, kernels=None, durability=None, faults=None,
                  planner=None, placement=None, replicas=None, balancer=None,
-                 replica_refresh: int = 1):
+                 replica_refresh: int = 1,
+                 tenants: Optional[Dict[int, float]] = None,
+                 fold_rmw: bool = False, fold_max: int = 256):
         from repro.core.substrate import mesh_kernels
         from repro.kernels import resolve
         from repro.planner import HybridSwitch
@@ -162,7 +168,12 @@ class TxnService:
         self._occupancy = (np.zeros(placement.n_nodes, np.int64)
                           if placement is not None else None)
         self.clock = jnp.int32(1)
-        self.former = WaveFormer(T, O, max_queue=max_queue)
+        # tenancy + write-hot mitigation plane (DESIGN.md §12): weighted
+        # per-tenant admission queues with DRR wave packing, and optional
+        # same-key commutative-RMW folding at form time
+        self.former = WaveFormer(T, O, max_queue=max_queue, tenants=tenants,
+                                 fold_rmw=fold_rmw, fold_max=fold_max)
+        self._tenant_stats: Dict[int, Dict] = {}
         self.retry = retry or RetryPolicy()
         self.gc = VisibilityGC(
             block=gc_block,
@@ -207,14 +218,26 @@ class TxnService:
             self._refresh_replicas()
 
     # ------------------------------------------------------------ intake
+    def _tstat(self, tenant: int) -> Dict:
+        st = self._tenant_stats.get(tenant)
+        if st is None:
+            st = {"offered": 0, "committed": 0, "dropped": 0, "retries": 0,
+                  "latencies": []}
+            self._tenant_stats[tenant] = st
+        return st
+
     def submit(self, op_kind: np.ndarray, op_key: np.ndarray,
-               op_val: np.ndarray, host: int) -> TxnRequest:
+               op_val: np.ndarray, host: int, tenant: int = 0) -> TxnRequest:
         """Offer one transaction to admission control; the returned request
-        carries its fate (``rejected`` immediately, else async)."""
+        carries its fate (``rejected`` immediately, else async).  ``tenant``
+        selects the admission/fairness class (DESIGN.md §12) — untagged
+        submits share the default tenant 0."""
         req = TxnRequest(next(self._req_ids), np.asarray(op_kind, np.int32),
                          np.asarray(op_key, np.int32),
-                         np.asarray(op_val, np.int32), int(host))
+                         np.asarray(op_val, np.int32), int(host),
+                         tenant=int(tenant))
         self.requests.append(req)
+        self._tstat(req.tenant)["offered"] += 1
         if (self.replicas is not None
                 and self.replicas.can_serve(req.op_kind, req.op_key)):
             # visibility-cheap replica read (DESIGN.md §11.3): a read-only
@@ -232,6 +255,9 @@ class TxnService:
             self.committed += 1
             self.replica_commits += 1
             self.latencies.append(req.latency)
+            st = self._tstat(req.tenant)
+            st["committed"] += 1
+            st["latencies"].append(req.latency)
             self.gc.observe_replica(
                 floor, n_reads=int((req.op_kind != NOP).sum()))
             return req
@@ -273,7 +299,9 @@ class TxnService:
                        for f in Wave._fields)),
                 self.wave_idx, wm, WaveOut(*(np.asarray(x)[None]
                                              for x in out)),
-                int(self.clock), self.gc.clock)
+                int(self.clock), self.gc.clock,
+                fold=fold_counts(slots,
+                                 np.asarray(wave.op_kind).shape[0])[None])
             if self.faults is not None:
                 self.faults.post_log(self)
         self._route(out, slots)
@@ -327,8 +355,9 @@ class TxnService:
             if self.faults is not None:
                 self.faults.post_log(self)
         for i, req in enumerate(slots):
-            req.tid = int(pw.exec_tid[i])
-            req.tids[-1] = req.tid
+            for r in (req, *req.folded):
+                r.tid = int(pw.exec_tid[i])
+                r.tids[-1] = r.tid
         self._route(out, slots)
         self._observe_placement(wave, out, slots)
         self.planner.observe_planned(
@@ -341,23 +370,38 @@ class TxnService:
         """Route one synced wave's per-txn outcomes: commits record latency,
         aborts re-enter the retry calendar or drop.  Shared by the per-wave
         step loop and the streaming driver's block retirement (which calls
-        it once per wave of a retired block)."""
-        self.executions += len(slots)
+        it once per wave of a retired block).
+
+        A folded row (DESIGN.md §12.2) fans its outcome out to every member
+        request exactly once: on commit all members commit with the row's
+        (s, c) — the summed delta IS their serial net effect — and on abort
+        each member re-enters the retry calendar individually (it may fold
+        into a different group next wave)."""
         for i, req in enumerate(slots):
+            group = (req, *req.folded)
+            req.folded = []
+            self.executions += len(group)
             if out.status[i] == COMMITTED:
-                req.status = "committed"
-                req.commit_tick = self.tick
-                req.s, req.c = int(out.s[i]), int(out.c[i])
-                self.committed += 1
-                self.latencies.append(req.latency)
+                for r in group:
+                    r.status = "committed"
+                    r.commit_tick = self.tick
+                    r.s, r.c = int(out.s[i]), int(out.c[i])
+                    self.committed += 1
+                    self.latencies.append(r.latency)
+                    st = self._tstat(r.tenant)
+                    st["committed"] += 1
+                    st["latencies"].append(r.latency)
             else:
-                delay = self.retry.next_delay(req.attempts, self.rng)
-                if delay is None:
-                    req.status = "dropped"
-                    self.dropped += 1
-                else:
-                    self.retries += 1
-                    self.former.requeue(req, self.tick + delay)
+                for r in group:
+                    delay = self.retry.next_delay(r.attempts, self.rng)
+                    if delay is None:
+                        r.status = "dropped"
+                        self.dropped += 1
+                        self._tstat(r.tenant)["dropped"] += 1
+                    else:
+                        self.retries += 1
+                        self._tstat(r.tenant)["retries"] += 1
+                        self.former.requeue(r, self.tick + delay)
 
     def _watermark(self):
         """The GC watermark for the next dispatch.  Single-device: the
@@ -500,14 +544,30 @@ class TxnService:
             n += 1
         return n
 
-    def run_stream(self, arrivals: Iterable[int],
-                   txn_gen: Callable[[], tuple], drain: bool = True):
+    def _submit_tick(self, n_arr, txn_gen):
+        """Submit one tick's arrivals.  Scalar ``n_arr``: that many calls of
+        ``txn_gen()`` (4-tuples, default tenant).  1-D ``n_arr`` of length
+        n_tenants: per-tenant counts, each from ``txn_gen(tenant)`` which
+        must return a 5-tuple ending in the tenant tag (see
+        ``tenant_txn_gen``)."""
+        arr = np.asarray(n_arr)
+        if arr.ndim == 0:
+            for _ in range(int(arr)):
+                self.submit(*txn_gen())
+        else:
+            for tenant, cnt in enumerate(arr):
+                for _ in range(int(cnt)):
+                    self.submit(*txn_gen(tenant))
+
+    def run_stream(self, arrivals: Iterable,
+                   txn_gen: Callable, drain: bool = True):
         """Feed ``arrivals[t]`` fresh requests per tick (from ``txn_gen``,
         which returns ``(op_kind, op_key, op_val, host)``), stepping once
-        per tick; optionally drain the backlog afterwards."""
+        per tick; optionally drain the backlog afterwards.  A 2-D arrivals
+        array ``[n_ticks, n_tenants]`` feeds a multi-tenant stream: column
+        ``t`` arrives via ``txn_gen(t)`` (see ``tenant_txn_gen``)."""
         for n_arr in arrivals:
-            for _ in range(int(n_arr)):
-                self.submit(*txn_gen())
+            self._submit_tick(n_arr, txn_gen)
             self.step()
         if drain:
             self.drain()
@@ -537,8 +597,7 @@ class TxnService:
         driver = StreamingDriver(self, B=B, K=K, sizer=sizer)
         self.stream = driver                 # expose pipeline state/stats
         for n_arr in arrivals:
-            for _ in range(int(n_arr)):
-                self.submit(*txn_gen())
+            self._submit_tick(n_arr, txn_gen)
             driver.tick()
         if drain:
             driver.drain()
@@ -584,7 +643,34 @@ class TxnService:
             imbalance=self._imbalance(),
             occupancy=([] if self._occupancy is None
                        else self._occupancy.tolist()),
+            tenants=self._tenant_report(),
+            fold_groups=self.former.fold_groups,
+            folded_requests=self.former.folded_requests,
         )
+
+    def _tenant_report(self) -> Dict[str, Dict]:
+        """Per-tenant rows (keys stringified for JSON): admission counters
+        from the former joined with the service-side outcome/latency
+        accounting.  Single-tenant runs report one row for tenant \"0\"."""
+        former_stats = self.former.tenant_stats()
+        rows: Dict[str, Dict] = {}
+        for t in sorted(set(former_stats) | set(self._tenant_stats)):
+            fs = former_stats.get(t, {})
+            st = self._tenant_stats.get(t, {})
+            lat = st.get("latencies", [])
+            rows[str(t)] = {
+                "weight": float(fs.get("weight", 1.0)),
+                "offered": int(st.get("offered", 0)),
+                "admitted": int(fs.get("admitted", 0)),
+                "rejected": int(fs.get("rejected", 0)),
+                "committed": int(st.get("committed", 0)),
+                "dropped": int(st.get("dropped", 0)),
+                "retries": int(st.get("retries", 0)),
+                "latency_p50": _pct(lat, 50),
+                "latency_p95": _pct(lat, 95),
+                "latency_p99": _pct(lat, 99),
+            }
+        return rows
 
     def _imbalance(self) -> float:
         """Max/mean per-node committed-txn occupancy under the current
@@ -637,4 +723,32 @@ def ycsb_txn_gen(rng: np.random.RandomState, n_nodes: int,
             rng, host, n_nodes, keys_per_node, theta, read_frac, dist_frac,
             n_ops)
         return op_kind, op_key, op_val, host
+    return gen
+
+
+def rmw_txn_gen(rng: np.random.RandomState, n_nodes: int,
+                keys_per_node: int, theta: float = 0.99, n_ops: int = 4,
+                val_max: int = 8):
+    """Request factory for the write-hot regime the fold plane targets
+    (DESIGN.md §12.2): every transaction is a SINGLE zipfian RMW (op slot 0
+    active, the rest NOP padding) with a small positive delta — θ=0.99
+    concentrates the stream on each host's rank-0 key, the workload where
+    unfolded same-key RMWs serialize via lost-update retries."""
+    from repro.core.workloads import rmw_hot_txn
+
+    def gen():
+        host = int(rng.randint(0, n_nodes))
+        op_kind, op_key, op_val = rmw_hot_txn(
+            rng, host, n_nodes, keys_per_node, theta, n_ops, val_max)
+        return op_kind, op_key, op_val, host
+    return gen
+
+
+def tenant_txn_gen(gens):
+    """Compose per-tenant request factories for 2-D ``run_stream``
+    arrivals: ``gens[t]()`` returns ``(op_kind, op_key, op_val, host)``;
+    the returned ``gen(tenant)`` appends the tenant tag that
+    ``TxnService.submit`` consumes."""
+    def gen(tenant: int):
+        return (*gens[tenant](), tenant)
     return gen

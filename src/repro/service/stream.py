@@ -60,6 +60,8 @@ import numpy as np
 
 from repro.core import ABORTED, Wave, WaveOut
 
+from .former import fold_counts
+
 
 def _stack_np(waves: List[Wave]) -> Wave:
     """Stack numpy-leaved formed waves into one [B, T, O] block on the
@@ -316,9 +318,14 @@ class StreamingDriver:
             per_wave.append((out_j, slots))
         if svc.durability is not None:
             # retire point = durability boundary (DESIGN.md §9): one record
-            # per retired block, appended before any outcome is acked
+            # per retired block, appended before any outcome is acked; the
+            # fold multiplicities (DESIGN.md §12.2) ride along so recovery
+            # accounts fan-out — computed here, before _route clears them
+            T = blk.stacked.op_kind.shape[1]
+            fold = np.stack([fold_counts(slots, T)
+                             for _, slots in blk.waves])
             svc.durability.log_block(blk.stacked, blk.wave_idx0, blk.wm,
-                                     outs, clock, svc.gc.clock)
+                                     outs, clock, svc.gc.clock, fold=fold)
             if svc.faults is not None:
                 svc.faults.post_log(svc)   # kill: durable-but-unacked window
         for out_j, slots in per_wave:

@@ -333,3 +333,102 @@ def test_move_recovery_replay(tmp_path, snapshot_every):
                       durability=DurabilityManager(d, fsync_every=1))
     np.testing.assert_array_equal(svc2.placement.slot, svc.placement.slot)
     assert svc2.verify() == [], svc2.verify()
+
+
+# --------------------------------------------- submit-path correctness sweep
+# (PR 10 satellite regressions: each of these fails on the pre-fix code)
+
+def test_replica_negative_key_never_serves():
+    """Regression: ``can_serve`` must clamp keys from BELOW too.  Pre-fix
+    it only clamped from above, so a negative key wrapped via Python
+    negative indexing into the dense ``_member`` table — for the set
+    {1,2,3} the table's last row (key 3) is True, so key -1 reported
+    replicated and would have served a garbage snapshot at submit."""
+    from repro.core.commit_phase import NOP, READ
+    rep = HotKeyReplicas([1, 2, 3])
+    rep.floor = 0
+    assert not rep.can_serve(np.array([READ]), np.array([-1]))
+    assert not rep.can_serve(np.array([READ, READ]), np.array([1, -1]))
+    assert not rep.can_serve(np.array([READ]),
+                             np.array([-rep._member.size]))
+    # a negative key in a NOP (padding) slot is inactive and stays servable
+    assert rep.can_serve(np.array([READ, NOP]), np.array([2, -1]))
+
+
+@pytest.mark.parametrize("kernels", ["jnp", "jnp+fused", "pallas_interpret",
+                                     "pallas_interpret+fused"])
+def test_replica_negative_key_regression_all_kernels(kernels):
+    """The negative-key submit rides the full service path under every
+    kernel config: it must route to the engine (never the replica
+    fast-path) and the session must stay verifiable."""
+    from repro.core.commit_phase import NOP, READ
+    from repro.service import TxnService
+    hot = zipf_hot_keys(N_NODES, N_KEYS // N_NODES, theta=0.99)
+    # the wrap target (the dense table's last row) IS a replicated key,
+    # so the pre-fix membership lookup reports True for key -1
+    svc = TxnService(n_keys=N_KEYS, n_versions=V, T=8, O=4, sched="postsi",
+                     n_nodes=N_NODES, replicas=hot, kernels=kernels)
+    kind = np.array([READ, READ, NOP, NOP], np.int32)
+    key = np.array([int(hot[0]), -1, 0, 0], np.int32)
+    req = svc.submit(kind, key, np.zeros(4, np.int32), 0)
+    assert not req.replica, "negative key served from the replica table"
+    assert req.status == "queued"
+    # a well-formed replicated read on the same service still fast-paths
+    ok = svc.submit(np.array([READ, NOP, NOP, NOP], np.int32),
+                    np.array([int(hot[0]), 0, 0, 0], np.int32),
+                    np.zeros(4, np.int32), 0)
+    assert ok.replica
+
+
+def test_balancer_plan_falls_through_full_coldest():
+    """Regression: when the globally coldest node has zero free slots the
+    planner must fall through to the coldest node WITH capacity instead of
+    ending the round — hot ranges stayed pinned exactly when the cluster
+    was fullest."""
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=2)
+    # fill node 1 to capacity (its own 16 keys + node 2's block = 32 slots)
+    pm.apply_record(pm.move(32, 48, 1))
+    assert pm.free_slots(1) == 0
+    assert pm.free_slots(2) == pm.capacity
+    lb = LoadBalancer(N_KEYS, N_NODES, every=1, trigger=1.25, max_moves=2)
+    lb.key_ops = np.zeros(N_KEYS)
+    lb.key_ops[:16] = 100.0        # node 0 scorching
+    lb.key_ops[48:] = 10.0         # node 3 mild; nodes 1, 2 load 0
+    # coldest by load is node 1 (argmin tie, lowest index) but it is FULL;
+    # node 2 is equally cold with a whole empty block
+    moves = lb.plan(pm)
+    assert moves, "planner gave up with a capacity-bearing cold node idle"
+    # the first split lands on node 2 (the cold node WITH headroom); later
+    # moves in the round may rebalance further, but never onto a full node
+    assert moves[0][2] == 2, moves
+    for lo, hi, dst in moves:
+        assert dst != 1, moves              # node 1 has zero free slots
+        assert pm.free_slots(dst) >= hi - lo
+        pm.apply_record(pm.move(lo, hi, dst))
+        pm.validate()
+    assert lb.imbalance(pm) < N_NODES * 100.0 / 110.0  # load actually moved
+
+
+def test_balancer_counts_committed_txns_not_ops():
+    """Regression: ``node_commits`` is committed-TXN occupancy (DESIGN §11
+    and the bench occupancy rows) — each transaction counts ONCE at the
+    owner of its first active key.  Pre-fix it counted once per committed
+    op, skewing the balancer toward wide-footprint ranges."""
+    pm = PlacementMap(N_KEYS, N_NODES, headroom=1)
+    lb = LoadBalancer(N_KEYS, N_NODES)
+    op_key = np.array([[0, 1, 2, 3],        # 4-op txn on node 0, commits
+                       [16, 17, 0, 0],      # 2-op txn on node 1, commits
+                       [5, 6, 0, 0]])       # 2-op txn on node 0, aborts
+    active = np.array([[1, 1, 1, 1], [1, 1, 0, 0], [1, 1, 0, 0]], bool)
+    committed = np.array([True, True, False])
+    lb.observe(op_key, active, committed, pm.owner)
+    assert lb.node_commits.tolist() == [1, 1, 0, 0], lb.node_commits
+    assert lb.node_aborts.tolist() == [1, 0, 0, 0], lb.node_aborts
+    # per-op traffic is untouched: all six committed ops land in key_ops
+    assert lb.key_ops.sum() == 6.0
+    # and the counter now matches the service's own occupancy statistic
+    occ = np.zeros(N_NODES, np.int64)
+    first = np.argmax(active, axis=1)
+    sel = committed & active.any(axis=1)
+    np.add.at(occ, pm.owner[op_key[np.arange(3), first][sel]], 1)
+    assert lb.node_commits.tolist() == occ.tolist()

@@ -1,0 +1,346 @@
+"""Multi-tenant fairness + same-key RMW folding tests (DESIGN.md §12).
+
+The claims under test:
+
+* **DRR quotas**: backlogged tenants split the wave by weight (deficits
+  bank across waves, bounded), no backlogged tenant starves, spare
+  capacity is work-conserving, and a single default tenant degenerates to
+  the original retries-first FIFO former.
+* **Admission isolation**: one tenant flooding its bounded queue cannot
+  reject another tenant's arrivals; retries outrank fresh arrivals only
+  *within* a tenant.
+* **Folding is commit-set-equal**: with ``fold_rmw`` on, same-key
+  single-op RMWs fold into one delta-summed row, and the served commit
+  set + final store values equal the unfolded run — differentially across
+  all seven schedulers, both kernel backends, and both substrates (the
+  mesh twin runs in a child process like tests/test_distribution.py).
+* **Exactly-once fan-out**: every admitted request reaches exactly one
+  terminal status, committed deltas are conserved per key, and the WAL
+  replays folded blocks bit-identically with honest fold accounting.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULERS
+from repro.core.commit_phase import NOP, READ, RMW
+from repro.core.workloads import tenant_poisson_arrivals
+from repro.service import (RetryPolicy, TxnRequest, TxnService, WaveFormer,
+                           rmw_txn_gen, tenant_txn_gen, ycsb_txn_gen)
+
+O = 4
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _req(rid, key=0, kind=RMW, val=1, tenant=0, host=0):
+    op_kind = np.full(O, NOP, np.int32)
+    op_key = np.zeros(O, np.int32)
+    op_val = np.zeros(O, np.int32)
+    op_kind[0] = kind
+    op_key[0] = key
+    op_val[0] = val
+    return TxnRequest(rid, op_kind, op_key, op_val, host, tenant=tenant)
+
+
+def _final_vals(svc, n_keys):
+    head = np.asarray(svc.store.head)
+    val = np.asarray(svc.store.val)
+    return [int(val[k, head[k]]) for k in range(n_keys)]
+
+
+def _committed_ids(svc):
+    return sorted(r.req_id for r in svc.requests if r.status == "committed")
+
+
+# ------------------------------------------------------------------ DRR former
+
+def test_drr_weighted_quota_split():
+    """Two saturated tenants at 3:1 split a T=16 wave 12:4."""
+    f = WaveFormer(16, O, max_queue=1000, tenants={0: 3.0, 1: 1.0})
+    rid = 0
+    for t in (0, 1):
+        for _ in range(64):
+            rid += 1
+            assert f.offer(_req(rid, key=rid, tenant=t), 0)
+    _, slots = f.form(1)
+    counts = {0: 0, 1: 0}
+    for s in slots:
+        counts[s.tenant] += 1
+    assert counts == {0: 12, 1: 4}, counts
+
+
+def test_drr_light_tenant_never_starves():
+    """A 10:1-weighted heavy tenant cannot shut the light one out: over a
+    16-wave window the light tenant collects at least its banked quota."""
+    f = WaveFormer(8, O, max_queue=10_000, tenants={0: 10.0, 1: 1.0})
+    rid = 0
+    for t in (0, 1):
+        for _ in range(16 * 8 + 8):
+            rid += 1
+            f.offer(_req(rid, key=rid, tenant=t), 0)
+    light = 0
+    for w in range(16):
+        _, slots = f.form(w + 1)
+        assert len(slots) == 8        # work conserving under backlog
+        light += sum(1 for s in slots if s.tenant == 1)
+    # quantum_1 = 8/11 per wave -> >= floor(16 * 8/11) - 2 = 9
+    assert light >= 9, light
+
+
+def test_drr_work_conserving_when_quota_idle():
+    """Spare capacity flows to whoever has backlog, uncharged: a tenant
+    with weight 1 against 99 still fills the whole wave when alone."""
+    f = WaveFormer(8, O, max_queue=1000, tenants={0: 99.0, 1: 1.0})
+    for rid in range(1, 21):
+        f.offer(_req(rid, key=rid, tenant=1), 0)
+    _, slots = f.form(1)
+    assert len(slots) == 8 and all(s.tenant == 1 for s in slots)
+
+
+def test_retry_outranks_fresh_within_tenant_only():
+    """Tenant A's due retry beats A's fresh arrival, but never eats B's
+    quota slot."""
+    f = WaveFormer(2, O, max_queue=100, tenants={0: 1.0, 1: 1.0})
+    retry_req = _req(1, key=1, tenant=0)
+    retry_req.attempts = 1
+    f.requeue(retry_req, 1)
+    f.offer(_req(2, key=2, tenant=0), 1)    # A fresh
+    f.offer(_req(3, key=3, tenant=1), 1)    # B fresh
+    _, slots = f.form(1)
+    ids = {s.req_id for s in slots}
+    assert ids == {1, 3}, ids               # A's retry + B's fresh
+    _, slots = f.form(2)
+    assert [s.req_id for s in slots] == [2]
+
+
+def test_admission_isolated_per_tenant():
+    """A flooding tenant sheds at its OWN bounded queue; the other tenant's
+    arrivals still admit.  Unknown tenants auto-register at weight 1."""
+    f = WaveFormer(4, O, max_queue=4)
+    rid = 0
+    for _ in range(10):
+        rid += 1
+        f.offer(_req(rid, key=rid, tenant=0), 0)
+    for _ in range(3):
+        rid += 1
+        assert f.offer(_req(rid, key=rid, tenant=7), 0)
+    stats = f.tenant_stats()
+    assert stats[0] == {"weight": 1.0, "admitted": 4, "rejected": 6,
+                        "pending": 4}
+    assert stats[7]["admitted"] == 3 and stats[7]["rejected"] == 0
+    assert f.admitted == 7 and f.rejected == 6   # aggregate views
+
+
+def test_single_tenant_is_plain_fifo():
+    """Untagged traffic through the default tenant keeps the original
+    former semantics: FIFO order, due retries first, full waves."""
+    f = WaveFormer(4, O)
+    for rid in range(1, 7):
+        f.offer(_req(rid, key=rid), 0)
+    r = _req(99, key=99)
+    r.attempts = 1
+    f.requeue(r, 1)
+    wave, slots = f.form(1)
+    assert [s.req_id for s in slots] == [99, 1, 2, 3]
+    np.testing.assert_array_equal(np.asarray(wave.tid),
+                                  wave.tid[0] + np.arange(4))
+    _, slots = f.form(2)
+    assert [s.req_id for s in slots] == [4, 5, 6]
+
+
+# ------------------------------------------------------------------- folding
+
+def test_fold_unit_same_key_rmws_share_one_row():
+    """Five same-(tenant, host, key) RMWs fold to one row carrying the
+    delta sum; different keys, multi-op txns and READs stay unfolded."""
+    f = WaveFormer(8, O, max_queue=100, fold_rmw=True)
+    for rid, val in zip(range(1, 6), (1, 2, 3, 4, 5)):
+        f.offer(_req(rid, key=7, val=val), 0)
+    f.offer(_req(6, key=9, val=10), 0)          # other key: own row
+    multi = _req(7, key=1, val=1)
+    multi.op_kind[1] = RMW
+    multi.op_key[1] = 2
+    multi.op_val[1] = 1
+    f.offer(multi, 0)                           # two ops: not foldable
+    f.offer(_req(8, key=7, kind=READ, val=0), 0)  # READ: not foldable
+    wave, slots = f.form(1)
+    assert len(slots) == 4
+    leader = slots[0]
+    assert leader.req_id == 1
+    assert [m.req_id for m in leader.folded] == [2, 3, 4, 5]
+    assert int(np.asarray(wave.op_val)[0, 0]) == 1 + 2 + 3 + 4 + 5
+    assert int(np.asarray(wave.op_val)[1, 0]) == 10
+    # the whole group runs under the leader's tid, counted once each
+    assert all(m.tid == leader.tid and m.status == "inflight"
+               for m in leader.folded)
+    assert f.fold_groups == 1 and f.folded_requests == 4
+
+
+def test_fold_respects_tenant_host_and_cap():
+    """Folding never crosses tenants or hosts, and ``fold_max`` bounds the
+    group size."""
+    f = WaveFormer(8, O, max_queue=100, tenants={0: 1.0, 1: 1.0},
+                   fold_rmw=True, fold_max=2)
+    f.offer(_req(1, key=5, tenant=0, host=0), 0)
+    f.offer(_req(2, key=5, tenant=1, host=0), 0)   # other tenant
+    f.offer(_req(3, key=5, tenant=0, host=1), 0)   # other host
+    for rid in (4, 5, 6):                          # cap=2 -> two groups
+        f.offer(_req(rid, key=8, tenant=1, host=0), 0)
+    _, slots = f.form(1)
+    groups = {s.req_id: [m.req_id for m in s.folded] for s in slots}
+    assert groups == {1: [], 2: [], 3: [], 4: [5], 6: []}, groups
+
+
+def test_fold_exactly_once_fanout_and_delta_conservation():
+    """Served write-hot stream with folding: every admitted request lands
+    exactly one terminal status, every commit is latency-counted once, and
+    per-key committed deltas equal the final store values (a double
+    fan-out would overcount, a lost member would undercount)."""
+    n_keys = 40
+    gen = rmw_txn_gen(np.random.RandomState(11), 2, n_keys // 2, theta=0.99)
+    svc = TxnService(n_keys, T=8, n_nodes=2, fold_rmw=True, max_queue=10_000,
+                     retry=RetryPolicy(max_attempts=30, jitter=False), seed=5)
+    svc.run_stream([6] * 10, gen)
+    rep = svc.report()
+    assert rep.folded_requests > 0
+    assert svc.verify() == [], svc.verify()
+    terminal = [r for r in svc.requests if r.status in ("committed", "dropped")]
+    assert len(terminal) == rep.admitted == rep.offered
+    assert len(svc.latencies) == rep.committed
+    sums = np.zeros(n_keys, np.int64)
+    for r in svc.requests:
+        if r.status == "committed":
+            np.add.at(sums, r.op_key[r.op_kind != NOP],
+                      r.op_val[r.op_kind != NOP])
+    assert sums.tolist() == _final_vals(svc, n_keys)
+
+
+def _fold_differential(sched, kernels, planner=None, seed=7):
+    n_keys = 40
+
+    def run(fold):
+        gen = rmw_txn_gen(np.random.RandomState(seed), 2, n_keys // 2,
+                          theta=0.99)
+        svc = TxnService(n_keys, T=8, n_nodes=2, sched=sched,
+                         kernels=kernels, planner=planner, fold_rmw=fold,
+                         max_queue=10_000, seed=3,
+                         retry=RetryPolicy(max_attempts=30, jitter=False))
+        svc.run_stream([5] * 8, gen)
+        assert svc.verify() == [], (sched, kernels, svc.verify())
+        if fold:
+            assert svc.report().folded_requests > 0, (sched, kernels)
+        return _committed_ids(svc), _final_vals(svc, n_keys)
+
+    ids0, vals0 = run(False)
+    ids1, vals1 = run(True)
+    assert ids0 == ids1, (sched, kernels, "commit sets diverge")
+    assert vals0 == vals1, (sched, kernels, "final values diverge")
+
+
+@pytest.mark.parametrize("kernels", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_fold_commit_set_equal_all_schedulers(sched, kernels):
+    """Tentpole acceptance: folding is commit-set-equal to unfolded
+    execution for every optimistic scheduler x kernel backend."""
+    _fold_differential(sched, kernels)
+
+
+@pytest.mark.parametrize("kernels", ["jnp", "pallas_interpret"])
+def test_fold_commit_set_equal_planned(kernels):
+    """...and for the seventh ('planned') scheduler."""
+    _fold_differential("postsi", kernels, planner="planned")
+
+
+def test_fold_commit_set_equal_mesh():
+    """Substrate twin: the fold differential holds on the 8-virtual-device
+    mesh (child process, like tests/test_distribution.py)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    code = r"""
+import numpy as np
+from repro.core.dist_engine import make_node_mesh
+from repro.service import RetryPolicy, TxnService, rmw_txn_gen
+
+mesh = make_node_mesh(4)
+n_keys = 40
+
+def run(fold):
+    gen = rmw_txn_gen(np.random.RandomState(7), 4, n_keys // 4, theta=0.99)
+    svc = TxnService(n_keys, T=8, n_nodes=4, mesh=mesh, fold_rmw=fold,
+                     max_queue=10_000, seed=3,
+                     retry=RetryPolicy(max_attempts=30, jitter=False))
+    svc.run_stream([5] * 8, gen)
+    assert svc.verify() == [], svc.verify()
+    head = np.asarray(svc.store.head)
+    val = np.asarray(svc.store.val)
+    ids = sorted(r.req_id for r in svc.requests if r.status == "committed")
+    return ids, [int(val[k, head[k]]) for k in range(n_keys)]
+
+a = run(False)
+b = run(True)
+assert a == b, (a, b)
+print("MESH-FOLD-OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH-FOLD-OK" in out.stdout
+
+
+def test_wal_fold_replay_bit_identical(tmp_path):
+    """A folded session's WAL replays bit-identically (the delta-summed row
+    IS the executed input) and recovery surfaces the fold accounting."""
+    from repro.durability import DurabilityManager, recover
+    mgr = DurabilityManager(str(tmp_path))
+    gen = rmw_txn_gen(np.random.RandomState(13), 2, 20, theta=0.99)
+    svc = TxnService(40, T=8, n_nodes=2, fold_rmw=True, max_queue=10_000,
+                     durability=mgr, seed=4,
+                     retry=RetryPolicy(max_attempts=30, jitter=False))
+    svc.run_stream([5] * 8, gen)
+    rep = svc.report()
+    assert rep.folded_requests > 0
+    mgr.close()
+    st = recover(str(tmp_path))
+    assert len(st.history) == len(svc.history)
+    for (t1, o1), (t2, o2) in zip(st.history, svc.history):
+        np.testing.assert_array_equal(t1, t2)
+        for name, f1, f2 in zip(o1._fields, o1, o2):
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2),
+                                          err_msg=name)
+    for f in ("val", "tid", "cid", "head"):
+        np.testing.assert_array_equal(np.asarray(getattr(st.store, f)),
+                                      np.asarray(getattr(svc.store, f)),
+                                      err_msg=f)
+    assert st.folded_requests == rep.folded_requests
+
+
+# ------------------------------------------------------- served multi-tenant
+
+def test_service_tenant_report_and_quota_isolation():
+    """A hot RMW tenant flooding the service cannot starve a light READ
+    tenant: with quotas on, the light tenant's commits track its offered
+    load and the per-tenant report rows reconcile with the aggregates."""
+    rng = np.random.RandomState(0)
+    arr = tenant_poisson_arrivals(rng, [3.0, 24.0], 16)
+    gens = [ycsb_txn_gen(np.random.RandomState(1), 4, 50, theta=0.0,
+                         read_frac=0.5),
+            rmw_txn_gen(np.random.RandomState(2), 4, 50, theta=0.99)]
+    svc = TxnService(200, T=16, n_nodes=4, tenants={0: 1.0, 1: 1.0},
+                     fold_rmw=True, seed=9)
+    rep = svc.run_stream(arr, tenant_txn_gen(gens))
+    assert svc.verify() == [], svc.verify()
+    rows = rep.tenants
+    assert set(rows) == {"0", "1"}
+    assert rep.committed == sum(r["committed"] for r in rows.values())
+    assert rep.offered == sum(r["offered"] for r in rows.values())
+    assert rep.rejected == sum(r["rejected"] for r in rows.values())
+    # the light tenant is fully served despite the hot flood
+    light = rows["0"]
+    assert light["committed"] == light["offered"] - light["rejected"] \
+        - light["dropped"]
+    assert light["committed"] > 0 and light["latency_p99"] > 0

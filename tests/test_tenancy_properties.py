@@ -1,0 +1,133 @@
+"""Hypothesis property suite for the multi-tenant WaveFormer (DESIGN.md
+§12) — the satellite sweep over packing invariants: contiguous per-wave
+TIDs under adaptive-T resizing, retry-before-fresh priority within a
+tenant, DRR quota conservation (no backlogged tenant starves, weights
+respected over any window), and exactly-once fold/fan-out for batched
+RMWs.  Skips cleanly when hypothesis is absent (CI installs it via
+requirements-dev.txt), like tests/test_service_properties.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.commit_phase import NOP, RMW
+from repro.service import (RetryPolicy, TxnRequest, TxnService, WaveFormer,
+                           rmw_txn_gen)
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+O = 4
+
+
+def _req(rid, key=0, kind=RMW, val=1, tenant=0, host=0):
+    op_kind = np.full(O, NOP, np.int32)
+    op_key = np.zeros(O, np.int32)
+    op_val = np.zeros(O, np.int32)
+    op_kind[0] = kind
+    op_key[0] = key
+    op_val[0] = val
+    return TxnRequest(rid, op_kind, op_key, op_val, host, tenant=tenant)
+
+
+def _final_vals(svc, n_keys):
+    head = np.asarray(svc.store.head)
+    val = np.asarray(svc.store.val)
+    return [int(val[k, head[k]]) for k in range(n_keys)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_former_packing_properties(data):
+    """Property sweep over tenant mixes, adaptive-T resizing and folding:
+    per-wave TIDs stay contiguous, nothing is packed twice, a packed fresh
+    arrival implies no due retry of the same tenant was left behind, and
+    every admitted request is either packed exactly once or still queued."""
+    n_tenants = data.draw(st.integers(1, 3), label="tenants")
+    weights = {t: data.draw(st.floats(0.5, 4.0), label=f"w{t}")
+               for t in range(n_tenants)}
+    fold = data.draw(st.booleans(), label="fold")
+    f = WaveFormer(8, O, max_queue=64, tenants=weights, fold_rmw=fold)
+    rid = 0
+    packed = set()
+    admitted = set()
+    for tick in range(1, data.draw(st.integers(2, 5), label="ticks") + 1):
+        for _ in range(data.draw(st.integers(0, 12), label=f"arr{tick}")):
+            rid += 1
+            r = _req(rid, key=data.draw(st.integers(0, 3)),
+                     tenant=data.draw(st.integers(0, n_tenants - 1)))
+            if f.offer(r, tick):
+                admitted.add(rid)
+        T = data.draw(st.sampled_from([4, 8, 16]), label=f"T{tick}")
+        formed = f.form(tick, T=T)
+        if formed is None:
+            continue
+        wave, slots = formed
+        np.testing.assert_array_equal(np.asarray(wave.tid),
+                                      wave.tid[0] + np.arange(T))
+        fresh_tenants = set()
+        for s in slots:
+            for r in (s, *s.folded):
+                assert r.req_id not in packed, "packed twice"
+                packed.add(r.req_id)
+                if r.attempts == 1:
+                    fresh_tenants.add(r.tenant)
+        # retry-before-fresh within a tenant: a packed fresh arrival means
+        # that tenant has no due retry left un-packed
+        for t in fresh_tenants:
+            q = f._tenants[t]
+            assert not (q.retry and q.retry[0][0] <= tick), \
+                "fresh packed over a due retry"
+    assert packed <= admitted
+    assert len(admitted - packed) == f.pending()
+
+
+@settings(max_examples=25, deadline=None)
+@given(weights=st.lists(st.floats(0.25, 4.0), min_size=2, max_size=4),
+       n_waves=st.integers(2, 6))
+def test_drr_quota_conservation(weights, n_waves):
+    """Saturated tenants each collect at least their banked weighted quota
+    over any window (DRR bound: shortfall < one slot per tenant), and
+    every wave stays full (work conservation)."""
+    T = 16
+    wmap = {t: w for t, w in enumerate(weights)}
+    f = WaveFormer(T, O, max_queue=10_000, tenants=wmap)
+    rid = 0
+    for t in wmap:
+        for _ in range(n_waves * T + T):
+            rid += 1
+            f.offer(_req(rid, key=rid % 7, tenant=t), 0)
+    counts = dict.fromkeys(wmap, 0)
+    for w in range(n_waves):
+        _, slots = f.form(w + 1)
+        assert len(slots) == T
+        for s in slots:
+            counts[s.tenant] += 1
+    w_sum = sum(weights)
+    for t, w in wmap.items():
+        floor = int(np.floor(n_waves * T * w / w_sum)) - len(weights)
+        assert counts[t] >= max(floor, 1), (counts, weights)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), theta=st.sampled_from([0.6, 0.99]))
+def test_fold_fanout_exactly_once_property(seed, theta):
+    """Random write-hot streams, fold on: terminal-exactly-once + per-key
+    delta conservation + clean verify, any seed."""
+    n_keys = 24
+    gen = rmw_txn_gen(np.random.RandomState(seed), 2, n_keys // 2,
+                      theta=theta)
+    svc = TxnService(n_keys, T=8, n_nodes=2, fold_rmw=True, max_queue=10_000,
+                     retry=RetryPolicy(max_attempts=30, jitter=False),
+                     seed=seed % 97)
+    svc.run_stream([4] * 6, gen)
+    assert svc.verify() == [], svc.verify()
+    rep = svc.report()
+    terminal = [r for r in svc.requests
+                if r.status in ("committed", "dropped")]
+    assert len(terminal) == rep.admitted
+    assert len(svc.latencies) == rep.committed
+    sums = np.zeros(n_keys, np.int64)
+    for r in svc.requests:
+        if r.status == "committed":
+            sums[int(r.op_key[0])] += int(r.op_val[0])
+    assert sums.tolist() == _final_vals(svc, n_keys)
