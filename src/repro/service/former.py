@@ -44,6 +44,8 @@ import numpy as np
 from repro.core.engine import Wave
 from repro.core.commit_phase import NOP, RMW
 
+_I32_MIN, _I32_MAX = -(2 ** 31), 2 ** 31 - 1
+
 
 @dataclasses.dataclass
 class TxnRequest:
@@ -133,7 +135,8 @@ class WaveFormer:
     def __init__(self, T: int, O: int, max_queue: Optional[int] = None,
                  next_tid: int = 1,
                  tenants: Optional[Dict[int, float]] = None,
-                 fold_rmw: bool = False, fold_max: int = 256):
+                 fold_rmw: bool = False, fold_max: int = 256,
+                 auto_tenant_cap: int = 64):
         self.T, self.O = T, O
         self.max_queue = 4 * T if max_queue is None else max_queue
         self.next_tid = next_tid
@@ -144,6 +147,13 @@ class WaveFormer:
         self._tenants: Dict[int, _TenantQueue] = {}
         self._order: List[int] = []       # round-robin rotation of tenant ids
         self._rr = 0                      # rotation cursor (advances per form)
+        # the tenant tag space must stay BOUNDED: with an explicit map only
+        # registered tenants may admit; without one, tags auto-register at
+        # weight 1 up to ``auto_tenant_cap`` — otherwise every spurious tag
+        # would grow admission capacity and dilute real tenants' DRR quotas
+        self._explicit = bool(tenants)
+        self.auto_tenant_cap = int(auto_tenant_cap)
+        self._unknown_rejects: Dict[int, int] = {}   # shed-at-tag counters
         if tenants:
             for t, w in tenants.items():
                 self._register(int(t), float(w))
@@ -162,10 +172,15 @@ class WaveFormer:
         return q
 
     def tenant_stats(self) -> Dict[int, Dict[str, float]]:
-        """Per-tenant admission counters for ServiceReport."""
-        return {t: {"weight": q.weight, "admitted": q.admitted,
+        """Per-tenant admission counters for ServiceReport.  Unregistered
+        tags that were shed at admission report at weight 0 with no queue."""
+        rows = {t: {"weight": q.weight, "admitted": q.admitted,
                     "rejected": q.rejected, "pending": q.pending()}
-                for t, q in sorted(self._tenants.items())}
+                for t, q in self._tenants.items()}
+        for t, n in self._unknown_rejects.items():
+            rows.setdefault(t, {"weight": 0.0, "admitted": 0,
+                                "rejected": n, "pending": 0})
+        return dict(sorted(rows.items()))
 
     # aggregating views keep the single-tenant API of the original former
     @property
@@ -174,15 +189,25 @@ class WaveFormer:
 
     @property
     def rejected(self) -> int:
-        return sum(q.rejected for q in self._tenants.values())
+        return (sum(q.rejected for q in self._tenants.values())
+                + sum(self._unknown_rejects.values()))
 
     # --------------------------------------------------------- admission
     def offer(self, req: TxnRequest, tick: int) -> bool:
         """Admit a fresh arrival, or shed it when its tenant's queue is
         full.  Admission is judged per tenant: one tenant flooding its
-        bounded queue cannot evict or block another tenant's arrivals."""
+        bounded queue cannot evict or block another tenant's arrivals.
+        Unregistered tenant tags are shed without creating a queue when an
+        explicit tenant map was configured (or past ``auto_tenant_cap``)."""
         assert req.op_kind.shape == (self.O,), (req.op_kind.shape, self.O)
-        q = self._queue_of(req.tenant)
+        q = self._tenants.get(req.tenant)
+        if q is None:
+            if self._explicit or len(self._tenants) >= self.auto_tenant_cap:
+                req.status = "rejected"
+                self._unknown_rejects[req.tenant] = \
+                    self._unknown_rejects.get(req.tenant, 0) + 1
+                return False
+            q = self._register(req.tenant)
         if len(q.ready) >= q.max_queue:
             req.status = "rejected"
             q.rejected += 1
@@ -219,18 +244,29 @@ class WaveFormer:
         return o if int(req.op_kind[o]) == RMW else None
 
     def _pack(self, req: TxnRequest, slots: List[TxnRequest],
-              folds: Dict[Tuple[int, int, int], int]) -> bool:
+              folds: Dict[Tuple[int, int, int], List[int]]) -> bool:
         """Place ``req``: either fold it onto an existing leader (returns
-        False — no slot consumed) or append it as a new row (True)."""
+        False — no slot consumed) or append it as a new row (True).
+
+        ``folds`` maps the group key to ``[leader row, running delta]``; a
+        member joins only while the group is under ``fold_max`` AND the
+        summed delta stays inside int32 — the engine's RMW adds int32s, so
+        a wrapping fold would commit a value no serial (unfolded) execution
+        could produce.  An over-cap/overflow request starts a new leader."""
         if self.fold_rmw:
             o = self._fold_slot(req)
             if o is not None:
+                d = int(req.op_val[o])
                 gk = (req.tenant, int(req.host), int(req.op_key[o]))
-                li = folds.get(gk)
-                if li is not None and len(slots[li].folded) + 1 < self.fold_max:
-                    slots[li].folded.append(req)
-                    return False
-                folds[gk] = len(slots)    # this row becomes the leader
+                ent = folds.get(gk)
+                if ent is not None:
+                    li, total = ent
+                    if (len(slots[li].folded) + 1 < self.fold_max
+                            and _I32_MIN <= total + d <= _I32_MAX):
+                        slots[li].folded.append(req)
+                        ent[1] = total + d
+                        return False
+                folds[gk] = [len(slots), d]   # this row becomes the leader
         req.folded = []
         slots.append(req)
         return True
@@ -275,7 +311,7 @@ class WaveFormer:
                 q.deficit = 0.0
 
         slots: List[TxnRequest] = []
-        folds: Dict[Tuple[int, int, int], int] = {}
+        folds: Dict[Tuple[int, int, int], List[int]] = {}
         # quota pass: spend whole-slot deficits in round-robin order
         for t in active:
             q = self._tenants[t]
@@ -312,7 +348,12 @@ class WaveFormer:
             host[i] = req.host
             if req.folded:
                 o = self._fold_slot(req)
-                delta = sum(int(m.op_val[o]) for m in req.folded)
+                # each member's delta lives at ITS OWN active op index —
+                # groups form by (tenant, host, key), never by op slot, so
+                # reading the leader's slot would drop any member whose RMW
+                # sits elsewhere (a silent lost update)
+                delta = sum(int(m.op_val[self._fold_slot(m)])
+                            for m in req.folded)
                 op_val[i, o] = np.int32(int(req.op_val[o]) + delta)
                 self.fold_groups += 1
                 self.folded_requests += len(req.folded)

@@ -222,7 +222,7 @@ class TxnService:
         st = self._tenant_stats.get(tenant)
         if st is None:
             st = {"offered": 0, "committed": 0, "dropped": 0, "retries": 0,
-                  "latencies": []}
+                  "replica_commits": 0, "latencies": []}
             self._tenant_stats[tenant] = st
         return st
 
@@ -257,6 +257,7 @@ class TxnService:
             self.latencies.append(req.latency)
             st = self._tstat(req.tenant)
             st["committed"] += 1
+            st["replica_commits"] += 1
             st["latencies"].append(req.latency)
             self.gc.observe_replica(
                 floor, n_reads=int((req.op_kind != NOP).sum()))
@@ -349,9 +350,21 @@ class TxnService:
         self.planned_spilled += pw.plan.n_spilled
         if self.durability is not None:
             # the dispatched block IS an ordinary wave block: logged as-is,
-            # recovery replays it through run_block under the base sched
+            # recovery replays it through run_block under the base sched.
+            # Fold multiplicities ride along at each request's EXECUTED
+            # row (the planner relabeled rows into lanes; exec_tid maps a
+            # slot to its contiguous position in the stacked block), so
+            # RecoveredState.folded_requests accounts planned runs exactly
+            # like the step and streaming paths
+            fold = np.zeros(pw.stacked.tid.shape, np.int32)
+            tid0 = int(pw.stacked.tid[0, 0])
+            T_pad = pw.stacked.tid.shape[1]
+            for i, req in enumerate(slots):
+                off = int(pw.exec_tid[i]) - tid0
+                fold[off // T_pad, off % T_pad] = 1 + len(req.folded)
             self.durability.log_block(pw.stacked, wave_idx0, wm, pw.outs,
-                                      int(self.clock), self.gc.clock)
+                                      int(self.clock), self.gc.clock,
+                                      fold=fold)
             if self.faults is not None:
                 self.faults.post_log(self)
         for i, req in enumerate(slots):
@@ -651,7 +664,12 @@ class TxnService:
     def _tenant_report(self) -> Dict[str, Dict]:
         """Per-tenant rows (keys stringified for JSON): admission counters
         from the former joined with the service-side outcome/latency
-        accounting.  Single-tenant runs report one row for tenant \"0\"."""
+        accounting.  Single-tenant runs report one row for tenant \"0\".
+
+        ``replica_commits`` counts reads answered from hot-key replicas AT
+        SUBMIT TIME — those never pass admission, so a row's ``committed``
+        can exceed ``admitted`` by exactly that amount; fairness analyses
+        over engine capacity should use ``committed - replica_commits``."""
         former_stats = self.former.tenant_stats()
         rows: Dict[str, Dict] = {}
         for t in sorted(set(former_stats) | set(self._tenant_stats)):
@@ -664,6 +682,7 @@ class TxnService:
                 "admitted": int(fs.get("admitted", 0)),
                 "rejected": int(fs.get("rejected", 0)),
                 "committed": int(st.get("committed", 0)),
+                "replica_commits": int(st.get("replica_commits", 0)),
                 "dropped": int(st.get("dropped", 0)),
                 "retries": int(st.get("retries", 0)),
                 "latency_p50": _pct(lat, 50),

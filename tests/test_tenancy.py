@@ -151,6 +151,36 @@ def test_single_tenant_is_plain_fifo():
     assert [s.req_id for s in slots] == [4, 5, 6]
 
 
+def test_explicit_tenant_map_rejects_unknown_tenants():
+    """Regression: with an explicit tenant map an unregistered tag is shed
+    at admission WITHOUT growing a queue or a DRR share — an open tag
+    space must not scale admission capacity or dilute registered tenants'
+    quotas."""
+    f = WaveFormer(4, O, max_queue=8, tenants={0: 3.0, 1: 1.0})
+    assert f.offer(_req(1, key=1, tenant=0), 0)
+    r = _req(2, key=2, tenant=99)
+    assert not f.offer(r, 0)
+    assert r.status == "rejected"
+    assert 99 not in f._tenants          # no queue, no rotation slot
+    assert f.rejected == 1 and f.admitted == 1
+    stats = f.tenant_stats()
+    assert stats[99] == {"weight": 0.0, "admitted": 0, "rejected": 1,
+                         "pending": 0}
+    # the registered tenants' DRR split is undiluted by the stray tag
+    assert stats[0]["weight"] == 3.0 and stats[1]["weight"] == 1.0
+
+
+def test_auto_registration_capped_without_map():
+    """Without an explicit map, tags auto-register at weight 1 only up to
+    ``auto_tenant_cap``; overflow tags are shed, keeping total admission
+    capacity bounded."""
+    f = WaveFormer(4, O, max_queue=4, auto_tenant_cap=3)
+    for t in range(5):
+        assert f.offer(_req(t + 1, key=t, tenant=t), 0) == (t < 3)
+    assert len(f._tenants) == 3
+    assert f.admitted == 3 and f.rejected == 2
+
+
 # ------------------------------------------------------------------- folding
 
 def test_fold_unit_same_key_rmws_share_one_row():
@@ -192,6 +222,73 @@ def test_fold_respects_tenant_host_and_cap():
     _, slots = f.form(1)
     groups = {s.req_id: [m.req_id for m in s.folded] for s in slots}
     assert groups == {1: [], 2: [], 3: [], 4: [5], 6: []}, groups
+
+
+def test_fold_member_delta_read_at_its_own_slot():
+    """Regression (lost update): a member whose single RMW sits at a
+    DIFFERENT op index than the leader's must still contribute its real
+    delta — folding groups by (tenant, host, key), never by op slot, and
+    the pre-fix code read every member's value at the leader's slot."""
+    f = WaveFormer(8, O, max_queue=100, fold_rmw=True)
+    f.offer(_req(1, key=7, val=10), 0)            # leader: RMW at slot 0
+    member = _req(2, key=0, val=0)
+    member.op_kind[0] = NOP                       # member: RMW at slot 2
+    member.op_kind[2] = RMW
+    member.op_key[2] = 7
+    member.op_val[2] = 7
+    f.offer(member, 0)
+    wave, slots = f.form(1)
+    assert [m.req_id for m in slots[0].folded] == [2]
+    assert int(np.asarray(wave.op_val)[0, 0]) == 17
+
+
+def test_fold_mixed_slot_served_delta_conservation():
+    """The slot-mix regression end-to-end: a served stream whose single
+    RMWs land at random op indices still conserves per-key committed
+    deltas against the final store (pre-fix, off-slot members committed
+    their padding zeros — silently losing their updates)."""
+    n_keys, n_ops = 8, O
+    rng = np.random.RandomState(3)
+
+    def gen():
+        host = int(rng.randint(0, 2))
+        op_kind = np.full(n_ops, NOP, np.int32)
+        op_key = np.zeros(n_ops, np.int32)
+        op_val = np.zeros(n_ops, np.int32)
+        o = int(rng.randint(0, n_ops))
+        op_kind[o] = RMW
+        op_key[o] = host * (n_keys // 2)          # the host's hot key
+        op_val[o] = 1 + int(rng.randint(0, 8))
+        return op_kind, op_key, op_val, host
+
+    svc = TxnService(n_keys, T=8, n_nodes=2, fold_rmw=True, max_queue=10_000,
+                     retry=RetryPolicy(max_attempts=30, jitter=False), seed=1)
+    svc.run_stream([6] * 8, gen)
+    rep = svc.report()
+    assert rep.folded_requests > 0
+    assert svc.verify() == [], svc.verify()
+    sums = np.zeros(n_keys, np.int64)
+    for r in svc.requests:
+        if r.status == "committed":
+            np.add.at(sums, r.op_key[r.op_kind != NOP],
+                      r.op_val[r.op_kind != NOP])
+    assert sums.tolist() == _final_vals(svc, n_keys)
+
+
+def test_fold_overflow_guard_starts_new_leader():
+    """Regression: a member whose delta would push the running fold sum
+    outside int32 starts a fresh leader row instead of silently wrapping
+    (the engine's RMW adds int32s — a wrapped sum commits a value no
+    serial unfolded execution could produce)."""
+    f = WaveFormer(8, O, max_queue=100, fold_rmw=True)
+    f.offer(_req(1, key=7, val=2 ** 31 - 1), 0)
+    f.offer(_req(2, key=7, val=5), 0)       # would wrap: becomes new leader
+    f.offer(_req(3, key=7, val=1), 0)       # folds onto req 2
+    wave, slots = f.form(1)
+    assert [s.req_id for s in slots] == [1, 2]
+    assert [m.req_id for m in slots[1].folded] == [3]
+    vals = np.asarray(wave.op_val)
+    assert int(vals[0, 0]) == 2 ** 31 - 1 and int(vals[1, 0]) == 6
 
 
 def test_fold_exactly_once_fanout_and_delta_conservation():
@@ -319,6 +416,24 @@ def test_wal_fold_replay_bit_identical(tmp_path):
     assert st.folded_requests == rep.folded_requests
 
 
+def test_wal_fold_accounting_planned(tmp_path):
+    """Regression: the planned scheduler logs fold multiplicities too (at
+    each request's executed lane position), so recovery's fold accounting
+    matches the service instead of undercounting to 0."""
+    from repro.durability import DurabilityManager, recover
+    mgr = DurabilityManager(str(tmp_path))
+    gen = rmw_txn_gen(np.random.RandomState(13), 2, 20, theta=0.99)
+    svc = TxnService(40, T=8, n_nodes=2, fold_rmw=True, planner="planned",
+                     max_queue=10_000, durability=mgr, seed=4,
+                     retry=RetryPolicy(max_attempts=30, jitter=False))
+    svc.run_stream([5] * 8, gen)
+    rep = svc.report()
+    assert rep.folded_requests > 0
+    mgr.close()
+    st = recover(str(tmp_path))
+    assert st.folded_requests == rep.folded_requests
+
+
 # ------------------------------------------------------- served multi-tenant
 
 def test_service_tenant_report_and_quota_isolation():
@@ -344,3 +459,28 @@ def test_service_tenant_report_and_quota_isolation():
     assert light["committed"] == light["offered"] - light["rejected"] \
         - light["dropped"]
     assert light["committed"] > 0 and light["latency_p99"] > 0
+
+
+def test_tenant_report_counts_replica_commits_separately():
+    """Reads served from hot-key replicas commit at submit without passing
+    admission; the tenant row must surface them as ``replica_commits`` so
+    ``committed > admitted`` is explicable (committed - replica_commits
+    <= admitted always holds)."""
+    from repro.core.workloads import zipf_hot_keys
+    hot = zipf_hot_keys(2, 10, theta=0.99)
+    svc = TxnService(20, T=8, n_nodes=2, replicas=hot, seed=2)
+    kind = np.full(O, NOP, np.int32)
+    kind[0] = READ
+    key = np.zeros(O, np.int32)
+    key[0] = int(hot[0])
+    for _ in range(5):
+        r = svc.submit(kind, key, np.zeros(O, np.int32), 0)
+        assert r.replica and r.status == "committed"
+    w = _req(99, key=3)                  # one engine-path write alongside
+    svc.submit(w.op_kind, w.op_key, w.op_val, w.host)
+    svc.drain()
+    rep = svc.report()
+    row = rep.tenants["0"]
+    assert row["replica_commits"] == 5
+    assert row["committed"] - row["replica_commits"] <= row["admitted"]
+    assert rep.replica_commits == 5
